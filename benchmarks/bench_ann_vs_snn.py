@@ -1,0 +1,95 @@
+"""Paper Table II: TinyML ANN vs proposed SNN.
+
+Reproduces every row with measured quantities where possible:
+  * arithmetic: multiplications per inference (ANN dense MAC grid vs the
+    SNN's measured event-driven adds — zero multiplies by construction),
+  * model size: fp32 MLP bytes vs 9-bit fixed-point codes,
+  * latency: documented ESP32 baselines vs a cycle model of the RTL core
+    at 40 MHz (both the paper's parallel-array bound and a per-row
+    serialised FSM),
+  * energy: Horowitz-cost op accounting (core.energy).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.configs.snn_mnist import SNN_CONFIG
+from repro.core import energy
+from repro.core.train_snn import int_accuracy
+
+from .common import emit, save_json, trained_snn
+
+CLOCK_HZ = 40e6
+# Documented ESP32 measurements from the paper (not reproducible here):
+ESP32_NO_DSP_S = 3.0
+ESP32_DSP_US = 5130.0
+
+
+def rtl_latency_us(T: int, n_rows: int = 28) -> dict:
+    """Cycle model of the RTL core at 40 MHz.
+
+    parallel: all 784 synapse lanes + 10 neurons update in one cycle per
+    timestep (the paper's "<1 µs" bound);
+    row-serial: the FSM integrates one 28-pixel row per cycle (Fig. 1's
+    shared-adder datapath), leak+fire once per timestep.
+    """
+    parallel = T / CLOCK_HZ * 1e6
+    row_serial = T * (n_rows + 2) / CLOCK_HZ * 1e6
+    return {"parallel_us": parallel, "row_serial_us": row_serial}
+
+
+def run(T: int = 10):
+    params, params_q, ds = trained_snn()
+    acc, aux = int_accuracy(params_q, SNN_CONFIG, ds.x_test, ds.y_test,
+                            num_steps=T)
+
+    ann_ops = energy.ann_op_counts()                    # 784→32→10 baseline
+    snn_adds = aux["adds_per_img"]
+    snn_ops = energy.OpCounts(multiplications=0, additions=int(snn_adds),
+                              shifts=T * 10, comparisons=T * 10)
+    em = energy.EnergyModel(ann=ann_ops, snn=snn_ops)
+
+    size_ann = energy.ann_memory_bytes()
+    size_snn = energy.snn_memory_bytes(weight_bits=9)
+    lat = rtl_latency_us(T)
+
+    table = {
+        "arithmetic": {"ann": "fp32 MAC", "snn": "fixed-point add/shift"},
+        "multiplications": {"ann": ann_ops.multiplications, "snn": 0},
+        "additions": {"ann": ann_ops.additions, "snn": int(snn_adds)},
+        "model_bytes": {"ann": size_ann, "snn": size_snn,
+                        "ratio": size_ann / size_snn},
+        "latency_us": {"ann_no_dsp": ESP32_NO_DSP_S * 1e6,
+                       "ann_dsp": ESP32_DSP_US, **lat},
+        "energy_pj": {"ann": em.ann_energy_pj, "snn": em.snn_energy_pj,
+                      "ratio": em.energy_ratio},
+        "accuracy_at_T": {"T": T, "acc": acc},
+    }
+    save_json(table, "bench", "table2_ann_vs_snn.json")
+
+    emit("table2.mults", None,
+         f"ann={ann_ops.multiplications} snn=0")
+    emit("table2.adds", None,
+         f"ann={ann_ops.additions} snn={int(snn_adds)} "
+         f"(sparsity saves {100*(1-snn_adds/(T*784*10)):.0f}% of dense)")
+    emit("table2.model_size", None,
+         f"ann={size_ann/1024:.1f}KB snn={size_snn/1024:.1f}KB "
+         f"ratio={size_ann/size_snn:.1f}x (paper: 11.3x)")
+    emit("table2.latency", lat["parallel_us"],
+         f"rtl_parallel={lat['parallel_us']:.2f}us "
+         f"rtl_rowserial={lat['row_serial_us']:.1f}us "
+         f"esp32_dsp={ESP32_DSP_US}us esp32={ESP32_NO_DSP_S}s")
+    emit("table2.energy", None,
+         f"ann={em.ann_energy_pj:.0f}pJ snn={em.snn_energy_pj:.0f}pJ "
+         f"ratio={em.energy_ratio:.0f}x")
+
+    # paper-claim checks
+    assert table["model_bytes"]["ratio"] > 10     # paper: 11.3×
+    assert lat["parallel_us"] < 1.0               # paper: < 1 µs
+    assert em.energy_ratio > 10
+    return table
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,60 @@
+"""Paper Fig. 7: efficiency score = accuracy(%) / inference time.
+
+The paper's point: efficiency peaks at the earliest timesteps — the
+exponential drop justifies active pruning / early exit.  Also measures the
+early-exit (stability) timestep distribution, the serving-layer analogue."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.snn_mnist import SNN_CONFIG
+from repro.core import encoding, lif as lif_mod, prng
+from repro.core.pruning import stability_early_exit
+from repro.core.train_snn import int_accuracy
+
+from .bench_ann_vs_snn import rtl_latency_us
+from .common import emit, save_json, trained_snn
+
+
+def run(T: int = 20):
+    params, params_q, ds = trained_snn()
+    x, y = ds.x_test[:1000], ds.y_test[:1000]
+
+    rows = []
+    for t in (1, 2, 3, 5, 8, 10, 15, 20):
+        acc, _ = int_accuracy(params_q, SNN_CONFIG, x, y, num_steps=t)
+        lat_us = rtl_latency_us(t)["row_serial_us"]
+        eff = (acc * 100) / (lat_us * 1e-6)          # %/s (paper's metric)
+        rows.append({"T": t, "acc": acc, "latency_us": lat_us,
+                     "efficiency_pct_per_s": eff})
+        emit(f"fig7.T{t}", lat_us, f"acc={acc:.3f} eff={eff:.3g}%/s")
+
+    # early-exit timestep distribution (stability patience 3): per-step
+    # running prediction from cumulative output-spike counts.
+    px = jnp.asarray((x * 255).astype(np.uint8))
+    spikes_in, _ = encoding.poisson_encode_hw(px, prng.seed_state(7, px.shape),
+                                              T)
+    res = lif_mod.run_lif_int(spikes_in, params_q["layers"][0]["w_q"],
+                              SNN_CONFIG.lif)
+    cum_counts = np.cumsum(np.asarray(res["spikes"]).astype(np.int32), 0)
+    pred_t = jnp.asarray(cum_counts.argmax(-1))      # (T, n)
+    t_exit = np.asarray(stability_early_exit(pred_t, patience=3))
+
+    save_json({"rows": rows,
+               "early_exit_mean": float(t_exit.mean()),
+               "early_exit_p90": float(np.percentile(t_exit, 90))},
+              "bench", "fig7_efficiency.json")
+    emit("fig7.early_exit", None,
+         f"mean_exit_t={t_exit.mean():.1f} p90={np.percentile(t_exit, 90):.0f} "
+         f"of T={T}")
+
+    # the paper's qualitative claim: efficiency decays with T
+    effs = [r["efficiency_pct_per_s"] for r in rows]
+    assert effs[0] > effs[-1] * 2, "efficiency must peak early"
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,73 @@
+"""SNN engine throughput on this host: pure-JAX scan engine vs the Pallas
+kernels (interpret mode on CPU — correctness path; the BlockSpecs target
+TPU VMEM).  Reports images/s and µs per inference for the paper topology."""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.snn_mnist import SNN_CONFIG
+from repro.core import prng, snn
+from repro.kernels import ops
+
+from .common import emit, save_json, time_call, trained_snn
+
+
+def run(batch: int = 256, T: int = 10):
+    params, params_q, ds = trained_snn()
+    cfg = dataclasses.replace(SNN_CONFIG, num_steps=T)
+    px = jnp.asarray((ds.x_test[:batch] * 255).astype(np.uint8))
+    st = prng.seed_state(3, px.shape)
+
+    engine = jax.jit(lambda p, a, b: snn.snn_apply_int(p, a, b, cfg)["pred"])
+    us = time_call(engine, params_q, px, st)
+    ips = batch / (us * 1e-6)
+    emit("engine.jax_scan", us / batch,
+         f"batch={batch} T={T} imgs_per_s={ips:.0f}")
+
+    # §Perf-optimized engine: f32-unit synaptic sum (bit-exact: |Σ|<2^24)
+    # + encoder fused into the LIF scan (no spike-train round-trip).
+    fast_cfg = dataclasses.replace(cfg, dot_impl="f32", fuse_encoder=True)
+    fast = jax.jit(lambda p, a, b: snn.snn_apply_int(p, a, b, fast_cfg)["pred"])
+    us_fast = time_call(fast, params_q, px, st)
+    emit("engine.fused_f32", us_fast / batch,
+         f"imgs_per_s={batch/(us_fast*1e-6):.0f} "
+         f"speedup={us/us_fast:.2f}x (bit-identical)")
+    same = bool((np.asarray(engine(params_q, px, st))
+                 == np.asarray(fast(params_q, px, st))).all())
+    emit("engine.fused_f32_exact", None, f"bit_identical={same}")
+    assert same
+
+    # fused Pallas path: encoder kernel + T-step LIF kernel
+    w_q = params_q["layers"][0]["w_q"]
+
+    def pallas_engine(px, st):
+        spikes, _ = ops.poisson_encode_op(px, st, T)
+        spk, vtr, vfin = ops.lif_forward_op(
+            spikes, w_q, decay_shift=cfg.lif.decay_shift,
+            v_threshold=cfg.lif.v_threshold)
+        return jnp.argmax(jnp.sum(spk.astype(jnp.int32), 0), -1)
+
+    us_k = time_call(pallas_engine, px, st)
+    emit("engine.pallas_interpret", us_k / batch,
+         f"batch={batch} T={T} imgs_per_s={batch/(us_k*1e-6):.0f} "
+         f"(interpret mode — CPU correctness path)")
+
+    # agreement between the two paths
+    a = np.asarray(engine(params_q, px, st))
+    b = np.asarray(pallas_engine(px, st))
+    agree = float((a == b).mean())
+    emit("engine.agreement", None, f"jax_vs_pallas_pred_agree={agree:.4f}")
+    save_json({"jax_us_per_img": us / batch,
+               "pallas_us_per_img": us_k / batch,
+               "agreement": agree}, "bench", "engine_throughput.json")
+    assert agree == 1.0
+    return {"jax": us, "pallas": us_k}
+
+
+if __name__ == "__main__":
+    run()

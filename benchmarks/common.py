@@ -1,0 +1,54 @@
+"""Shared benchmark plumbing: trained-weight cache, timing, CSV emission."""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
+
+
+def results_path(*parts) -> str:
+    p = os.path.join(RESULTS, *parts)
+    os.makedirs(os.path.dirname(p), exist_ok=True)
+    return p
+
+
+def emit(name: str, us_per_call: float | None, derived: str) -> None:
+    """One CSV line per the harness contract: name,us_per_call,derived."""
+    us = "" if us_per_call is None else f"{us_per_call:.1f}"
+    print(f"{name},{us},{derived}")
+
+
+def time_call(fn, *args, repeats: int = 3, warmup: int = 1) -> float:
+    """Median wall-time of fn(*args) in microseconds."""
+    import jax
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts) * 1e6)
+
+
+def save_json(obj, *parts) -> str:
+    p = results_path(*parts)
+    with open(p, "w") as f:
+        json.dump(obj, f, indent=1, default=float)
+    return p
+
+
+_CACHE = {}
+
+
+def trained_snn(steps: int = 1500):
+    """Train-or-load the paper-topology SNN once per process."""
+    if "snn" not in _CACHE:
+        from repro.core.train_snn import fit_or_load
+        _CACHE["snn"] = fit_or_load(steps=steps)
+    return _CACHE["snn"]

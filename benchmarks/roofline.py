@@ -1,0 +1,132 @@
+"""Roofline analysis from the dry-run's compiled artifacts (deliverable g).
+
+For every (arch × shape) cell on the single-pod mesh:
+
+    compute    = HLO_FLOPs  / (chips × peak_FLOP/s)      [s]
+    memory     = HLO_bytes  / (chips × HBM_bw)           [s]
+    collective = coll_bytes / (chips × link_bw)          [s]
+
+cost_analysis() reports PER-DEVICE flops/bytes of the partitioned module,
+so the chip-normalised terms are simply per-device values over per-chip
+peaks.  Collective bytes come from the partitioned-HLO parse done by
+launch/dryrun.py (per-device traffic with ring multipliers).
+
+Also reported per cell: the dominant term, MODEL_FLOPS (6·N_active·D for
+training, 2·N_active·D for prefill/decode forward), and the
+MODEL_FLOPS/HLO_FLOPS ratio (useful-compute fraction — catches remat
+recompute and head/vocab padding waste).
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.configs import SHAPES, get_config
+
+from .common import emit, results_path, save_json
+
+# TPU v5e hardware constants (assignment-specified)
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # bytes/s per chip
+LINK_BW = 50e9               # bytes/s per ICI link
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    # decode: one token per sequence per step
+    return 2.0 * n * shape.global_batch
+
+
+def analyse(rec: dict) -> dict:
+    n_dev = rec["devices"]
+    fl = rec["cost"]["flops_per_device"]
+    by = rec["cost"]["bytes_per_device"]
+    co = rec["collectives_per_device"]["total"]
+
+    compute_s = fl / PEAK_FLOPS
+    memory_s = by / HBM_BW
+    coll_s = co / LINK_BW
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": coll_s}
+    dominant = max(terms, key=terms.get)
+
+    mf = model_flops(rec["arch"], rec["shape"])
+    useful = mf / (fl * n_dev) if fl else 0.0
+    bound_s = max(terms.values())
+    # roofline fraction: useful model FLOPs per second achievable at the
+    # bound, over the fleet's peak FLOPs.
+    frac = (mf / bound_s) / (n_dev * PEAK_FLOPS) if bound_s else 0.0
+
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "devices": n_dev, **terms,
+        "dominant": dominant.replace("_s", ""),
+        "model_flops": mf,
+        "hlo_flops_total": fl * n_dev,
+        "useful_fraction": useful,
+        "roofline_fraction": frac,
+        "peak_gib": rec["memory"]["peak_bytes"] / 2**30,
+        "collective_breakdown": {
+            k: v for k, v in rec["collectives_per_device"].items()
+            if isinstance(v, (int, float)) and k != "total"},
+    }
+
+
+def suggestion(row: dict) -> str:
+    d = row["dominant"]
+    if d == "compute":
+        if row["useful_fraction"] < 0.5:
+            return ("compute-bound with low useful fraction — cut remat "
+                    "recompute / padding before anything else")
+        return "compute-bound near useful peak — only algorithmic wins left"
+    if d == "memory":
+        return ("memory-bound — raise arithmetic intensity: larger "
+                "microbatch, fuse elementwise chains, cache-resident KV")
+    return ("collective-bound — reshard to cut the largest all-gather, "
+            "overlap collectives with compute, or compress the payload")
+
+
+def run(dryrun_dir: str = "results/dryrun", mesh: str = "single"):
+    rows = []
+    for f in sorted(glob.glob(os.path.join(dryrun_dir, f"*.{mesh}.json"))):
+        rec = json.load(open(f))
+        rows.append(analyse(rec))
+
+    rows.sort(key=lambda r: r["roofline_fraction"])
+    save_json(rows, "bench", f"roofline_{mesh}.json")
+
+    for r in rows:
+        emit(f"roofline.{r['arch']}.{r['shape']}", None,
+             f"compute={r['compute_s']:.3g}s memory={r['memory_s']:.3g}s "
+             f"collective={r['collective_s']:.3g}s dom={r['dominant']} "
+             f"useful={r['useful_fraction']:.2f} "
+             f"roofline_frac={r['roofline_fraction']:.3f}")
+    return rows
+
+
+def markdown_table(rows) -> str:
+    hdr = ("| arch | shape | compute s | memory s | collective s | dominant "
+           "| useful | roofline | next move |\n|---|---|---|---|---|---|---|---|---|")
+    lines = [hdr]
+    for r in sorted(rows, key=lambda x: (x["arch"], x["shape"])):
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3g} "
+            f"| {r['memory_s']:.3g} | {r['collective_s']:.3g} "
+            f"| **{r['dominant']}** | {r['useful_fraction']:.2f} "
+            f"| {r['roofline_fraction']:.3f} | {suggestion(r)} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    rows = run()
+    print(markdown_table(rows))

@@ -1,0 +1,55 @@
+"""Benchmark harness: one module per paper table/figure + the roofline
+report.  Prints ``name,us_per_call,derived`` CSV lines; artifacts land in
+results/bench/.
+
+  PYTHONPATH=src python -m benchmarks.run            # everything
+  PYTHONPATH=src python -m benchmarks.run --only fig5,roofline
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+SUITES = {
+    "table1": ("bench_input_stats", "Table I — stochastic input current"),
+    "table2": ("bench_ann_vs_snn", "Table II — ANN vs SNN"),
+    "fig4": ("bench_membrane", "Fig 4 — membrane trace"),
+    "fig5": ("bench_accuracy", "Fig 5/6 — accuracy vs timesteps"),
+    "fig7": ("bench_efficiency", "Fig 7 — efficiency score"),
+    "fig8": ("bench_robustness", "Fig 8 — robustness"),
+    "engine": ("bench_engine", "SNN engine throughput (JAX/kernels)"),
+    "roofline": ("roofline", "Roofline terms from the dry-run"),
+}
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated suite names")
+    args = ap.parse_args(argv)
+    want = args.only.split(",") if args.only else list(SUITES)
+
+    failures = []
+    for name in want:
+        mod_name, desc = SUITES[name]
+        print(f"# === {name}: {desc} ===", flush=True)
+        t0 = time.time()
+        try:
+            mod = __import__(f"benchmarks.{mod_name}", fromlist=["run"])
+            mod.run()
+            print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
+        except Exception as e:  # noqa: BLE001
+            failures.append((name, e))
+            traceback.print_exc()
+    if failures:
+        print(f"# {len(failures)} suite(s) failed: "
+              f"{[n for n, _ in failures]}")
+        sys.exit(1)
+    print("# all benchmark suites passed")
+
+
+if __name__ == "__main__":
+    main()

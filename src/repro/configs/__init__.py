@@ -1,0 +1,8 @@
+"""Configs: ArchConfig/ShapeConfig dataclasses + per-arch modules + registry."""
+
+from .base import SHAPES, ArchConfig, ShapeConfig, reduced
+from .registry import (cell_is_live, get_config, get_reduced, list_archs,
+                       shape_cells)
+
+__all__ = ["SHAPES", "ArchConfig", "ShapeConfig", "reduced", "cell_is_live",
+           "get_config", "get_reduced", "list_archs", "shape_cells"]

@@ -1,0 +1,44 @@
+"""snn-mnist — the paper's own model (Poisson-encoded LIF classifier).
+
+Not an LM: 784→10 fully connected LIF layer, 20-timestep window, 8-bit
+weights (9-bit signed codes), shift-4 decay (β = 1/16), threshold 128.
+Registered so ``--arch snn-mnist`` selects it in the launchers; the 40
+dry-run cells are the 10 LM archs — this config is exercised by the paper
+benchmarks and its own batch-parallel dry-run entry.
+"""
+
+from __future__ import annotations
+
+from ..core.lif import LIFConfig
+from ..core.snn import SNNConfig
+from .base import ArchConfig
+from .registry import register
+
+# LM-shaped registry entry (family "snn") so arch listings include it.
+CONFIG = register(ArchConfig(
+    name="snn-mnist", family="snn",
+    num_layers=1, d_model=784, num_heads=1, num_kv_heads=1,
+    head_dim=1, d_ff=0, vocab_size=10,
+    optimizer="adamw", remat=False, scan_layers=False,
+))
+
+# The real configuration object used by the SNN engine:
+SNN_CONFIG = SNNConfig(
+    layer_sizes=(784, 10),
+    num_steps=20,
+    lif=LIFConfig(decay_shift=4, v_threshold=128, v_rest=0),
+    weight_bits=8,
+    qat=True,
+    readout="count",
+    active_pruning=False,
+)
+
+SNN_CONFIG_PRUNED = SNNConfig(
+    layer_sizes=(784, 10),
+    num_steps=20,
+    lif=LIFConfig(decay_shift=4, v_threshold=128, v_rest=0),
+    weight_bits=8,
+    qat=True,
+    readout="first_spike",
+    active_pruning=True,
+)

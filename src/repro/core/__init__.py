@@ -1,0 +1,19 @@
+"""Core library: the paper's contribution (Poisson-encoded fixed-point SNN).
+
+Layout:
+  prng         — bit-exact xorshift32 (the RTL's PRNG)
+  encoding     — Poisson spike encoder (hardware-faithful + training variants)
+  lif          — LIF neuron dynamics: integer (RTL-equivalent) + float (BPTT)
+  pruning      — active pruning controller + readouts + early-exit
+  snn          — the composable SNN module (init/apply/loss/quantize)
+  conversion   — ANN→SNN weight conversion (Diehl-style normalisation)
+  fixed_point  — quantisation utilities (incl. stochastic rounding, QAT)
+  energy       — op counting + Horowitz energy model (paper Table II)
+"""
+
+from . import conversion, encoding, energy, fixed_point, lif, pruning, prng, snn
+
+__all__ = [
+    "conversion", "encoding", "energy", "fixed_point", "lif", "pruning",
+    "prng", "snn",
+]

@@ -1,0 +1,78 @@
+"""ANN→SNN conversion (the paper's implied offline training flow).
+
+The RTL performs inference only; weights arrive trained.  The classic route
+for rate-coded SNNs (Diehl et al. 2015) is: train a ReLU ANN, then reuse its
+weights in the LIF network after *data-based normalisation* — rescaling each
+layer so the maximum pre-activation maps just below the firing threshold,
+which makes LIF firing rates approximate ReLU activations.
+
+Provided so that both training flows exist:
+  * surrogate-gradient BPTT (core.snn) — direct SNN training;
+  * ANN→SNN conversion (this module) — the paper's likely flow.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["ann_init", "ann_apply", "ann_loss", "convert_ann_to_snn"]
+
+
+def ann_init(key: jax.Array, sizes: tuple[int, ...] = (784, 10)) -> dict:
+    layers = []
+    for fan_in, fan_out in zip(sizes[:-1], sizes[1:]):
+        key, k1 = jax.random.split(key)
+        w = jax.random.normal(k1, (fan_in, fan_out)) * jnp.sqrt(2.0 / fan_in)
+        layers.append({"w": w, "b": jnp.zeros((fan_out,))})
+    return {"layers": layers}
+
+
+def ann_apply(params: dict, x: jax.Array) -> jax.Array:
+    """ReLU MLP; returns logits. x: (batch, n_in) in [0,1]."""
+    h = x
+    n = len(params["layers"])
+    for i, layer in enumerate(params["layers"]):
+        h = h @ layer["w"] + layer["b"]
+        if i < n - 1:
+            h = jax.nn.relu(h)
+    return h
+
+
+def ann_loss(params: dict, x: jax.Array, labels: jax.Array):
+    logits = ann_apply(params, x)
+    logp = jax.nn.log_softmax(logits, -1)
+    nll = -jnp.take_along_axis(logp, labels[:, None], -1).mean()
+    acc = jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))
+    return nll, {"loss": nll, "acc": acc}
+
+
+def convert_ann_to_snn(params: dict, calib_x: jax.Array,
+                       percentile: float = 99.9) -> dict:
+    """Data-based weight normalisation (Diehl et al. 2015).
+
+    Rescales each layer by the p-th percentile of its pre-activations on a
+    calibration batch so that LIF rates (∈[0,1]) track ReLU activations.
+    Biases are folded away (the RTL has none): they are dropped after being
+    absorbed into the effective threshold via the normalisation — acceptable
+    for the paper's bias-free topology, reported otherwise.
+
+    Returns float SNN params {"layers": [{"w": ...}]} for core.snn
+    (threshold = 1.0 semantics), ready for ``quantize_params``.
+    """
+    h = calib_x
+    out_layers = []
+    prev_scale = 1.0
+    n = len(params["layers"])
+    for i, layer in enumerate(params["layers"]):
+        pre = h @ layer["w"] + layer["b"]
+        lam = jnp.percentile(pre, percentile)
+        lam = jnp.maximum(lam, 1e-6)
+        # w_snn = w * prev_scale / lam : inputs were scaled by 1/prev_scale,
+        # outputs must cross 1.0 when the ANN pre-activation crosses lam.
+        w_snn = layer["w"] * (prev_scale / lam)
+        out_layers.append({"w": w_snn})
+        if i < n - 1:
+            h = jax.nn.relu(pre)
+        prev_scale = lam
+    return {"layers": out_layers}

@@ -1,0 +1,70 @@
+"""Poisson spike encoding (paper §III-C, Fig. 2).
+
+Static images carry no temporal structure, so the RTL converts pixel
+intensity into firing *rate*: at every timestep, each pixel's PRNG lane draws
+an 8-bit value R and emits a spike iff ``I > R``.  Brighter pixel ⇒ higher
+spike probability ⇒ denser spike train.  P(spike) = I/256 exactly (for the
+idealised uniform R); with the xorshift lanes it is I/256 up to PRNG bias.
+
+Two encoder variants:
+
+* :func:`poisson_encode_hw` — bit-exact model of the hardware: per-pixel
+  xorshift32 lanes, top-byte comparison.  Use for RTL-equivalence tests and
+  inference benchmarking.
+* :func:`poisson_encode_jax` — same distribution but driven by
+  ``jax.random`` (cheap to split per batch/step); used during surrogate
+  gradient training where PRNG bit-compatibility is irrelevant.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import prng
+
+__all__ = [
+    "poisson_encode_hw",
+    "poisson_encode_jax",
+    "spike_train_rates",
+]
+
+
+def poisson_encode_hw(pixels_u8: jax.Array, state: jax.Array, num_steps: int):
+    """Hardware-faithful Poisson encoding.
+
+    Args:
+      pixels_u8: uint8 intensities, any shape ``(...,)`` (normalised 0..255).
+      state: uint32 xorshift state, same shape as ``pixels_u8``.
+      num_steps: number of timesteps T.
+
+    Returns:
+      (spikes, final_state): ``spikes`` is bool ``(T, ...)``; state for
+      continuation (the RTL free-runs its PRNG between images).
+    """
+    if pixels_u8.dtype != jnp.uint8:
+        raise TypeError(f"pixels must be uint8, got {pixels_u8.dtype}")
+
+    def body(s, _):
+        s = prng.xorshift32_step(s)
+        r = prng.uniform_u8(s)
+        spike = pixels_u8 > r
+        return s, spike
+
+    final_state, spikes = jax.lax.scan(body, state, None, length=num_steps)
+    return spikes, final_state
+
+
+def poisson_encode_jax(pixels01: jax.Array, key: jax.Array, num_steps: int) -> jax.Array:
+    """Training-path Poisson encoding from float intensities in [0, 1].
+
+    Returns float spikes ``(T, ...)`` in {0.0, 1.0} (float so the surrogate
+    gradient machinery can treat them as activations).
+    """
+    u = jax.random.uniform(key, (num_steps,) + pixels01.shape)
+    return (pixels01[None] > u).astype(jnp.float32)
+
+
+def spike_train_rates(spikes: jax.Array) -> jax.Array:
+    """Empirical firing rate per lane: mean over the time axis (axis 0)."""
+    return jnp.mean(spikes.astype(jnp.float32), axis=0)

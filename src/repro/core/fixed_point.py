@@ -1,0 +1,118 @@
+"""Fixed-point arithmetic utilities (paper §III-A, §V-B).
+
+The RTL stores synaptic weights as 8/9-bit signed fixed point and membrane
+potentials in a wider accumulator register.  These helpers implement the
+quantisation used to move between the float training world and the integer
+inference world, including the stochastic-rounding variant referenced from
+Shinji et al. 2024 ([5] in the paper).
+
+Conventions
+-----------
+* ``Q(w, bits, scale)``: integer code ``q = clip(round(w / scale))`` with
+  ``q ∈ [-2^(bits-1), 2^(bits-1)-1]``.
+* Per-tensor or per-output-neuron (axis) scales are supported; the RTL uses a
+  single global scale chosen at synthesis time, which is the default here.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "QuantParams",
+    "choose_scale",
+    "quantize",
+    "dequantize",
+    "quantize_stochastic",
+    "fake_quant",
+    "int8_matmul",
+]
+
+
+@dataclass(frozen=True)
+class QuantParams:
+    """Static description of a fixed-point format."""
+
+    bits: int = 8
+    axis: int | None = None  # None => per-tensor scale
+
+    @property
+    def qmin(self) -> int:
+        return -(1 << (self.bits - 1))
+
+    @property
+    def qmax(self) -> int:
+        return (1 << (self.bits - 1)) - 1
+
+
+def choose_scale(w: jax.Array, qp: QuantParams) -> jax.Array:
+    """Symmetric max-abs scale (what a synthesis-time calibration would pick)."""
+    if qp.axis is None:
+        amax = jnp.max(jnp.abs(w))
+    else:
+        reduce_axes = tuple(i for i in range(w.ndim) if i != qp.axis)
+        amax = jnp.max(jnp.abs(w), axis=reduce_axes, keepdims=True)
+    amax = jnp.maximum(amax, 1e-12)
+    return (amax / qp.qmax).astype(jnp.float32)
+
+
+def quantize(w: jax.Array, qp: QuantParams, scale: jax.Array | None = None):
+    """Round-to-nearest-even quantisation. Returns (int codes, scale)."""
+    scale = choose_scale(w, qp) if scale is None else scale
+    q = jnp.clip(jnp.round(w / scale), qp.qmin, qp.qmax)
+    dtype = jnp.int8 if qp.bits <= 8 else (jnp.int16 if qp.bits <= 16 else jnp.int32)
+    return q.astype(dtype), scale
+
+
+def quantize_stochastic(w: jax.Array, qp: QuantParams, key: jax.Array,
+                        scale: jax.Array | None = None):
+    """Stochastic rounding (Shinji et al. 2024 style): E[q*scale] == w."""
+    scale = choose_scale(w, qp) if scale is None else scale
+    x = w / scale
+    lo = jnp.floor(x)
+    p_up = x - lo
+    up = jax.random.uniform(key, x.shape) < p_up
+    q = jnp.clip(lo + up.astype(x.dtype), qp.qmin, qp.qmax)
+    dtype = jnp.int8 if qp.bits <= 8 else (jnp.int16 if qp.bits <= 16 else jnp.int32)
+    return q.astype(dtype), scale
+
+
+def dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(1,))
+def fake_quant(w: jax.Array, bits: int = 8) -> jax.Array:
+    """Straight-through-estimator fake quantisation (for QAT of the SNN)."""
+    qp = QuantParams(bits=bits)
+    q, s = quantize(w, qp)
+    return dequantize(q, s)
+
+
+def _fq_fwd(w, bits):
+    return fake_quant(w, bits), None
+
+
+def _fq_bwd(bits, _res, g):
+    return (g,)
+
+
+fake_quant.defvjp(_fq_fwd, _fq_bwd)
+
+
+def int8_matmul(x_q: jax.Array, w_q: jax.Array, x_scale, w_scale) -> jax.Array:
+    """Integer matmul with int32 accumulation, rescaled to float.
+
+    Mirrors the RTL accumulator: products never leave the integer domain
+    until the final rescale.  On TPU this lowers to the int8 MXU path.
+    """
+    acc = jax.lax.dot_general(
+        x_q, w_q,
+        dimension_numbers=(((x_q.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+    return acc.astype(jnp.float32) * (x_scale * w_scale)

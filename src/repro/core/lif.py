@@ -1,0 +1,242 @@
+"""Leaky Integrate-and-Fire neuron dynamics (paper §III-A, §III-B, Fig. 1/4).
+
+Two datapaths, sharing one timestep semantics:
+
+* **Integer datapath** (:func:`lif_step_int`, :func:`run_lif_int`): the
+  bit-exact model of the RTL.  Membrane potential lives in an int32
+  "Accumulator" register; synaptic weights are int8/int16 codes; the leak is
+  an arithmetic right shift (β = 2⁻ⁿ); fire is a ≥ comparison against the
+  Threshold-Reg; reset is a hard write of V_rest.  No multiplications occur
+  anywhere: the input current is a masked sum of weights (spikes are binary).
+
+* **Float datapath** (:func:`lif_step_float`, :func:`run_lif_float`): same
+  dynamics in float with a surrogate-gradient spike function, used to train
+  weights with BPTT.  After training, weights are quantised
+  (``core.fixed_point``) and executed on the integer datapath.
+
+Timestep ordering (matches the RTL FSM: Integrate → Leak → Fire/Reset):
+
+    I[t]   = Σ_i W_i · S_i[t]                 (Adder, spike-gated)
+    V'     = V[t-1] + I[t]                    (Accumulator)
+    V''    = V' - (V' >> n)                   (Decay-Reg / ALU shift)
+    fire   = V'' ≥ V_th                       (Comparator)
+    V[t]   = fire ? V_rest : V''              (hard reset)
+
+Active pruning (§III-D) enters as an ``enable`` mask: a disabled neuron's
+accumulator is frozen and it cannot fire — modelling the gated clock.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "LIFConfig",
+    "LIFStateInt",
+    "LIFStateFloat",
+    "lif_step_int",
+    "run_lif_int",
+    "spike_surrogate",
+    "lif_step_float",
+    "run_lif_float",
+]
+
+
+@dataclass(frozen=True)
+class LIFConfig:
+    """Static LIF hyper-parameters (synthesis-time constants in the RTL)."""
+
+    decay_shift: int = 4          # n in β = 2⁻ⁿ  (Decay-Reg)
+    v_threshold: int = 128        # Threshold-Reg (paper Fig. 4 uses 128)
+    v_rest: int = 0               # restart potential; 0 by design (paper §III-A)
+    v_min: int = -(1 << 20)       # accumulator saturation floor (int path)
+    v_max: int = (1 << 20) - 1    # accumulator saturation ceiling
+
+    @property
+    def beta(self) -> float:
+        return 2.0 ** (-self.decay_shift)
+
+
+class LIFStateInt(NamedTuple):
+    v: jax.Array        # int32 membrane accumulator, shape (..., N)
+    enable: jax.Array   # bool, per-neuron clock-gate (True = active)
+
+
+class LIFStateFloat(NamedTuple):
+    v: jax.Array        # float membrane potential
+
+
+def init_state_int(shape: tuple[int, ...], cfg: LIFConfig) -> LIFStateInt:
+    return LIFStateInt(
+        v=jnp.full(shape, cfg.v_rest, dtype=jnp.int32),
+        enable=jnp.ones(shape, dtype=bool),
+    )
+
+
+def init_state_float(shape: tuple[int, ...], cfg: LIFConfig) -> LIFStateFloat:
+    return LIFStateFloat(v=jnp.full(shape, float(cfg.v_rest), dtype=jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# Integer (RTL-faithful) datapath
+# ---------------------------------------------------------------------------
+
+def synaptic_current_int(spikes: jax.Array, w_q: jax.Array,
+                         dot_impl: str = "int32") -> jax.Array:
+    """I = Σ_i W_i · S_i with S ∈ {0,1} — multiplier-free.
+
+    ``spikes``: bool/int ``(..., n_in)``; ``w_q``: int ``(n_in, n_out)``.
+    Expressed as a masked sum with int32 accumulation; XLA on TPU lowers the
+    {0,1}·int contraction to the integer MXU path, which is exactly the
+    "adds only" cost model the paper uses (see core.energy).  Weights stay
+    in their storage dtype (int16 for the paper's 9-bit signed codes —
+    deliberately NOT narrowed to int8, which would overflow codes ≥ 128).
+
+    dot_impl="f32" routes the contraction through the f32 unit — BIT-EXACT
+    for this datapath (|Σ| ≤ n_in·2^8 < 2^24, every intermediate is an
+    integer exactly representable in f32) and much faster on hosts whose
+    integer matmul has no BLAS path (§Perf: the hardware-adaptation move —
+    RTL uses adders, TPU the int MXU, CPU the FP unit; same arithmetic).
+    """
+    if dot_impl == "f32":
+        acc = jax.lax.dot_general(
+            spikes.astype(jnp.float32), w_q.astype(jnp.float32),
+            dimension_numbers=(((spikes.ndim - 1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        return acc.astype(jnp.int32)
+    s = spikes.astype(jnp.int32)
+    return jax.lax.dot_general(
+        s, w_q.astype(jnp.int32),
+        dimension_numbers=(((s.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+
+
+def lif_step_int(state: LIFStateInt, current: jax.Array, cfg: LIFConfig):
+    """One RTL timestep on the integer datapath.
+
+    Returns (new_state, fired) where ``fired`` is bool (..., N).
+    Disabled neurons neither integrate nor fire (frozen accumulator).
+    """
+    v_prev = state.v
+    # Integrate (Adder): saturating add, as the RTL accumulator clamps.
+    v_int = jnp.clip(v_prev + current, cfg.v_min, cfg.v_max)
+    # Leak (ALU shift): arithmetic right shift on two's complement.
+    v_leak = v_int - (v_int >> cfg.decay_shift)
+    # Fire (Comparator) + hard reset.
+    fired = v_leak >= cfg.v_threshold
+    v_new = jnp.where(fired, jnp.int32(cfg.v_rest), v_leak)
+    # Active pruning gate: frozen when disabled.
+    v_out = jnp.where(state.enable, v_new, v_prev)
+    fired = jnp.logical_and(fired, state.enable)
+    return LIFStateInt(v=v_out, enable=state.enable), fired
+
+
+def run_lif_int(
+    spikes_t: jax.Array,
+    w_q: jax.Array,
+    cfg: LIFConfig,
+    *,
+    active_pruning: bool = False,
+    init: LIFStateInt | None = None,
+    dot_impl: str = "int32",
+):
+    """Run T timesteps of the integer LIF layer.
+
+    Args:
+      spikes_t: bool ``(T, ..., n_in)`` input spike train.
+      w_q: int8/int16 ``(n_in, n_out)`` synaptic weights.
+      active_pruning: if True, a neuron that fires is clock-gated for the
+        remainder of the window (paper §III-D).
+
+    Returns dict with:
+      ``spikes``  (T, ..., n_out) bool output spike train
+      ``v_trace`` (T, ..., n_out) int32 membrane trajectory (Fig. 4)
+      ``state``   final LIFStateInt
+      ``active_adds`` per-step count of executed synaptic additions
+                      (the quantity the energy model integrates).
+    """
+    batch_shape = spikes_t.shape[1:-1]
+    n_out = w_q.shape[-1]
+    state0 = init if init is not None else init_state_int(batch_shape + (n_out,), cfg)
+
+    n_in = w_q.shape[0]
+
+    def body(state, s_t):
+        current = synaptic_current_int(s_t, w_q, dot_impl)
+        # Pruned neurons do not accumulate: their adds are gated off.
+        current = jnp.where(state.enable, current, 0)
+        new_state, fired = lif_step_int(state, current, cfg)
+        if active_pruning:
+            new_state = new_state._replace(
+                enable=jnp.logical_and(new_state.enable, jnp.logical_not(fired))
+            )
+        # Op accounting: each input spike costs one add per *enabled* output.
+        n_spk = jnp.sum(s_t.astype(jnp.int32), axis=-1)          # (...,)
+        n_en = jnp.sum(state.enable.astype(jnp.int32), axis=-1)  # (...,)
+        adds = n_spk * n_en
+        return new_state, (fired, new_state.v, adds)
+
+    state_f, (spk, vtr, adds) = jax.lax.scan(body, state0, spikes_t)
+    return {"spikes": spk, "v_trace": vtr, "state": state_f, "active_adds": adds,
+            "n_in": n_in}
+
+
+# ---------------------------------------------------------------------------
+# Float (training) datapath with surrogate gradient
+# ---------------------------------------------------------------------------
+
+@partial(jax.custom_vjp, nondiff_argnums=(1,))
+def spike_surrogate(v_minus_th: jax.Array, slope: float = 4.0) -> jax.Array:
+    """Heaviside spike with a fast-sigmoid surrogate derivative.
+
+    Forward: 1[v ≥ v_th].  Backward: d/dv σ_fast = slope / (1 + slope|x|)²
+    (Zenke & Ganguli 2018) — the standard choice for BPTT through LIF.
+    """
+    return (v_minus_th >= 0).astype(v_minus_th.dtype)
+
+
+def _spk_fwd(x, slope):
+    return spike_surrogate(x, slope), x
+
+
+def _spk_bwd(slope, x, g):
+    grad = slope / (1.0 + slope * jnp.abs(x)) ** 2
+    return (g * grad,)
+
+
+spike_surrogate.defvjp(_spk_fwd, _spk_bwd)
+
+
+def lif_step_float(state: LIFStateFloat, current: jax.Array, cfg: LIFConfig,
+                   slope: float = 4.0):
+    """Float twin of :func:`lif_step_int` (same op ordering, soft gradients)."""
+    v_int = state.v + current
+    v_leak = v_int - v_int * cfg.beta        # == v_int * (1 - 2^-n)
+    spike = spike_surrogate(v_leak - float(cfg.v_threshold), slope)
+    # Hard reset through a straight-through multiply keeps gradients flowing
+    # along the no-reset path.
+    v_new = v_leak * (1.0 - spike) + float(cfg.v_rest) * spike
+    return LIFStateFloat(v=v_new), spike
+
+
+def run_lif_float(spikes_t: jax.Array, w: jax.Array, cfg: LIFConfig,
+                  slope: float = 4.0):
+    """Run T float LIF steps. Returns (out_spikes (T,...,N), v_trace, final)."""
+    batch_shape = spikes_t.shape[1:-1]
+    n_out = w.shape[-1]
+    state0 = init_state_float(batch_shape + (n_out,), cfg)
+
+    def body(state, s_t):
+        current = s_t @ w
+        new_state, spike = lif_step_float(state, current, cfg, slope)
+        return new_state, (spike, new_state.v)
+
+    state_f, (spk, vtr) = jax.lax.scan(body, state0, spikes_t)
+    return spk, vtr, state_f

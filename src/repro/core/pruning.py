@@ -1,0 +1,114 @@
+"""Active pruning controller (paper §III-D, Fig. 3).
+
+The RTL layer controller aggregates output spikes in a Spike Register and
+feeds them back as enable gates: once a neuron has fired (i.e. contributed a
+classification vote), its datapath is clock-gated for the rest of the
+inference window, eliminating its switching power.
+
+On TPU the same logic is a carried boolean mask (see ``run_lif_int``'s
+``active_pruning`` flag).  This module adds the *layer-level* controller
+semantics on top:
+
+* :class:`PruningController` — spike register + enable feedback + readout.
+* :func:`first_spike_readout` — classification from the spike register
+  (earliest-firing neuron wins; membrane potential breaks ties), which is the
+  readout the pruned RTL actually supports (each neuron fires ≤ once).
+* :func:`stability_early_exit` — the batch-level generalisation used by the
+  serving stack (``serve/early_exit.py``): an *input* is retired once its
+  predicted class has been stable for ``patience`` steps.  This is the
+  framework-level analogue of "sleep sooner to save power" (paper §IV-C).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "PruningState",
+    "init_pruning_state",
+    "controller_step",
+    "first_spike_readout",
+    "count_readout",
+    "membrane_readout",
+    "stability_early_exit",
+]
+
+
+class PruningState(NamedTuple):
+    enable: jax.Array        # bool (..., N): per-neuron clock gates
+    spike_reg: jax.Array     # int32 (..., N): aggregated spike counts
+    first_spike_t: jax.Array  # int32 (..., N): timestep of first spike (T_max if never)
+
+
+def init_pruning_state(shape: tuple[int, ...], horizon: int) -> PruningState:
+    return PruningState(
+        enable=jnp.ones(shape, dtype=bool),
+        spike_reg=jnp.zeros(shape, dtype=jnp.int32),
+        first_spike_t=jnp.full(shape, horizon, dtype=jnp.int32),
+    )
+
+
+def controller_step(state: PruningState, fired: jax.Array, t: jax.Array,
+                    *, prune: bool = True) -> PruningState:
+    """One controller cycle: latch spikes, record first-spike time, gate."""
+    spike_reg = state.spike_reg + fired.astype(jnp.int32)
+    # Record the first firing time (a neuron that already spiked keeps its t).
+    first_t = jnp.where(jnp.logical_and(fired, state.spike_reg == 0),
+                        jnp.int32(t), state.first_spike_t)
+    enable = state.enable
+    if prune:
+        enable = jnp.logical_and(enable, jnp.logical_not(fired))
+    return PruningState(enable=enable, spike_reg=spike_reg, first_spike_t=first_t)
+
+
+def first_spike_readout(state: PruningState, v_final: jax.Array,
+                        horizon: int) -> jax.Array:
+    """Earliest-firing neuron wins; membrane potential breaks never-fired ties.
+
+    Under active pruning each neuron fires at most once, so spike counts are
+    uninformative; *when* it fired is the signal (time-to-first-spike code).
+    Never-fired neurons rank below all fired ones, ordered by membrane V.
+    """
+    fired = state.spike_reg > 0
+    # Score: fired neurons get (horizon - first_t) * LARGE  (earlier = larger);
+    # unfired ones get their (sub-threshold) membrane potential.
+    large = jnp.asarray(1 << 24, dtype=jnp.int32)
+    score = jnp.where(
+        fired,
+        (horizon - state.first_spike_t) * large,
+        jnp.clip(v_final, -large + 1, large - 1),
+    )
+    return jnp.argmax(score, axis=-1)
+
+
+def count_readout(out_spikes_t: jax.Array) -> jax.Array:
+    """Rate readout: argmax of spike counts over the window (no pruning)."""
+    counts = jnp.sum(out_spikes_t.astype(jnp.int32), axis=0)
+    return jnp.argmax(counts, axis=-1)
+
+
+def membrane_readout(v_trace_t: jax.Array) -> jax.Array:
+    """Argmax of time-integrated membrane potential (ANN-conversion readout)."""
+    return jnp.argmax(jnp.sum(v_trace_t.astype(jnp.int64), axis=0), axis=-1)
+
+
+def stability_early_exit(pred_t: jax.Array, patience: int) -> jax.Array:
+    """Earliest timestep at which the running prediction became final.
+
+    ``pred_t``: int (T, batch) per-step predictions.  Returns (batch,) int32 —
+    the first t such that pred is constant from t-patience+1..t and never
+    changes after t; T if never stable.  Used to quantify the latency the
+    active-pruning/early-exit mechanism saves (paper Fig. 6/7).
+    """
+    T = pred_t.shape[0]
+    final = pred_t[-1]
+    agrees = pred_t == final[None]            # (T, batch)
+    # suffix_all[t] = all agree from t..T-1
+    suffix_all = jnp.flip(jnp.cumprod(jnp.flip(agrees, 0), axis=0), 0).astype(bool)
+    first_stable = jnp.argmax(suffix_all, axis=0)  # first True (0 if all True)
+    never = jnp.logical_not(jnp.any(suffix_all, axis=0))
+    t_exit = jnp.minimum(first_stable + patience - 1, T - 1)
+    return jnp.where(never, T, t_exit + 1).astype(jnp.int32)

@@ -1,0 +1,242 @@
+"""The paper's SNN as a composable JAX module.
+
+Network topology (paper §IV-A): Poisson encoder → fully-connected 784→10 LIF
+layer → spike-register readout, over a T-timestep window.  The module
+generalises to arbitrary layer stacks (hidden LIF layers) so the framework
+can scale the idea, but the paper configuration is the single FC layer.
+
+Three executables are exposed:
+
+* :func:`snn_apply_float` — differentiable forward (surrogate gradients),
+  used for BPTT training.  Optionally trains *through* fake-quantised weights
+  (QAT) so the trained weights survive int8 conversion.
+* :func:`snn_apply_int` — the bit-exact fixed-point inference engine
+  (the actual reproduction target), including active pruning and the
+  op-count/energy side channel.
+* :func:`snn_loss` / :func:`snn_train_step` helpers for the training loop.
+
+Weights layout: ``params = {"layers": [{"w": (n_in, n_out)}, ...]}``.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from . import encoding, fixed_point, lif, pruning
+
+__all__ = [
+    "SNNConfig",
+    "snn_init",
+    "snn_apply_float",
+    "snn_apply_int",
+    "snn_loss",
+    "quantize_params",
+]
+
+
+@dataclass(frozen=True)
+class SNNConfig:
+    layer_sizes: tuple[int, ...] = (784, 10)   # paper: single FC 784→10
+    num_steps: int = 20                        # simulation window (paper §IV-C)
+    lif: lif.LIFConfig = field(default_factory=lif.LIFConfig)
+    weight_bits: int = 8                       # paper: 8-bit codes (9 incl. sign ref)
+    qat: bool = True                           # train through fake-quant
+    surrogate_slope: float = 4.0
+    readout: str = "count"                     # count|first_spike|membrane
+    active_pruning: bool = False
+    dot_impl: str = "int32"                    # int32 | f32 (bit-exact fast path)
+    fuse_encoder: bool = False                 # PRNG+encode inside the LIF scan
+    emit_trace: bool = True                    # False: no v/spike-train outputs
+                                               # (prediction-only serving)
+    # Float-threshold used during training; the int path scales it (below).
+    train_threshold: float = 1.0
+
+    @property
+    def n_in(self) -> int:
+        return self.layer_sizes[0]
+
+    @property
+    def n_classes(self) -> int:
+        return self.layer_sizes[-1]
+
+
+def snn_init(key: jax.Array, cfg: SNNConfig) -> dict:
+    layers = []
+    sizes = cfg.layer_sizes
+    for i, (fan_in, fan_out) in enumerate(zip(sizes[:-1], sizes[1:])):
+        key, sub = jax.random.split(key)
+        # LeCun-style init scaled for spiking inputs (rate ≲ 0.5).
+        w = jax.random.normal(sub, (fan_in, fan_out), jnp.float32)
+        w = w * (2.0 / jnp.sqrt(fan_in))
+        layers.append({"w": w})
+    return {"layers": layers}
+
+
+def _train_lif_cfg(cfg: SNNConfig) -> lif.LIFConfig:
+    """Float-threshold LIF used in training (V_th=1.0 instead of 128)."""
+    return lif.LIFConfig(
+        decay_shift=cfg.lif.decay_shift,
+        v_threshold=cfg.train_threshold,  # type: ignore[arg-type]
+        v_rest=0,
+    )
+
+
+def snn_apply_float(params: dict, pixels01: jax.Array, key: jax.Array,
+                    cfg: SNNConfig):
+    """Differentiable forward. pixels01: (batch, n_in) in [0,1].
+
+    Returns dict(rates=(batch, n_classes) mean firing rates,
+                 spikes=(T, batch, n_classes)).
+    """
+    spikes = encoding.poisson_encode_jax(pixels01, key, cfg.num_steps)
+    tcfg = _train_lif_cfg(cfg)
+    for layer in params["layers"]:
+        w = layer["w"]
+        if cfg.qat:
+            w = fixed_point.fake_quant(w, cfg.weight_bits)
+        spikes, v_trace, _ = lif.run_lif_float(spikes, w, tcfg, cfg.surrogate_slope)
+    rates = jnp.mean(spikes, axis=0)
+    return {"rates": rates, "spikes": spikes, "v_trace": v_trace}
+
+
+def quantize_params(params: dict, cfg: SNNConfig):
+    """Float→fixed-point conversion for the integer engine.
+
+    Scales weights so the float threshold (1.0) maps to the integer
+    Threshold-Reg value (e.g. 128): w_q = round(w / s), s chosen per layer
+    such that the *effective* threshold matches the RTL register.
+    """
+    out = []
+    # Gain that maps the float threshold (1.0) onto the Threshold-Reg (128):
+    # integer weight codes are w·gain, so Σ w_q·S crosses 128 exactly when the
+    # float accumulator would cross 1.0 (up to rounding).
+    gain = float(cfg.lif.v_threshold) / cfg.train_threshold
+    # Paper §V-B: 9-bit signed weight codes (784×10×9 bits ≈ 8.6 KB).
+    code_bits = cfg.weight_bits + 1
+    qmin, qmax = -(1 << (code_bits - 1)), (1 << (code_bits - 1)) - 1
+    for layer in params["layers"]:
+        w = layer["w"]
+        if cfg.qat:
+            w = fixed_point.fake_quant(w, cfg.weight_bits)
+        w_q = jnp.clip(jnp.round(w * gain), qmin, qmax).astype(jnp.int16)
+        out.append({"w_q": w_q, "scale": jnp.float32(1.0 / gain)})
+    return {"layers": out}
+
+
+def snn_apply_int(params_q: dict, pixels_u8: jax.Array, prng_state: jax.Array,
+                  cfg: SNNConfig, *, use_kernels: bool = False):
+    """Bit-exact fixed-point inference (the RTL-equivalent engine).
+
+    Args:
+      params_q: from :func:`quantize_params`.
+      pixels_u8: (batch, n_in) uint8.
+      prng_state: (batch, n_in) uint32 xorshift lanes.
+
+    Returns dict(pred, spike_counts, v_trace, active_adds, input_spikes,
+                 first_spike_t, prng_state).
+    """
+    if cfg.fuse_encoder and len(params_q["layers"]) == 1:
+        # single fused scan: xorshift -> compare -> ΣW·S -> LIF, per step —
+        # the (T, B, n_in) spike train never round-trips through memory
+        # (§Perf; exactly what the RTL datapath does cycle by cycle).
+        res, prng_next = _fused_encode_lif(
+            params_q["layers"][0]["w_q"], pixels_u8, prng_state, cfg)
+        spikes = res["input_spikes"]
+    else:
+        spikes, prng_next = encoding.poisson_encode_hw(
+            pixels_u8, prng_state, cfg.num_steps)
+
+        res = None
+        x = spikes
+        for li, layer in enumerate(params_q["layers"]):
+            res = lif.run_lif_int(x, layer["w_q"], cfg.lif,
+                                  active_pruning=cfg.active_pruning,
+                                  dot_impl=cfg.dot_impl)
+            x = res["spikes"]
+
+    out_spikes = res["spikes"]                       # (T, batch, n_out)
+    v_trace = res["v_trace"]
+    counts = jnp.sum(out_spikes.astype(jnp.int32), axis=0)
+
+    T = cfg.num_steps
+    fired_any = counts > 0
+    # first spike times
+    t_idx = jnp.arange(T, dtype=jnp.int32)[:, None, None]
+    first_t = jnp.min(jnp.where(out_spikes, t_idx, T), axis=0)
+
+    if cfg.readout == "count":
+        pred = jnp.argmax(counts, axis=-1)
+    elif cfg.readout == "membrane":
+        pred = pruning.membrane_readout(v_trace)
+    else:  # first_spike
+        large = jnp.int32(1 << 24)
+        score = jnp.where(fired_any, (T - first_t) * large,
+                          jnp.clip(res["state"].v, -large + 1, large - 1))
+        pred = jnp.argmax(score, axis=-1)
+
+    return {
+        "pred": pred,
+        "spike_counts": counts,
+        "v_trace": v_trace,
+        "active_adds": res["active_adds"],
+        "input_spikes": spikes,
+        "first_spike_t": first_t,
+        "prng_state": prng_next,
+    }
+
+
+def _fused_encode_lif(w_q: jax.Array, pixels_u8: jax.Array,
+                      prng_state: jax.Array, cfg: SNNConfig):
+    """One scan per timestep: PRNG step, spike compare, synaptic sum, LIF
+    update.  Bit-identical to the unfused pipeline (same op order)."""
+    from . import prng as prng_mod
+    batch_shape = pixels_u8.shape[:-1]
+    n_out = w_q.shape[-1]
+    state0 = lif.init_state_int(batch_shape + (n_out,), cfg.lif)
+
+    def body(carry, _):
+        rng, state = carry
+        rng = prng_mod.xorshift32_step(rng)
+        s_t = pixels_u8 > prng_mod.uniform_u8(rng)
+        current = lif.synaptic_current_int(s_t, w_q, cfg.dot_impl)
+        current = jnp.where(state.enable, current, 0)
+        new_state, fired = lif.lif_step_int(state, current, cfg.lif)
+        if cfg.active_pruning:
+            new_state = new_state._replace(
+                enable=jnp.logical_and(new_state.enable,
+                                       jnp.logical_not(fired)))
+        n_spk = jnp.sum(s_t.astype(jnp.int32), axis=-1)
+        n_en = jnp.sum(state.enable.astype(jnp.int32), axis=-1)
+        ys = (fired, new_state.v, n_spk * n_en, s_t) if cfg.emit_trace \
+            else (fired,)
+        return (rng, new_state), ys
+
+    (rng_f, state_f), ys = jax.lax.scan(
+        body, (prng_state, state0), None, length=cfg.num_steps)
+    if cfg.emit_trace:
+        spk, vtr, adds, s_all = ys
+    else:
+        (spk,), vtr, adds, s_all = ys, None, None, None
+    res = {"spikes": spk, "v_trace": vtr, "state": state_f,
+           "active_adds": adds, "n_in": w_q.shape[0], "input_spikes": s_all}
+    return res, rng_f
+
+
+def snn_loss(params: dict, pixels01: jax.Array, labels: jax.Array,
+             key: jax.Array, cfg: SNNConfig):
+    """Rate-coded cross-entropy: softmax over time-summed spike counts.
+
+    A small L2 on rates discourages saturation (all-neurons-always-fire).
+    """
+    out = snn_apply_float(params, pixels01, key, cfg)
+    # counts in [0, T] -> logits; scale keeps softmax in a sane range.
+    logits = out["rates"] * float(cfg.num_steps) * 0.5
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1).mean()
+    reg = 1e-3 * jnp.mean(out["rates"] ** 2)
+    acc = jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))
+    return nll + reg, {"loss": nll, "acc": acc}

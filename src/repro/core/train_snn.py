@@ -1,0 +1,140 @@
+"""Offline SNN training (the flow the paper assumes; weights arrive
+trained in the RTL).  Two routes, both ending in 9-bit fixed-point codes
+for the integer engine:
+
+  * surrogate-gradient BPTT (direct SNN training, QAT through fake-quant);
+  * ANN→SNN conversion (train ReLU MLP, Diehl-normalise, quantize).
+
+``fit_or_load`` caches trained weights under results/ so benchmarks and
+examples share one model.
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..data import digits
+from ..data.pipeline import digit_batches
+from ..optim import optimizer as opt_mod
+from . import conversion, snn
+
+__all__ = ["train_bptt", "train_converted", "fit_or_load", "int_accuracy"]
+
+
+def _augment(pixels: np.ndarray, rng: np.random.Generator) -> np.ndarray:
+    """Light train-time corruption (random occlusion patches + noise):
+    the standard recipe that buys the paper's Fig-8 robustness."""
+    x = pixels.reshape(-1, 28, 28).copy()
+    n = x.shape[0]
+    occ = rng.random(n) < 0.35
+    for i in np.where(occ)[0]:
+        s = rng.integers(5, 10)
+        r0, c0 = rng.integers(0, 28 - s, 2)
+        x[i, r0:r0 + s, c0:c0 + s] = 0.0
+    x += rng.normal(0, 0.08, x.shape) * (rng.random((n, 1, 1)) < 0.5)
+    return np.clip(x, 0, 1).reshape(n, -1).astype(np.float32)
+
+
+def train_bptt(cfg: snn.SNNConfig, ds: digits.DigitDataset, *,
+               steps: int = 1500, batch: int = 128, lr: float = 2e-3,
+               seed: int = 0, log_every: int = 0, augment: bool = True):
+    """Surrogate-gradient BPTT with QAT. Returns float params."""
+    key = jax.random.PRNGKey(seed)
+    params = snn.snn_init(key, cfg)
+    opt = opt_mod.adamw(opt_mod.cosine_schedule(lr, steps), weight_decay=1e-4)
+    state = opt.init(params)
+    aug_rng = np.random.default_rng(seed + 1)
+
+    @jax.jit
+    def step(params, state, pixels, labels, key):
+        (loss, aux), grads = jax.value_and_grad(snn.snn_loss, has_aux=True)(
+            params, pixels, labels, key, cfg)
+        grads, _ = opt_mod.clip_by_global_norm(grads, 1.0)
+        updates, state = opt.update(grads, state, params)
+        return opt_mod.apply_updates(params, updates), state, aux
+
+    it = digit_batches(ds.x_train, ds.y_train, batch, seed=seed)
+    for i in range(steps):
+        b = next(it)
+        px = _augment(b["pixels"], aug_rng) if augment else b["pixels"]
+        key, sub = jax.random.split(key)
+        params, state, aux = step(params, state,
+                                  jnp.asarray(px),
+                                  jnp.asarray(b["labels"]), sub)
+        if log_every and (i + 1) % log_every == 0:
+            print(f"  bptt step {i+1}: loss {float(aux['loss']):.4f} "
+                  f"acc {float(aux['acc']):.3f}")
+    return params
+
+
+def train_converted(cfg: snn.SNNConfig, ds: digits.DigitDataset, *,
+                    steps: int = 1500, batch: int = 128, lr: float = 2e-3,
+                    seed: int = 0):
+    """ANN→SNN route: ReLU MLP + Diehl normalisation. Returns float params."""
+    key = jax.random.PRNGKey(seed)
+    params = conversion.ann_init(key, cfg.layer_sizes)
+    opt = opt_mod.adamw(opt_mod.cosine_schedule(lr, steps), weight_decay=1e-4)
+    state = opt.init(params)
+
+    @jax.jit
+    def step(params, state, x, y):
+        (loss, aux), grads = jax.value_and_grad(
+            conversion.ann_loss, has_aux=True)(params, x, y)
+        updates, state = opt.update(grads, state, params)
+        return opt_mod.apply_updates(params, updates), state, aux
+
+    it = digit_batches(ds.x_train, ds.y_train, batch, seed=seed)
+    for _ in range(steps):
+        b = next(it)
+        params, state, aux = step(params, state, jnp.asarray(b["pixels"]),
+                                  jnp.asarray(b["labels"]))
+    calib = jnp.asarray(ds.x_train[:512])
+    return conversion.convert_ann_to_snn(params, calib)
+
+
+def int_accuracy(params_q: dict, cfg: snn.SNNConfig, x: np.ndarray,
+                 y: np.ndarray, *, num_steps: int | None = None,
+                 seed: int = 1234, batch: int = 500):
+    """Accuracy of the bit-exact integer engine; returns (acc, aux dict)."""
+    import dataclasses
+    from . import prng
+    if num_steps is not None:
+        cfg = dataclasses.replace(cfg, num_steps=num_steps)
+    preds, adds = [], []
+    apply_jit = jax.jit(
+        lambda p, px, st: snn.snn_apply_int(p, px, st, cfg))
+    for i in range(0, len(y), batch):
+        px = jnp.asarray((x[i:i + batch] * 255).astype(np.uint8))
+        st = prng.seed_state(seed + i, px.shape)
+        out = apply_jit(params_q, px, st)
+        preds.append(np.asarray(out["pred"]))
+        adds.append(np.asarray(out["active_adds"]).sum(0))
+    acc = float((np.concatenate(preds) == y[:len(np.concatenate(preds))]).mean())
+    return acc, {"adds_per_img": float(np.concatenate(adds).mean())}
+
+
+def fit_or_load(cfg: snn.SNNConfig | None = None, *, route: str = "bptt",
+                cache: str = "results/snn_weights.npz",
+                steps: int = 1500, seed: int = 0, force: bool = False):
+    """Train (or load cached) paper-topology weights; returns
+    (float_params, quantized_params, dataset)."""
+    from ..configs.snn_mnist import SNN_CONFIG
+    cfg = cfg or SNN_CONFIG
+    ds = digits.make_dataset(seed=0)
+    if os.path.exists(cache) and not force:
+        z = np.load(cache)
+        params = {"layers": [{"w": jnp.asarray(z[f"w{i}"])}
+                             for i in range(len(z.files))]}
+    else:
+        if route == "convert":
+            params = train_converted(cfg, ds, steps=steps, seed=seed)
+        else:
+            params = train_bptt(cfg, ds, steps=steps, seed=seed)
+        os.makedirs(os.path.dirname(cache) or ".", exist_ok=True)
+        np.savez(cache, **{f"w{i}": np.asarray(l["w"])
+                           for i, l in enumerate(params["layers"])})
+    return params, snn.quantize_params(params, cfg), ds

@@ -1,0 +1,6 @@
+"""Data substrate: procedural digit dataset (MNIST stand-in), synthetic LM
+token stream, and the host-sharded input pipeline."""
+
+from . import digits, pipeline, tokens
+
+__all__ = ["digits", "pipeline", "tokens"]

@@ -1,0 +1,75 @@
+"""Input pipeline: host-sharded batching, device placement, prefetch.
+
+Small by design — the heavy lifting is in the generators (digits.py,
+tokens.py); this module owns the *distribution* concerns:
+
+  * global-batch → per-host striping (``host_shard``),
+  * building globally-sharded ``jax.Array``s from per-host shards
+    (``make_global_array``) so pjit sees one logical batch,
+  * a background-thread prefetcher to overlap host data generation with
+    device compute (the input-pipeline half of compute/comm overlap).
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Callable, Iterator
+
+import jax
+import numpy as np
+
+__all__ = ["host_shard", "make_global_array", "prefetch", "digit_batches"]
+
+
+def host_shard(array: np.ndarray, host_id: int, num_hosts: int) -> np.ndarray:
+    """Contiguous stripe of the leading (batch) axis for this host."""
+    n = array.shape[0]
+    assert n % num_hosts == 0, (n, num_hosts)
+    per = n // num_hosts
+    return array[host_id * per:(host_id + 1) * per]
+
+
+def make_global_array(local: np.ndarray, mesh: jax.sharding.Mesh,
+                      pspec: jax.sharding.PartitionSpec) -> jax.Array:
+    """Assemble a global jax.Array from this host's shard (multi-host safe)."""
+    sharding = jax.sharding.NamedSharding(mesh, pspec)
+    global_shape = (local.shape[0] * (jax.process_count()),) + local.shape[1:]
+    if jax.process_count() == 1:
+        return jax.device_put(local, sharding)
+    return jax.make_array_from_process_local_data(sharding, local, global_shape)
+
+
+def prefetch(it: Iterator, depth: int = 2) -> Iterator:
+    """Background-thread prefetch: overlaps batch generation with compute."""
+    q: queue.Queue = queue.Queue(maxsize=depth)
+    _END = object()
+
+    def worker():
+        try:
+            for item in it:
+                q.put(item)
+        finally:
+            q.put(_END)
+
+    t = threading.Thread(target=worker, daemon=True)
+    t.start()
+    while True:
+        item = q.get()
+        if item is _END:
+            return
+        yield item
+
+
+def digit_batches(x: np.ndarray, y: np.ndarray, batch: int, seed: int = 0,
+                  epochs: int | None = None) -> Iterator[dict]:
+    """Shuffled epoch iterator over the digit dataset."""
+    rng = np.random.default_rng(seed)
+    n = x.shape[0]
+    epoch = 0
+    while epochs is None or epoch < epochs:
+        perm = rng.permutation(n)
+        for i in range(0, n - batch + 1, batch):
+            idx = perm[i:i + batch]
+            yield {"pixels": x[idx], "labels": y[idx]}
+        epoch += 1

@@ -1,0 +1,207 @@
+"""Parameter / cache / batch partition specs, derived from tree paths.
+
+The model code names its parameters consistently (wq/wk/wv/wo, w1/w2/w3,
+router, embed, ...), so partition specs are assigned by a single rule table
+keyed on the leaf's path — the t5x/MaxText "named rules" approach, without
+maintaining a parallel spec tree by hand.
+
+Logical axes used (resolved to mesh axes by ShardingRules):
+  fsdp    → "data"   ZeRO-3 parameter sharding
+  heads   → "model"  TP over attention q-heads / mamba heads
+  kv      → None     GQA kv-heads replicated (kv < TP degree)
+  mlp     → "model"  TP over FFN hidden / mamba inner
+  vocab   → "model"  TP over embedding / lm-head vocab
+  experts → "model"  EP over MoE experts
+  batch   → data axes; kv_seq → "model" (decode-time flash-decoding split)
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .sharding import ShardingRules
+
+__all__ = ["param_logical_axes", "param_specs", "cache_specs", "batch_specs",
+           "opt_state_specs", "to_shardings", "train_state_specs"]
+
+Pytree = Any
+
+
+def _is_spec_leaf(x) -> bool:
+    """Plain tuple of axis names = a spec leaf (NamedTuples are nodes)."""
+    return (isinstance(x, tuple) and not hasattr(x, "_fields")
+            and all(e is None or isinstance(e, (str, tuple)) for e in x))
+
+
+def _path_names(path) -> list[str]:
+    names = []
+    for entry in path:
+        if hasattr(entry, "key"):
+            names.append(str(entry.key))
+        elif hasattr(entry, "name"):
+            names.append(str(entry.name))
+        elif hasattr(entry, "idx"):
+            names.append(str(entry.idx))
+    return names
+
+
+def param_logical_axes(cfg, path, leaf) -> tuple:
+    """Logical axis names for one parameter leaf (without the blocks axis)."""
+    names = _path_names(path)
+    last = names[-1]
+    stacked = "blocks" in names or "layers" in names
+    ndim = len(leaf.shape) - (1 if stacked else 0)
+
+    def out(*axes):
+        assert len(axes) == ndim, (names, leaf.shape, axes)
+        return ((None,) + axes) if stacked else axes
+
+    if last == "embed":
+        return ("vocab", "fsdp")
+    if last == "pos_embed":
+        return (None, "fsdp")
+    if last == "lm_head":
+        return ("fsdp", "vocab")
+
+    if last == "wq":
+        return out("fsdp", "heads", None)
+    if last in ("wk", "wv"):
+        kvp = leaf.shape[-2]
+        ax = "heads" if kvp == cfg.padded_num_heads else "kv"
+        return out("fsdp", ax, None)
+    if last == "wo":
+        return out("heads", None, "fsdp")
+    if last in ("q_norm", "k_norm"):
+        return out(None)
+
+    if last == "router":
+        return out("fsdp", None)
+    if last in ("w1", "w3"):
+        if ndim == 3:                       # MoE (E, D, F)
+            return out("experts", "fsdp", None)
+        return out("fsdp", "mlp")
+    if last == "w2":
+        if ndim == 3:                       # MoE (E, F, D)
+            return out("experts", None, "fsdp")
+        return out("mlp", "fsdp")
+
+    # mamba
+    if last in ("wz", "wx"):
+        return out("fsdp", "mlp")
+    if last in ("wb", "wc"):
+        return out("fsdp", None)
+    if last == "wdt":
+        return out("fsdp", "heads")
+    if last == "conv_x":
+        return out(None, "mlp")
+    if last in ("conv_b", "conv_c"):
+        return out(None, None)
+    if last in ("A_log", "D", "dt_bias"):
+        return out("heads")
+    if last == "out":
+        return out("mlp", "fsdp")
+    if last == "norm":                      # mamba gated-norm scale (d_inner)
+        return out("mlp")
+
+    # norm scales/biases and anything 1-D: replicated
+    return out(*([None] * ndim))
+
+
+def param_specs(cfg, params_shape: Pytree) -> Pytree:
+    """PartitionSpec tree (logical axes, unresolved) for a params tree."""
+    return jax.tree_util.tree_map_with_path(
+        lambda p, l: param_logical_axes(cfg, p, l), params_shape)
+
+
+def cache_specs(cfg, cache_shape: Pytree, *, decode: bool = True) -> Pytree:
+    """Logical axes for a KV/SSM cache tree (stacked over blocks)."""
+
+    def one(path, leaf):
+        names = _path_names(path)
+        last = names[-1]
+        if last in ("k", "v"):
+            # (nb, B, S, KV, hd): shard cache sequence for decode (flash-
+            # decoding); prefill keeps heads on model via activation specs.
+            return (None, "batch", "kv_seq" if decode else None, None, None)
+        if last == "ssm":
+            return (None, "batch", "heads", None, None)
+        if last == "conv_x":
+            return (None, "batch", None, "mlp")
+        if last in ("conv_b", "conv_c"):
+            return (None, "batch", None, None)
+        return (None,) * leaf.ndim
+
+    return jax.tree_util.tree_map_with_path(one, cache_shape)
+
+
+def batch_specs(batch_shape: Pytree) -> Pytree:
+    def one(path, leaf):
+        return ("batch",) + (None,) * (leaf.ndim - 1)
+    return jax.tree_util.tree_map_with_path(one, batch_shape)
+
+
+def opt_state_specs(opt_name: str, pspecs: Pytree, params_shape: Pytree,
+                    min_dim_factored: int = 128) -> Pytree:
+    """Spec tree for optimizer state, mirroring optim.optimizer layouts."""
+    from ..optim.optimizer import AdafactorState, AdamWState, SGDState
+
+    scalar = ()
+
+    if opt_name == "adamw":
+        return AdamWState(step=scalar, mu=pspecs, nu=pspecs)
+    if opt_name == "sgd":
+        return SGDState(step=scalar, momentum=pspecs)
+    if opt_name == "adafactor":
+        def factored(l):
+            if l.ndim < 2 or l.shape[-1] < min_dim_factored:
+                return False
+            lead = int(np.prod(l.shape[:-1]))
+            return lead >= min_dim_factored
+
+        def vr(spec, l):
+            return tuple(spec[:-1]) if factored(l) else tuple(spec)
+
+        def vc(spec, l):
+            if factored(l):
+                return tuple(spec[:-2]) + tuple(spec[-1:])
+            return tuple(spec[:1]) if l.ndim >= 1 else (None,)
+
+        return AdafactorState(
+            step=scalar,
+            vr=jax.tree.map(vr, pspecs, params_shape,
+                            is_leaf=_is_spec_leaf),
+            vc=jax.tree.map(vc, pspecs, params_shape,
+                            is_leaf=_is_spec_leaf),
+        )
+    raise ValueError(opt_name)
+
+
+def train_state_specs(cfg, opt_name: str, state_shape) -> Any:
+    """Specs for a train.TrainState (step, params, opt_state[, comp_err])."""
+    pspecs = param_specs(cfg, state_shape.params)
+    ospecs = opt_state_specs(opt_name, pspecs, state_shape.params)
+    comp = pspecs if state_shape.comp_err is not None else None
+    return type(state_shape)(step=(), params=pspecs, opt_state=ospecs,
+                             comp_err=comp)
+
+
+def to_shardings(mesh: Mesh, rules: ShardingRules, spec_tree: Pytree,
+                 shape_tree: Pytree | None = None):
+    """Resolve logical-axis tuples to NamedShardings on ``mesh``.
+
+    With ``shape_tree`` given, axes that don't divide the dim are dropped
+    (e.g. "batch" sharding of a global_batch=1 long-context decode).
+    """
+    if shape_tree is None:
+        return jax.tree.map(
+            lambda axes: NamedSharding(mesh, rules.spec(*axes)),
+            spec_tree, is_leaf=_is_spec_leaf)
+
+    def one(axes, leaf):
+        return NamedSharding(mesh, rules.spec_for_shape(leaf.shape, *axes))
+
+    return jax.tree.map(one, spec_tree, shape_tree, is_leaf=_is_spec_leaf)

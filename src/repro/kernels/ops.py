@@ -1,0 +1,88 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+Handles: CPU-vs-TPU dispatch (interpret mode on CPU so the whole framework
+runs in this container), shape padding to tile multiples, density-based
+masked/MXU dispatch for the spike matmul, and unpadding of results.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from . import lif_step, poisson_encode, spike_matmul
+
+__all__ = ["poisson_encode_op", "lif_forward_op", "spike_matmul_op"]
+
+
+def _use_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int):
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@partial(jax.jit, static_argnames=("num_steps", "interpret"))
+def poisson_encode_op(pixels_u8: jax.Array, state_u32: jax.Array,
+                      num_steps: int, *, interpret: bool | None = None):
+    """Batched hardware-faithful Poisson encoding via the Pallas kernel."""
+    interpret = _use_interpret() if interpret is None else interpret
+    B, N = pixels_u8.shape
+    bB, bN = poisson_encode.DEFAULT_BLOCK
+    px = _pad_to(_pad_to(pixels_u8, 0, bB), 1, bN)
+    st = _pad_to(_pad_to(state_u32, 0, bB), 1, bN)
+    spikes, state = poisson_encode.poisson_encode_pallas(
+        px, st, num_steps, interpret=interpret)
+    return spikes[:, :B, :N], state[:B, :N]
+
+
+@partial(jax.jit, static_argnames=(
+    "decay_shift", "v_threshold", "v_rest", "active_pruning", "interpret"))
+def lif_forward_op(spikes_t: jax.Array, w_q: jax.Array, *, decay_shift: int,
+                   v_threshold: int, v_rest: int = 0,
+                   active_pruning: bool = False,
+                   interpret: bool | None = None):
+    """Fused T-step LIF layer via the Pallas kernel. See lif_step.py."""
+    interpret = _use_interpret() if interpret is None else interpret
+    T, B, n_in = spikes_t.shape
+    n_out = w_q.shape[1]
+    bB, bN = lif_step.DEFAULT_BLOCK
+    s = _pad_to(spikes_t, 1, bB)
+    w = _pad_to(w_q, 1, bN)
+    spk, vtr, vfin = lif_step.lif_forward_pallas(
+        s, w, decay_shift=decay_shift, v_threshold=v_threshold,
+        v_rest=v_rest, active_pruning=active_pruning, interpret=interpret)
+    return spk[:, :B, :n_out], vtr[:, :B, :n_out], vfin[:B, :n_out]
+
+
+@partial(jax.jit, static_argnames=("mode", "interpret"))
+def spike_matmul_op(spikes: jax.Array, w_q: jax.Array, *,
+                    mode: str = "auto", interpret: bool | None = None):
+    """Event-driven spike×weight contraction.
+
+    mode="auto" picks the masked (event-driven) path for small layers and
+    the MXU path otherwise; density is a compile-time proxy here (runtime
+    density dispatch would need a cond over both kernels — the serving stack
+    does that at the batch level instead).
+    """
+    interpret = _use_interpret() if interpret is None else interpret
+    if mode == "auto":
+        n_in = spikes.shape[-1]
+        mode = "masked" if n_in <= 1024 else "mxu"
+    B, n_in = spikes.shape
+    n_out = w_q.shape[1]
+    bB, bN, bK = spike_matmul.DEFAULT_BLOCK
+    s = _pad_to(_pad_to(spikes, 0, bB), 1, bK)
+    w = _pad_to(_pad_to(w_q, 0, bK), 1, bN)
+    out = spike_matmul.spike_matmul_pallas(s, w, mode=mode,
+                                           interpret=interpret)
+    return out[:B, :n_out]

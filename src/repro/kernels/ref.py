@@ -1,0 +1,68 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the semantics contracts: each kernel's test sweeps shapes/dtypes
+and asserts exact equality (integer datapaths) or allclose (float) against
+these functions.  They intentionally re-derive the math independently of
+``repro.core`` so that kernel bugs and core bugs cannot cancel.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["poisson_encode_ref", "lif_forward_ref", "spike_matmul_ref"]
+
+
+def poisson_encode_ref(pixels_u8: jax.Array, state_u32: jax.Array,
+                       num_steps: int):
+    """xorshift32-driven Poisson encoding. Returns (spikes u8 (T,...), state)."""
+
+    def step(s, _):
+        s = s ^ (s << 13)
+        s = s ^ (s >> 17)
+        s = s ^ (s << 5)
+        r = (s >> 24).astype(jnp.uint8)
+        return s, (pixels_u8 > r).astype(jnp.uint8)
+
+    state_f, spikes = jax.lax.scan(step, state_u32, None, length=num_steps)
+    return spikes, state_f
+
+
+def lif_forward_ref(spikes_t: jax.Array, w_q: jax.Array, *, decay_shift: int,
+                    v_threshold: int, v_rest: int = 0,
+                    v_min: int = -(1 << 20), v_max: int = (1 << 20) - 1,
+                    active_pruning: bool = False):
+    """T-step integer LIF layer.
+
+    spikes_t: (T, B, N_in) uint8/bool; w_q: (N_in, N_out) int.
+    Returns (out_spikes u8 (T,B,N_out), v_trace i32 (T,B,N_out), v_final i32).
+    """
+    T, B, _ = spikes_t.shape
+    n_out = w_q.shape[1]
+    v0 = jnp.full((B, n_out), v_rest, jnp.int32)
+    en0 = jnp.ones((B, n_out), bool)
+
+    def step(carry, s_t):
+        v, en = carry
+        cur = jnp.dot(s_t.astype(jnp.int32), w_q.astype(jnp.int32))
+        cur = jnp.where(en, cur, 0)
+        v_int = jnp.clip(v + cur, v_min, v_max)
+        v_leak = v_int - (v_int >> decay_shift)
+        fired = jnp.logical_and(v_leak >= v_threshold, en)
+        v_new = jnp.where(fired, jnp.int32(v_rest), v_leak)
+        v_new = jnp.where(en, v_new, v)
+        if active_pruning:
+            en = jnp.logical_and(en, jnp.logical_not(fired))
+        return (v_new, en), (fired.astype(jnp.uint8), v_new)
+
+    (v_f, _), (spk, vtr) = jax.lax.scan(step, (v0, en0), spikes_t)
+    return spk, vtr, v_f
+
+
+def spike_matmul_ref(spikes: jax.Array, w_q: jax.Array) -> jax.Array:
+    """Binary-spike × integer-weight contraction with int32 accumulation.
+
+    spikes: (B, N_in) in {0,1}; w_q: (N_in, N_out) int. Returns (B, N_out) i32.
+    """
+    return jnp.dot(spikes.astype(jnp.int32), w_q.astype(jnp.int32))

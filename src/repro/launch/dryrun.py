@@ -1,0 +1,292 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each live cell this builds the REAL jitted step (train_step including
+the optimizer update for train shapes; prefill / decode_step for serving
+shapes) with production in/out shardings, lowers it against
+ShapeDtypeStruct inputs (no allocation), compiles it, and records:
+
+  * memory_analysis  — per-device argument/output/temp bytes (proves fit),
+  * cost_analysis    — per-device HLO FLOPs and bytes accessed,
+  * collective bytes — parsed from the partitioned HLO, per collective op
+    kind (all-gather / all-reduce / reduce-scatter / all-to-all /
+    collective-permute), with ring-traffic multipliers,
+
+into one JSON per cell under --out.  benchmarks/roofline.py consumes these.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun                 # everything
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-4b --shape train_4k --mesh multi
+"""
+
+import argparse
+import json
+import re
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import SHAPES, cell_is_live, get_config, list_archs
+from ..distributed.partition import (batch_specs, cache_specs, param_specs,
+                                     to_shardings, train_state_specs)
+from ..distributed.sharding import make_rules, use_rules
+from ..serve.engine import ServeState, make_decode_step, make_prefill
+from ..train.step import TrainSettings, init_state, make_train_step
+from .mesh import make_production_mesh
+from .specs import (abstract_params, decode_state_spec, num_microbatches,
+                    prefill_inputs, train_inputs)
+
+__all__ = ["run_cell", "main"]
+
+_DTYPE_BYTES = {
+    "pred": 0.125, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2,
+    "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(pred|bf16|f16|f32|f64|s8|s16|s32|s64|u8|u16|u32|u64|c64|c128)\[([\d,]*)\]")
+_COLL_RE = re.compile(
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+
+
+def _shape_bytes(m: re.Match) -> float:
+    dt, dims = m.groups()
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dt]
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-device collective traffic by op kind, from partitioned HLO.
+
+    Convention: bytes = max(result bytes, operand bytes) per op — covers
+    both all-gather (result is the big side) and reduce-scatter (operand
+    is); all-reduce counts 2× (ring reduce-scatter + all-gather).
+    """
+    out = {k: 0.0 for k in ("all-gather", "all-reduce", "reduce-scatter",
+                            "all-to-all", "collective-permute")}
+    counts = dict.fromkeys(out, 0)
+    for line in hlo_text.splitlines():
+        mo = _COLL_RE.search(line)
+        if not mo or "-done" in line.split("=")[0]:
+            continue
+        kind = mo.group(1)
+        shapes = _SHAPE_RE.findall(line)
+        if not shapes:
+            continue
+        head = line.split(mo.group(0))[0]
+        res = sum(_shape_bytes(m) for m in _SHAPE_RE.finditer(head))
+        total = sum(_shape_bytes(m) for m in _SHAPE_RE.finditer(line))
+        opnd = total - res
+        b = max(res, opnd)
+        if kind == "all-reduce":
+            b *= 2.0
+        out[kind] += b
+        counts[kind] += 1
+    out["total"] = sum(out.values())
+    out["counts"] = counts
+    return out
+
+
+def _bf16_params(params_sds):
+    def one(l):
+        dt = jnp.bfloat16 if jnp.issubdtype(l.dtype, jnp.floating) else l.dtype
+        return jax.ShapeDtypeStruct(l.shape, dt)
+    return jax.tree.map(one, params_sds)
+
+
+def build_cell(arch: str, shape_name: str, mesh, rules):
+    """Returns (jitted, example_args) for the cell — not yet lowered."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    data_ways = 1
+    for ax in ("pod", "data"):
+        if ax in mesh.axis_names:
+            data_ways *= mesh.shape[ax]
+
+    if shape.kind == "train":
+        nm = num_microbatches(cfg, shape, data_ways)
+        accum = "bfloat16" if cfg.param_count() > 150e9 else "float32"
+        settings = TrainSettings(num_microbatches=nm, accum_dtype=accum,
+                                 cast_params="bfloat16")
+        state_sds = jax.eval_shape(
+            lambda k: init_state(k, cfg, settings),
+            jax.ShapeDtypeStruct((2,), jnp.uint32))
+        batch_sds = train_inputs(cfg, shape)
+        st_specs = train_state_specs(cfg, cfg.optimizer, state_sds)
+        st_sh = to_shardings(mesh, rules, st_specs, state_sds)
+        b_sh = to_shardings(mesh, rules, batch_specs(batch_sds), batch_sds)
+        step = make_train_step(cfg, settings,
+                               grad_shardings=st_sh.params)
+        jitted = jax.jit(step, in_shardings=(st_sh, b_sh),
+                         out_shardings=(st_sh, None), donate_argnums=(0,))
+        return jitted, (state_sds, batch_sds), {"num_microbatches": nm}
+
+    params_sds = _bf16_params(abstract_params(cfg))
+    p_specs = param_specs(cfg, params_sds)
+    p_sh = to_shardings(mesh, rules, p_specs, params_sds)
+
+    if shape.kind == "prefill":
+        batch_sds = prefill_inputs(cfg, shape)
+        b_sh = to_shardings(mesh, rules, batch_specs(batch_sds), batch_sds)
+        prefill = make_prefill(cfg, max_len=shape.seq_len)
+        jitted = jax.jit(prefill, in_shardings=(p_sh, b_sh))
+        return jitted, (params_sds, batch_sds), {}
+
+    # decode
+    state_sds = decode_state_spec(cfg, shape)
+    c_specs = cache_specs(cfg, state_sds.cache, decode=True)
+    vec = ("batch",)
+    st_specs = ServeState(cache=c_specs, cur_len=vec, last_token=vec,
+                          done=vec)
+    st_sh = to_shardings(mesh, rules, st_specs, state_sds)
+    decode = make_decode_step(cfg)
+    jitted = jax.jit(decode, in_shardings=(p_sh, st_sh),
+                     out_shardings=(st_sh, None), donate_argnums=(1,))
+    return jitted, (params_sds, state_sds), {}
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             *, save_hlo: str | None = None, hlo_dir: str | None = None,
+             sequence_parallel: bool | None = None) -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    # SP shards the residual stream over "model" between layer blocks —
+    # it divides the remat-saved activation stash by the TP degree
+    # (Megatron-SP), which is what lets the ≥100B training cells fit.
+    if sequence_parallel is None:
+        sequence_parallel = SHAPES[shape_name].kind == "train"
+    # Serving: keep params TP-sharded but REPLICATED over data when the
+    # bf16 copy fits (≤4 GiB/chip) — removes the per-block FSDP all-gather
+    # from every decode step (§Perf: was the dominant collective on small/
+    # mid archs). Giants keep ZeRO-inference gathers.
+    fsdp = True
+    if SHAPES[shape_name].kind != "train":
+        cfg_ = get_config(arch)
+        tp = mesh.shape.get("model", 1)
+        fsdp = cfg_.param_count() * 2 / tp > 4e9
+    rules = make_rules(mesh, fsdp=fsdp, sequence_parallel=sequence_parallel)
+    t0 = time.time()
+    with mesh, use_rules(rules):
+        jitted, args, extra = build_cell(arch, shape_name, mesh, rules)
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+        mem = compiled.memory_analysis()
+        ca = compiled.cost_analysis()
+        ca = ca[0] if isinstance(ca, list) else ca
+        hlo = compiled.as_text()
+        coll = collective_bytes(hlo)
+        # trip-count-aware per-device cost (XLA's cost_analysis counts
+        # while bodies once; hlo_cost multiplies by static trip counts)
+        from .hlo_cost import hlo_cost
+        hc = hlo_cost(hlo)
+        if save_hlo:
+            with open(save_hlo, "w") as f:
+                f.write(hlo)
+        if hlo_dir:
+            import gzip
+            os.makedirs(hlo_dir, exist_ok=True)
+            tag = f"{arch}.{shape_name}.{'multi' if multi_pod else 'single'}"
+            with gzip.open(os.path.join(hlo_dir, tag + ".hlo.gz"), "wt") as f:
+                f.write(hlo)
+
+    n_dev = mesh.devices.size
+    rec = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "multi" if multi_pod else "single",
+        "devices": n_dev,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "peak_bytes": (mem.argument_size_in_bytes
+                           + mem.output_size_in_bytes
+                           + mem.temp_size_in_bytes
+                           - mem.alias_size_in_bytes),
+        },
+        "cost": {
+            # raw XLA numbers (loop bodies counted once — underestimates)
+            "xla_flops_per_device": ca.get("flops", 0.0),
+            "xla_bytes_per_device": ca.get("bytes accessed", 0.0),
+            # trip-count-corrected (the numbers the roofline uses)
+            "flops_per_device": hc.flops,
+            "bytes_per_device": hc.bytes,
+        },
+        "collectives_per_device": dict(hc.collectives,
+                                       total=hc.collective_total),
+        "collectives_body_once": coll,
+        **extra,
+    }
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="both")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--save-hlo", default=None,
+                    help="dump partitioned HLO text to this path")
+    ap.add_argument("--hlo-dir", default="results/hlo",
+                    help="archive gzipped partitioned HLO per cell (enables "
+                         "offline re-costing without recompiling)")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args(argv)
+
+    archs = [args.arch] if args.arch else \
+        [a for a in list_archs() if get_config(a).family != "snn"]
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    os.makedirs(args.out, exist_ok=True)
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            if not cell_is_live(arch, shape):
+                print(f"SKIP  {arch} × {shape} (long-context n/a, DESIGN §7)")
+                continue
+            for mp in meshes:
+                tag = f"{arch}.{shape}.{'multi' if mp else 'single'}"
+                path = os.path.join(args.out, tag + ".json")
+                if os.path.exists(path) and not args.force:
+                    print(f"CACHED {tag}")
+                    continue
+                try:
+                    rec = run_cell(arch, shape, mp, save_hlo=args.save_hlo,
+                                   hlo_dir=args.hlo_dir)
+                    with open(path, "w") as f:
+                        json.dump(rec, f, indent=1)
+                    gb = rec["memory"]["peak_bytes"] / 2**30
+                    print(f"OK    {tag}: peak {gb:.2f} GiB/dev, "
+                          f"{rec['cost']['flops_per_device']:.3g} flops/dev, "
+                          f"compile {rec['compile_s']}s", flush=True)
+                except Exception as e:  # noqa: BLE001 — report & continue
+                    failures.append((tag, repr(e)))
+                    print(f"FAIL  {tag}: {e!r}", flush=True)
+    if failures:
+        print(f"\n{len(failures)} failures:")
+        for t, e in failures:
+            print(" ", t, e[:200])
+        sys.exit(1)
+    print("\nall requested cells compiled")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""Offline re-costing: recompute the cost fields of dry-run JSONs from the
+archived gzipped HLO (results/hlo/) without recompiling anything.
+
+  PYTHONPATH=src python -m repro.launch.recost --out results/dryrun --hlo results/hlo
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import gzip
+import json
+import os
+
+from .hlo_cost import hlo_cost
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--hlo", default="results/hlo")
+    args = ap.parse_args(argv)
+
+    n = 0
+    for jpath in sorted(glob.glob(os.path.join(args.out, "*.json"))):
+        tag = os.path.basename(jpath)[:-5]
+        hpath = os.path.join(args.hlo, tag + ".hlo.gz")
+        if not os.path.exists(hpath):
+            print(f"no HLO for {tag}; skip")
+            continue
+        with gzip.open(hpath, "rt") as f:
+            hc = hlo_cost(f.read())
+        rec = json.load(open(jpath))
+        rec["cost"]["flops_per_device"] = hc.flops
+        rec["cost"]["bytes_per_device"] = hc.bytes
+        rec["collectives_per_device"] = dict(hc.collectives,
+                                             total=hc.collective_total)
+        with open(jpath, "w") as f:
+            json.dump(rec, f, indent=1)
+        n += 1
+        print(f"recosted {tag}: flops/dev={hc.flops:.3g} "
+              f"coll/dev={hc.collective_total:.3g}")
+    print(f"{n} cells recosted")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,88 @@
+"""Abstract input/state specs for every (arch × shape) dry-run cell.
+
+``input_specs(cfg, shape)`` returns ShapeDtypeStruct stand-ins for every
+model input — weak-type-correct, shardable, zero device allocation.  The
+modality frontends are stubs per the assignment: audio/vision cells receive
+precomputed frame/patch embeddings.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig, ShapeConfig
+from ..models.transformer import init_cache
+from ..serve.engine import ServeState
+
+__all__ = ["train_inputs", "prefill_inputs", "decode_state_spec",
+           "abstract_params", "num_microbatches"]
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _token_inputs(cfg: ArchConfig, b: int, s: int, *, labels: bool) -> dict:
+    d: dict = {}
+    if cfg.frontend == "vision":
+        p = min(cfg.num_patches, s - 1)
+        d["patches"] = _sds((b, p, cfg.d_model), jnp.bfloat16)
+        d["tokens"] = _sds((b, s - p), jnp.int32)
+        if labels:
+            d["labels"] = _sds((b, s), jnp.int32)
+        return d
+    if cfg.is_encdec:
+        d["frames"] = _sds((b, cfg.encoder_seq, cfg.d_model), jnp.bfloat16)
+    d["tokens"] = _sds((b, s), jnp.int32)
+    if labels:
+        d["labels"] = _sds((b, s), jnp.int32)
+    return d
+
+
+def train_inputs(cfg: ArchConfig, shape: ShapeConfig) -> dict:
+    return _token_inputs(cfg, shape.global_batch, shape.seq_len, labels=True)
+
+
+def prefill_inputs(cfg: ArchConfig, shape: ShapeConfig) -> dict:
+    return _token_inputs(cfg, shape.global_batch, shape.seq_len, labels=False)
+
+
+def decode_state_spec(cfg: ArchConfig, shape: ShapeConfig) -> ServeState:
+    """Abstract ServeState with a max_len = shape.seq_len cache."""
+    b, s = shape.global_batch, shape.seq_len
+    cache = jax.eval_shape(
+        lambda: init_cache(cfg, b, s, dtype=jnp.bfloat16))
+    return ServeState(
+        cache=cache,
+        cur_len=_sds((b,), jnp.int32),
+        last_token=_sds((b,), jnp.int32),
+        done=_sds((b,), jnp.bool_),
+    )
+
+
+def abstract_params(cfg: ArchConfig):
+    from ..models.transformer import lm_init
+    key = jax.eval_shape(lambda: jax.random.PRNGKey(0))
+    return jax.eval_shape(lambda k: lm_init(k, cfg),
+                          jax.ShapeDtypeStruct((2,), jnp.uint32))
+
+
+def num_microbatches(cfg: ArchConfig, shape: ShapeConfig,
+                     data_ways: int) -> int:
+    """Grad-accum depth: targets ≈1-4 sequences per data shard/microbatch."""
+    per_shard = max(shape.global_batch // data_ways, 1)
+    n = cfg.param_count()
+    # §Perf iteration: per_mb 1→2 for ≥150B halves the number of FSDP
+    # parameter regathers (the dominant collective) at ~2× activation
+    # stash, which SP keeps affordable.
+    if n > 150e9:
+        per_mb = 2
+    elif n > 20e9:
+        per_mb = 2
+    else:
+        per_mb = 4
+    nm = max(per_shard // per_mb, 1)
+    while shape.global_batch % (nm * data_ways) and nm > 1:
+        nm -= 1
+    return nm

@@ -1,0 +1,280 @@
+"""Grouped-query attention with the features the assigned archs need.
+
+Covers: GQA (qwen3/llama3/gemma2/nemotron/dbrx/arctic/jamba/llava), MHA
+(whisper), qk-norm (qwen3), attention-logit softcapping (gemma2), sliding-
+window local layers (gemma2), RoPE, cross-attention (whisper decoder), and
+three execution modes:
+
+  * ``train``    — full causal self-attention, no cache,
+  * ``prefill``  — causal self-attention that also writes the KV cache,
+  * ``decode``   — one-token query against a (possibly sequence-sharded)
+                   KV cache.
+
+TPU/memory strategy: queries are processed in chunks (``q_chunk``) under
+``lax.scan`` (actually lax.map), so the (Sq, Sk) score matrix never
+materialises beyond (q_chunk, Sk) — the jnp-level analogue of flash
+attention's tiling, sized so a chunk's scores fit VMEM-scale working sets.
+Softmax statistics are exact per chunk (each chunk sees all its keys).
+
+Sharding (logical axes; see distributed/sharding.py):
+  train/prefill — q/k/v/scores sharded over "heads"→model,
+  decode        — cache sharded over "kv_seq"→model (flash-decoding style);
+                  GSPMD inserts the small max/sum all-reduces for the
+                  sharded softmax.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.sharding import shard
+from .layers import apply_rope, dense_init, rmsnorm, rope, softcap
+
+__all__ = ["attention_params", "attention", "AttnCache", "init_attn_cache"]
+
+
+class AttnCache(NamedTuple):
+    k: jax.Array      # (B, S_max, KVp, hd)
+    v: jax.Array      # (B, S_max, KVp, hd)
+
+
+def init_attn_cache(batch: int, max_len: int, num_kv: int, head_dim: int,
+                    dtype=jnp.bfloat16) -> AttnCache:
+    z = jnp.zeros((batch, max_len, num_kv, head_dim), dtype)
+    return AttnCache(k=z, v=z)
+
+
+def attention_params(key: jax.Array, cfg, *, cross: bool = False) -> dict:
+    """Weights for one attention block, padded for TP divisibility.
+
+    q: (D, Hp, hd); k/v: (D, KVp, hd); o: (Hp, hd, D).
+    KVp == num_kv_heads unless the layer is MHA (kv == heads), in which case
+    kv pads together with q so the GQA group size stays integral.
+    """
+    d, hd = cfg.d_model, cfg.head_dim
+    hp = cfg.padded_num_heads
+    kvp = hp if cfg.num_kv_heads == cfg.num_heads else cfg.num_kv_heads
+    ks = jax.random.split(key, 6)
+    p = {
+        "wq": dense_init(ks[0], (d, hp, hd)),
+        "wk": dense_init(ks[1], (d, kvp, hd)),
+        "wv": dense_init(ks[2], (d, kvp, hd)),
+        "wo": dense_init(ks[3], (hp, hd, d), in_axis=0),
+    }
+    if cfg.qk_norm and not cross:
+        p["q_norm"] = jnp.zeros((hd,), jnp.float32)
+        p["k_norm"] = jnp.zeros((hd,), jnp.float32)
+    return p
+
+
+def _repeat_kv(x: jax.Array, n_rep: int) -> jax.Array:
+    """(B, S, KV, hd) -> (B, S, KV*n_rep, hd) by repeating each kv head."""
+    if n_rep == 1:
+        return x
+    b, s, kv, hd = x.shape
+    return jnp.broadcast_to(x[:, :, :, None, :], (b, s, kv, n_rep, hd)) \
+              .reshape(b, s, kv * n_rep, hd)
+
+
+def _chunked_scores_attend(q, k, v, *, q_positions, causal: bool,
+                           window: int | None, cap: float | None,
+                           kv_valid_len, q_chunk: int):
+    """Tiled softmax(QKᵀ)V.  q: (B,Sq,H,hd), k/v: (B,Sk,H,hd).
+
+    q_positions: (B, Sq) absolute positions of the queries (for causal and
+    sliding-window masks against key positions 0..Sk-1).
+    kv_valid_len: None or (B,) — keys at index >= valid_len are masked
+    (decode with a pre-allocated cache).
+    """
+    b, sq, h, hd = q.shape
+    sk = k.shape[1]
+    scale = hd ** -0.5
+    kpos = jnp.arange(sk, dtype=jnp.int32)
+
+    def one_chunk(args):
+        qc, qpos = args                       # (B, cq, H, hd), (B, cq)
+        s = jnp.einsum("bqhd,bshd->bhqs", qc.astype(jnp.bfloat16),
+                       k.astype(jnp.bfloat16),
+                       preferred_element_type=jnp.float32) * scale
+        if cap is not None:
+            s = softcap(s, cap)
+        mask = jnp.ones((b, 1, qc.shape[1], sk), bool)
+        if causal:
+            mask &= kpos[None, None, None, :] <= qpos[:, None, :, None]
+        if window is not None:
+            mask &= kpos[None, None, None, :] > (qpos[:, None, :, None] - window)
+        if kv_valid_len is not None:
+            mask &= kpos[None, None, None, :] < kv_valid_len[:, None, None, None]
+        s = jnp.where(mask, s, -1e30)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhqs,bshd->bqhd", p.astype(jnp.bfloat16),
+                       v.astype(jnp.bfloat16),
+                       preferred_element_type=jnp.float32)
+        return o.astype(q.dtype)
+
+    if sq <= q_chunk:
+        return one_chunk((q, q_positions))
+
+    while sq % q_chunk:          # largest divisor ≤ requested chunk
+        q_chunk -= 1
+    nc = sq // q_chunk
+    qs = q.reshape(b, nc, q_chunk, h, hd).transpose(1, 0, 2, 3, 4)
+    ps = q_positions.reshape(b, nc, q_chunk).transpose(1, 0, 2)
+    out = jax.lax.map(one_chunk, (qs, ps))     # (nc, B, cq, H, hd)
+    return out.transpose(1, 0, 2, 3, 4).reshape(b, sq, h, hd)
+
+
+def _gqa_decode_attend(q, k, v, *, n_rep: int, q_positions,
+                       window: int | None, cap: float | None,
+                       kv_valid_len, causal: bool = True):
+    """One-token attention against a sequence-sharded cache, WITHOUT
+    materialising repeated KV heads.
+
+    q: (B, 1, H, hd) with H = KV·n_rep; k/v: (B, S, KV, hd) sharded on S
+    ("kv_seq"→model).  q is reshaped into (KV, group) — scores stay sharded
+    on S, and the softmax over the sharded axis lowers to partial
+    max/sum + tiny all-reduces (flash-decoding).  This replaces a
+    repeat_kv broadcast that forced GSPMD to all-gather the whole cache.
+    """
+    b, _, h, hd = q.shape
+    sk = k.shape[1]
+    kv = k.shape[2]
+    qg = q.reshape(b, kv, n_rep, hd)
+    scale = hd ** -0.5
+
+    s = jnp.einsum("bkgd,bskd->bkgs", qg.astype(jnp.bfloat16),
+                   k.astype(jnp.bfloat16),
+                   preferred_element_type=jnp.float32) * scale
+    if cap is not None:
+        s = softcap(s, cap)
+    kpos = jnp.arange(sk, dtype=jnp.int32)
+    mask = jnp.ones((b, 1, 1, sk), bool)
+    qpos = q_positions[:, 0]
+    if causal:
+        mask &= kpos[None, None, None, :] <= qpos[:, None, None, None]
+    if window is not None:
+        mask &= kpos[None, None, None, :] > (qpos[:, None, None, None] - window)
+    if kv_valid_len is not None:
+        mask &= kpos[None, None, None, :] < kv_valid_len[:, None, None, None]
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bskd->bkgd", p.astype(jnp.bfloat16),
+                   v.astype(jnp.bfloat16),
+                   preferred_element_type=jnp.float32)
+    return o.reshape(b, 1, h, hd).astype(q.dtype)
+
+
+def attention(params: dict, x: jax.Array, *, cfg, mode: str,
+              positions: jax.Array, cache: AttnCache | None = None,
+              cur_len: jax.Array | None = None,
+              layer_window: int | None = None,
+              kv_source: jax.Array | None = None,
+              is_cross: bool = False,
+              rope_enabled: bool = True,
+              q_chunk: int = 1024):
+    """One attention block.
+
+    Args:
+      x: (B, Sq, D) residual-stream input (already normed).
+      mode: "train" | "prefill" | "decode".
+      positions: (B, Sq) absolute positions of x's tokens.
+      cache/cur_len: decode-mode KV cache and (B,) valid lengths;
+        prefill mode returns a fresh cache.
+      layer_window: sliding window size for local layers (None = global).
+      kv_source: if given, keys/values come from this sequence instead of x
+        (cross-attention). Cross K/V are cached at prefill.
+    Returns (out (B,Sq,D), new_cache | None).
+    """
+    hp = cfg.padded_num_heads
+    kvp = hp if cfg.num_kv_heads == cfg.num_heads else cfg.num_kv_heads
+    n_rep = hp // kvp
+    dt = x.dtype
+    cross = is_cross or kv_source is not None
+
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(dt))
+    if cross and mode == "decode":
+        k_new = v_new = None           # cross K/V precomputed at prefill
+    else:
+        src = kv_source if cross else x
+        k_new = jnp.einsum("bsd,dhk->bshk", src, params["wk"].astype(dt))
+        v_new = jnp.einsum("bsd,dhk->bshk", src, params["wv"].astype(dt))
+
+    if "q_norm" in params:
+        q = rmsnorm(q, params["q_norm"])
+        if k_new is not None:
+            k_new = rmsnorm(k_new, params["k_norm"])
+
+    if rope_enabled and not cross:
+        sin, cos = rope(positions, cfg.head_dim, cfg.rope_theta)
+        sin, cos = sin[:, :, None, :], cos[:, :, None, :]
+        q = apply_rope(q, sin, cos)
+        if k_new is not None:
+            kpos = positions if mode != "decode" else positions
+            ksin, kcos = rope(kpos, cfg.head_dim, cfg.rope_theta)
+            k_new = apply_rope(k_new, ksin[:, :, None, :], kcos[:, :, None, :])
+
+    q = shard(q, "batch", None, "heads", None)
+
+    new_cache = None
+    if mode == "decode":
+        assert cache is not None and cur_len is not None
+        if k_new is not None and not cross:
+            # scatter this step's K/V at cur_len: a true scatter (touches
+            # one slot) instead of a one-hot full-cache rewrite — the
+            # decode step's HBM traffic is then the cache READ only.
+            b = x.shape[0]
+            bidx = jnp.arange(b, dtype=jnp.int32)
+            new_cache = AttnCache(
+                k=cache.k.at[bidx, cur_len].set(k_new[:, 0].astype(cache.k.dtype)),
+                v=cache.v.at[bidx, cur_len].set(v_new[:, 0].astype(cache.v.dtype)))
+        else:
+            new_cache = cache
+        k_full = shard(new_cache.k, "batch", "kv_seq", None, None)
+        v_full = shard(new_cache.v, "batch", "kv_seq", None, None)
+        valid = None if cross else cur_len + 1
+        if cross:
+            valid = cur_len * 0 + k_full.shape[1]  # whole encoder context
+        out = _gqa_decode_attend(
+            q, k_full.astype(dt), v_full.astype(dt), n_rep=n_rep,
+            q_positions=positions, window=layer_window,
+            cap=cfg.attn_softcap, kv_valid_len=valid, causal=not cross)
+    else:
+        k_new = shard(k_new, "batch", None, "kv", None)
+        v_new = shard(v_new, "batch", None, "kv", None)
+        k_att = _repeat_kv(k_new, n_rep)
+        v_att = _repeat_kv(v_new, n_rep)
+        out = _chunked_scores_attend(
+            q, k_att, v_att, q_positions=positions,
+            causal=not cross and not (cfg.is_encdec and mode == "train_encoder"),
+            window=layer_window, cap=cfg.attn_softcap,
+            kv_valid_len=None, q_chunk=q_chunk)
+        if mode == "prefill":
+            new_cache = AttnCache(k=shard(k_new, "batch", "kv_seq", None, None),
+                                  v=shard(v_new, "batch", "kv_seq", None, None))
+
+    out = shard(out, "batch", None, "heads", None)
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(dt))
+    return y, new_cache
+
+
+def encoder_attention(params: dict, x: jax.Array, *, cfg,
+                      q_chunk: int = 1024):
+    """Bidirectional self-attention (whisper encoder)."""
+    hp = cfg.padded_num_heads
+    kvp = hp if cfg.num_kv_heads == cfg.num_heads else cfg.num_kv_heads
+    n_rep = hp // kvp
+    dt = x.dtype
+    b, s, _ = x.shape
+    pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"].astype(dt))
+    q = shard(q, "batch", None, "heads", None)
+    out = _chunked_scores_attend(
+        q, _repeat_kv(k, n_rep), _repeat_kv(v, n_rep), q_positions=pos,
+        causal=False, window=None, cap=cfg.attn_softcap,
+        kv_valid_len=None, q_chunk=q_chunk)
+    return jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(dt))

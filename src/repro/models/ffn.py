@@ -1,0 +1,142 @@
+"""Feed-forward blocks: gated/ungated dense MLP and capacity-based MoE.
+
+Dense: silu/gelu configs use the gated (w1·act ⊙ w3)·w2 form (llama/qwen/
+gemma); squared-relu (nemotron) and relu use the 2-matrix form.
+
+MoE (dbrx 16e top-4, arctic 128e top-2 + dense residual, jamba 16e top-2):
+token-choice top-k routing with per-group expert capacity, realised as the
+GSPMD-canonical dispatch/combine einsums (Switch/GLaM style):
+
+    tokens are viewed as (G groups × Sg tokens), G sharded over the data
+    axes, experts sharded over "model" (EP).  dispatch (G,Sg,E,C) routes
+    tokens into per-expert capacity slots — the (gsec,gsd->egcd) einsum IS
+    the all-to-all in GSPMD — experts run dense matmuls on their (G,C)
+    slots, and combine brings results back weighted by router probs.
+
+Group size bounds the dispatch-mask memory (k·cf·Sg² per group); overflow
+tokens beyond capacity are dropped (standard; the residual stream carries
+them).  Capacity is rounded up to a multiple of 4 for lane alignment.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.sharding import shard
+from .layers import activation_fn, dense_init
+
+__all__ = ["ffn_params", "ffn_apply", "moe_params", "moe_apply", "is_gated"]
+
+
+def is_gated(activation: str) -> bool:
+    return activation in ("silu", "gelu")
+
+
+def ffn_params(key: jax.Array, cfg, d_ff: int | None = None) -> dict:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    p = {"w1": dense_init(ks[0], (d, f)), "w2": dense_init(ks[1], (f, d))}
+    if is_gated(cfg.activation):
+        p["w3"] = dense_init(ks[2], (d, f))
+    return p
+
+
+def ffn_apply(params: dict, x: jax.Array, cfg) -> jax.Array:
+    dt = x.dtype
+    act = activation_fn(cfg.activation)
+    h = act(x @ params["w1"].astype(dt))
+    if "w3" in params:
+        h = h * (x @ params["w3"].astype(dt))
+    h = shard(h, "batch", None, "mlp")
+    return h @ params["w2"].astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Mixture of Experts
+# ---------------------------------------------------------------------------
+
+def moe_params(key: jax.Array, cfg) -> dict:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.moe_num_experts
+    ks = jax.random.split(key, 4)
+    p = {
+        "router": dense_init(ks[0], (d, e)),
+        "w1": dense_init(ks[1], (e, d, f), in_axis=1),
+        "w2": dense_init(ks[2], (e, f, d), in_axis=1),
+    }
+    if is_gated(cfg.activation):
+        p["w3"] = dense_init(ks[3], (e, d, f), in_axis=1)
+    return p
+
+
+def _capacity(sg: int, top_k: int, num_experts: int, factor: float) -> int:
+    c = int(sg * top_k * factor / num_experts) + 1
+    return max(4, (c + 3) // 4 * 4)
+
+
+def moe_apply(params: dict, x: jax.Array, cfg, *, group_size: int = 1024):
+    """x: (B, S, D) -> (B, S, D), plus aux losses dict.
+
+    Returns (y, aux) where aux = {"lb_loss": load-balance loss (Switch),
+    "router_z": router z-loss} — added to the training objective.
+    """
+    dt = x.dtype
+    b, s, d = x.shape
+    e, k = cfg.moe_num_experts, cfg.moe_top_k
+    tokens = b * s
+    sg = min(group_size, s)
+    assert tokens % sg == 0, (tokens, sg)
+    g = tokens // sg
+    c = _capacity(sg, k, e, cfg.moe_capacity_factor)
+
+    xg = x.reshape(g, sg, d)
+    xg = shard(xg, "batch", None, None)
+
+    logits = (xg.astype(jnp.float32) @ params["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                     # (G,Sg,E)
+
+    # top-k choice per token
+    top_p, top_e = jax.lax.top_k(probs, k)                      # (G,Sg,k)
+    top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)      # renormalise
+
+    # position of each (token, choice) in its expert's capacity buffer:
+    # rank among all choices of the same expert within the group, in
+    # (token-major, choice-minor) priority order.
+    choice_eh = jax.nn.one_hot(top_e, e, dtype=jnp.int32)       # (G,Sg,k,E)
+    flat = choice_eh.reshape(g, sg * k, e)
+    pos_in_expert = jnp.cumsum(flat, axis=1) - flat             # (G,Sg*k,E)
+    pos = jnp.sum(flat * pos_in_expert, axis=-1).reshape(g, sg, k)
+    keep = pos < c                                              # capacity drop
+
+    # dispatch/combine tensors (G,Sg,E,C)
+    pos_oh = jax.nn.one_hot(pos, c, dtype=dt)                   # (G,Sg,k,C)
+    disp_k = choice_eh.astype(dt)[..., None] * pos_oh[..., None, :] \
+        * keep[..., None, None].astype(dt)                      # (G,Sg,k,E,C)
+    dispatch = jnp.sum(disp_k, axis=2)                          # (G,Sg,E,C)
+    combine = jnp.sum(disp_k * top_p[..., None, None].astype(dt), axis=2)
+
+    dispatch = shard(dispatch, "batch", None, "experts", None)
+    combine = shard(combine, "batch", None, "experts", None)
+
+    # the dispatch einsum == all-to-all under (G→data, E→model) sharding
+    ein = jnp.einsum("gsec,gsd->egcd", dispatch, xg)            # (E,G,C,D)
+    ein = shard(ein, "experts", "batch", None, None)
+
+    act = activation_fn(cfg.activation)
+    h = act(jnp.einsum("egcd,edf->egcf", ein, params["w1"].astype(dt)))
+    if "w3" in params:
+        h = h * jnp.einsum("egcd,edf->egcf", ein, params["w3"].astype(dt))
+    h = shard(h, "experts", "batch", None, None)   # E already owns "model"
+    out_e = jnp.einsum("egcf,efd->egcd", h, params["w2"].astype(dt))
+    out_e = shard(out_e, "experts", "batch", None, None)
+
+    y = jnp.einsum("gsec,egcd->gsd", combine, out_e)            # back to tokens
+    y = y.reshape(b, s, d)
+
+    # Switch-style load-balance loss + router z-loss
+    me = jnp.mean(probs, axis=(0, 1))                           # (E,)
+    ce = jnp.mean(jnp.sum(jax.nn.one_hot(top_e[..., 0], e), axis=-2)
+                  / sg, axis=0)                                 # fraction routed
+    lb = e * jnp.sum(me * ce)
+    zl = jnp.mean(jax.scipy.special.logsumexp(logits, axis=-1) ** 2)
+    return y, {"lb_loss": lb, "router_z": zl}

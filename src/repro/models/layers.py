@@ -1,0 +1,81 @@
+"""Shared model primitives: norms, rotary, activations, initializers.
+
+All functions are pure; parameters are plain dict pytrees.  Compute dtype is
+controlled by the caller (configs default to bf16 compute / fp32 params).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.sharding import shard
+
+__all__ = [
+    "rmsnorm", "layernorm", "rope", "apply_rope", "activation_fn",
+    "dense_init", "embed_init", "softcap",
+]
+
+
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps)
+    # gemma-style (1+scale); configs store scale-1 so zero-init is identity
+    return (out * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def layernorm(x: jax.Array, scale: jax.Array, bias: jax.Array,
+              eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    out = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (out * scale + bias).astype(dt)
+
+
+def softcap(x: jax.Array, cap: float) -> jax.Array:
+    """Gemma-2 logit soft-capping: cap·tanh(x/cap)."""
+    return cap * jnp.tanh(x / cap)
+
+
+def rope(positions: jax.Array, head_dim: int, theta: float) -> tuple[jax.Array, jax.Array]:
+    """Rotary tables for given positions: returns (sin, cos) of shape (..., hd/2)."""
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # (..., half)
+    return jnp.sin(ang), jnp.cos(ang)
+
+
+def apply_rope(x: jax.Array, sin: jax.Array, cos: jax.Array) -> jax.Array:
+    """x: (..., heads, head_dim); sin/cos: broadcastable (..., 1, hd/2)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def activation_fn(name: str):
+    if name == "silu":
+        return jax.nn.silu
+    if name == "gelu":
+        return jax.nn.gelu
+    if name == "squared_relu":   # nemotron-4
+        return lambda x: jnp.square(jax.nn.relu(x))
+    if name == "relu":
+        return jax.nn.relu
+    raise ValueError(f"unknown activation {name}")
+
+
+def dense_init(key: jax.Array, shape: tuple[int, ...], in_axis: int = 0,
+               dtype=jnp.float32) -> jax.Array:
+    """Truncated-normal fan-in init (MaxText-style scale)."""
+    fan_in = shape[in_axis]
+    std = (1.0 / fan_in) ** 0.5
+    return (std * jax.random.truncated_normal(key, -2, 2, shape)).astype(dtype)
+
+
+def embed_init(key: jax.Array, vocab: int, dim: int, dtype=jnp.float32) -> jax.Array:
+    return (jax.random.normal(key, (vocab, dim)) * 0.02).astype(dtype)

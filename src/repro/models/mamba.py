@@ -1,0 +1,244 @@
+"""Mamba-2 (SSD, state-space duality) mixer — mamba2-1.3b and jamba layers.
+
+Chunked SSD forward for train/prefill (quadratic within a chunk, linear
+recurrence across chunks) and an O(1)-state decode step.  The cross-chunk
+recurrence is the same leaky-integrator scan as the paper's LIF neuron
+(DESIGN.md §6): state ← decay·state + input-drive, here with input-dependent
+decay, run under ``lax.scan`` with the state resident — the identical
+blocking strategy the LIF Pallas kernel uses.
+
+Projections are separate matrices per component (z, x, B, C, dt) instead of
+one fused in_proj: mathematically identical, and it keeps every matmul
+output sharded on a single clean logical axis (inner dims → "model" TP;
+B/C at N≈128 are replicated).
+
+Shapes: d_inner = expand·d_model, H = d_inner/head_dim heads, N = ssm_state.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.sharding import shard
+from .layers import dense_init, rmsnorm
+
+__all__ = ["mamba_params", "mamba_apply", "mamba_decode_step", "MambaCache",
+           "init_mamba_cache", "ssd_chunked"]
+
+
+class MambaCache(NamedTuple):
+    ssm: jax.Array        # (B, H, P, N) state
+    conv_x: jax.Array     # (B, W-1, d_inner) conv tail for x
+    conv_b: jax.Array     # (B, W-1, N)
+    conv_c: jax.Array     # (B, W-1, N)
+
+
+def init_mamba_cache(batch: int, cfg, dtype=jnp.float32) -> MambaCache:
+    h, p, n = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    w = cfg.ssm_conv
+    return MambaCache(
+        ssm=jnp.zeros((batch, h, p, n), jnp.float32),
+        conv_x=jnp.zeros((batch, w - 1, cfg.d_inner), dtype),
+        conv_b=jnp.zeros((batch, w - 1, n), dtype),
+        conv_c=jnp.zeros((batch, w - 1, n), dtype),
+    )
+
+
+def mamba_params(key: jax.Array, cfg) -> dict:
+    d, di, n, h, w = (cfg.d_model, cfg.d_inner, cfg.ssm_state,
+                      cfg.ssm_heads, cfg.ssm_conv)
+    ks = jax.random.split(key, 10)
+    return {
+        "wz": dense_init(ks[0], (d, di)),
+        "wx": dense_init(ks[1], (d, di)),
+        "wb": dense_init(ks[2], (d, n)),
+        "wc": dense_init(ks[3], (d, n)),
+        "wdt": dense_init(ks[4], (d, h)),
+        "conv_x": dense_init(ks[5], (w, di), in_axis=0),
+        "conv_b": dense_init(ks[6], (w, n), in_axis=0),
+        "conv_c": dense_init(ks[7], (w, n), in_axis=0),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, h, dtype=jnp.float32)),
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.logspace(-3, -0.7, h, dtype=jnp.float32))),  # dt in [1e-3,0.2]
+        "norm": jnp.zeros((di,), jnp.float32),
+        "out": dense_init(ks[8], (di, d)),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, tail: jax.Array | None = None):
+    """Depthwise causal conv as a sum of shifts (window is tiny: 4).
+
+    x: (B, S, C); w: (W, C); tail: (B, W-1, C) state from the previous
+    segment (zeros for a fresh sequence).  Returns (y (B,S,C), new_tail).
+    """
+    bw = w.shape[0]
+    if tail is None:
+        tail = jnp.zeros((x.shape[0], bw - 1, x.shape[2]), x.dtype)
+    ext = jnp.concatenate([tail, x], axis=1)          # (B, S+W-1, C)
+    s = x.shape[1]
+    y = sum(ext[:, i:i + s, :] * w[i][None, None, :] for i in range(bw))
+    return jax.nn.silu(y), ext[:, -(bw - 1):, :] if bw > 1 else tail
+
+
+def _segsum(a: jax.Array) -> jax.Array:
+    """Stable 'segment sum': out[..., i, j] = sum a[..., j+1..i], -inf for j>i.
+
+    a: (..., L). Returns (..., L, L) lower-triangular log-decay matrix.
+    """
+    L = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]        # sum over (j, i]
+    mask = jnp.tril(jnp.ones((L, L), bool), k=0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x: jax.Array, a: jax.Array, b: jax.Array, c: jax.Array,
+                chunk: int, h0: jax.Array | None = None):
+    """SSD: y[t] = Σ_{s≤t} c[t]ᵀ (Π_{r∈(s,t]} exp(a[r])) b[s] x[s]  per head.
+
+    x: (B,S,H,P) — inputs already scaled by dt;
+    a: (B,S,H)   — log-decay per step (dt·A, negative);
+    b, c: (B,S,N) — input/output mixing (shared across heads, ngroups=1);
+    h0: optional (B,H,P,N) initial state.
+    Returns (y (B,S,H,P), h_final (B,H,P,N)).
+    """
+    B, S, H, P = x.shape
+    N = b.shape[-1]
+    S_in = S
+    pad = (-S) % chunk
+    if pad:
+        # decay-neutral padding: a=0 (no decay), x=b=c=0 (no drive/readout)
+        # keeps h_final exact for the unpadded prefix.
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0)))
+        S = S + pad
+    nc = S // chunk
+
+    xc = x.reshape(B, nc, chunk, H, P)
+    ac = a.reshape(B, nc, chunk, H).transpose(0, 1, 3, 2)     # (B,nc,H,L)
+    bc = b.reshape(B, nc, chunk, N)
+    cc = c.reshape(B, nc, chunk, N)
+
+    # within-chunk (diagonal block) term
+    Lmat = jnp.exp(_segsum(ac))                               # (B,nc,H,L,L)
+    y_diag = jnp.einsum("bzln,bzsn,bzhls,bzshp->bzlhp",
+                        cc, bc, Lmat, xc)
+
+    # per-chunk end-states and decays
+    a_cum = jnp.cumsum(ac, axis=-1)                           # (B,nc,H,L)
+    a_tot = a_cum[..., -1]                                    # (B,nc,H)
+    decay_states = jnp.exp(a_tot[..., None] - a_cum)          # (B,nc,H,L)
+    states = jnp.einsum("bzln,bzhl,bzlhp->bzhpn",
+                        bc, decay_states, xc)                 # (B,nc,H,P,N)
+
+    # cross-chunk leaky-integrator recurrence (the LIF-shaped scan)
+    def step(h, inp):
+        st, at = inp                                          # (B,H,P,N),(B,H)
+        h_new = h * jnp.exp(at)[..., None, None] + st
+        return h_new, h                                        # emit state *before* chunk
+
+    h_init = (jnp.zeros((B, H, P, N), x.dtype) if h0 is None
+              else h0.astype(x.dtype))
+    states_t = states.transpose(1, 0, 2, 3, 4)                # (nc,B,H,P,N)
+    atot_t = a_tot.transpose(1, 0, 2)                         # (nc,B,H)
+    h_final, h_prev = jax.lax.scan(step, h_init, (states_t, atot_t))
+    h_prev = h_prev.transpose(1, 0, 2, 3, 4)                  # (B,nc,H,P,N)
+
+    # contribution of carried-in state to each chunk
+    y_off = jnp.einsum("bzln,bzhpn,bzhl->bzlhp",
+                       cc, h_prev, jnp.exp(a_cum))
+    y = (y_diag + y_off).reshape(B, S, H, P)
+    return y[:, :S_in], h_final
+
+
+def _project(params, u, dt):
+    z = u @ params["wz"].astype(dt)
+    x = u @ params["wx"].astype(dt)
+    b = u @ params["wb"].astype(dt)
+    c = u @ params["wc"].astype(dt)
+    delta = u @ params["wdt"].astype(dt)
+    return z, x, b, c, delta
+
+
+def mamba_apply(params: dict, u: jax.Array, cfg, *,
+                cache: MambaCache | None = None, want_cache: bool = False):
+    """Full-sequence mixer (train / prefill). u: (B, S, D) normed input.
+
+    Returns (y (B,S,D), new_cache | None).
+    """
+    dt = u.dtype
+    B, S, _ = u.shape
+    H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+
+    z, x, b, c, delta = _project(params, u, dt)
+    x = shard(x, "batch", None, "mlp")
+    x, tail_x = _causal_conv(x, params["conv_x"].astype(dt),
+                             cache.conv_x if cache else None)
+    b, tail_b = _causal_conv(b, params["conv_b"].astype(dt),
+                             cache.conv_b if cache else None)
+    c, tail_c = _causal_conv(c, params["conv_c"].astype(dt),
+                             cache.conv_c if cache else None)
+
+    delta = jax.nn.softplus(delta.astype(jnp.float32)
+                            + params["dt_bias"][None, None, :])
+    a = -jnp.exp(params["A_log"])[None, None, :]              # (1,1,H)
+    a_log_step = (delta * a)                                  # (B,S,H) fp32
+
+    xh_raw = x.reshape(B, S, H, P).astype(jnp.float32)
+    xh = shard(xh_raw * delta[..., None], "batch", None, "heads", None)
+    y, h_final = ssd_chunked(xh, a_log_step,
+                             b.astype(jnp.float32), c.astype(jnp.float32),
+                             cfg.ssm_chunk,
+                             cache.ssm if cache else None)
+    y = y + params["D"][None, None, :, None] * xh_raw   # skip connection
+    y = y.reshape(B, S, cfg.d_inner).astype(dt)
+    y = rmsnorm(y * jax.nn.silu(z), params["norm"])
+    out = y @ params["out"].astype(dt)
+
+    new_cache = None
+    if want_cache:
+        new_cache = MambaCache(ssm=h_final.astype(jnp.float32),
+                               conv_x=tail_x, conv_b=tail_b, conv_c=tail_c)
+    return out, new_cache
+
+
+def mamba_decode_step(params: dict, u: jax.Array, cfg, cache: MambaCache):
+    """One-token decode. u: (B, 1, D). Returns (y (B,1,D), new_cache)."""
+    dt = u.dtype
+    B = u.shape[0]
+    H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    w = cfg.ssm_conv
+
+    z, x, b, c, delta = _project(params, u, dt)
+
+    def conv_step(xt, tail, wconv):
+        ext = jnp.concatenate([tail, xt], axis=1)             # (B, W, C)
+        y = jnp.einsum("bwc,wc->bc", ext, wconv.astype(dt))
+        return jax.nn.silu(y)[:, None, :], ext[:, 1:, :]
+
+    x, tail_x = conv_step(x, cache.conv_x, params["conv_x"])
+    b, tail_b = conv_step(b, cache.conv_b, params["conv_b"])
+    c, tail_c = conv_step(c, cache.conv_c, params["conv_c"])
+
+    delta = jax.nn.softplus(delta[:, 0].astype(jnp.float32)
+                            + params["dt_bias"][None, :])      # (B,H)
+    a = -jnp.exp(params["A_log"])[None, :]                     # (1,H)
+    da = jnp.exp(delta * a)                                    # (B,H)
+
+    xh = x[:, 0].reshape(B, H, P).astype(jnp.float32)          # (B,H,P)
+    bf = b[:, 0].astype(jnp.float32)                           # (B,N)
+    cf = c[:, 0].astype(jnp.float32)
+    drive = jnp.einsum("bhp,bn->bhpn", xh * delta[..., None], bf)
+    h_new = cache.ssm * da[..., None, None] + drive
+    y = jnp.einsum("bhpn,bn->bhp", h_new, cf) + params["D"][None, :, None] * xh
+    y = y.reshape(B, 1, cfg.d_inner).astype(dt)
+    y = rmsnorm(y * jax.nn.silu(z), params["norm"])
+    out = y @ params["out"].astype(dt)
+    return out, MambaCache(ssm=h_new, conv_x=tail_x, conv_b=tail_b,
+                           conv_c=tail_c)

@@ -1,0 +1,363 @@
+"""Unified LM: one model covering all assigned families via ArchConfig.
+
+Families: dense (qwen3/llama3/gemma2/nemotron), moe (dbrx/arctic), ssm
+(mamba2), hybrid (jamba), enc-dec audio (whisper, stub frontend), vlm
+(llava, stub frontend).
+
+Layer stacking: layers are grouped into *blocks* — the smallest repeating
+pattern of layer kinds (gemma2: [local, global]; jamba: 8-layer mamba/attn/
+moe pattern; homogeneous archs: 1) — and the block sequence runs under
+``lax.scan`` with parameters stacked on a leading ``n_blocks`` axis.  One
+HLO layer body regardless of depth ⇒ compile time and HLO size are O(block),
+and remat applies per block.
+
+Modes: "train" (no cache), "prefill" (returns cache), "decode" (one token,
+consumes/returns cache).  Caches are pytrees stacked over blocks, matching
+the scan layout.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.sharding import shard
+from . import attention as attn_mod
+from . import ffn as ffn_mod
+from . import mamba as mamba_mod
+from .attention import AttnCache
+from .layers import embed_init, dense_init, layernorm, rmsnorm, softcap
+
+__all__ = ["LayerSpec", "layer_plan", "block_size", "lm_init", "lm_apply",
+           "init_cache", "Transformer"]
+
+
+@dataclass(frozen=True)
+class LayerSpec:
+    kind: str                  # "attn" | "mamba"
+    window: int | None = None  # sliding window (gemma2 local layers)
+    ffn: str | None = "dense"  # "dense" | "moe" | None
+    cross: bool = False        # decoder cross-attention (whisper)
+
+
+def layer_plan(cfg) -> list[LayerSpec]:
+    plan = []
+    for i in range(cfg.num_layers):
+        if cfg.family == "ssm":
+            kind = "mamba"
+        elif cfg.attn_layer_period:
+            kind = ("attn" if i % cfg.attn_layer_period == cfg.attn_layer_offset
+                    else "mamba")
+        else:
+            kind = "attn"
+        window = None
+        if cfg.local_global_period and kind == "attn":
+            if i % cfg.local_global_period != cfg.local_global_period - 1:
+                window = cfg.sliding_window
+        ffn = None if cfg.family == "ssm" else "dense"
+        if cfg.moe_num_experts and (i % cfg.moe_period == cfg.moe_period - 1):
+            ffn = "moe"
+        plan.append(LayerSpec(kind=kind, window=window, ffn=ffn,
+                              cross=cfg.is_encdec))
+    return plan
+
+
+def block_size(plan: list[LayerSpec]) -> int:
+    n = len(plan)
+    for p in range(1, n + 1):
+        if n % p == 0 and all(plan[i] == plan[i % p] for i in range(n)):
+            return p
+    return n
+
+
+def _norm_params(cfg):
+    if cfg.norm_type == "layernorm":
+        return {"scale": jnp.ones((cfg.d_model,), jnp.float32),
+                "bias": jnp.zeros((cfg.d_model,), jnp.float32)}
+    return {"scale": jnp.zeros((cfg.d_model,), jnp.float32)}
+
+
+def _norm_apply(p: dict, x: jax.Array) -> jax.Array:
+    if "bias" in p:
+        return layernorm(x, p["scale"], p["bias"])
+    return rmsnorm(x, p["scale"])
+
+
+def _layer_params(key: jax.Array, cfg, spec: LayerSpec) -> dict:
+    ks = iter(jax.random.split(key, 8))
+    p: dict = {"ln1": _norm_params(cfg)}
+    if spec.kind == "attn":
+        p["attn"] = attn_mod.attention_params(next(ks), cfg)
+    else:
+        p["mamba"] = mamba_mod.mamba_params(next(ks), cfg)
+    if cfg.sandwich_norm:
+        p["ln1_post"] = _norm_params(cfg)
+    if spec.cross:
+        p["ln_cross"] = _norm_params(cfg)
+        p["cross"] = attn_mod.attention_params(next(ks), cfg, cross=True)
+    if spec.ffn is not None:
+        p["ln2"] = _norm_params(cfg)
+        if spec.ffn == "moe":
+            p["moe"] = ffn_mod.moe_params(next(ks), cfg)
+            if cfg.moe_dense_residual:
+                p["mlp"] = ffn_mod.ffn_params(next(ks), cfg,
+                                              d_ff=cfg.dense_residual_ff)
+        else:
+            p["mlp"] = ffn_mod.ffn_params(next(ks), cfg)
+        if cfg.sandwich_norm:
+            p["ln2_post"] = _norm_params(cfg)
+    return p
+
+
+def _layer_cache(batch: int, max_len: int, cfg, spec: LayerSpec,
+                 dtype=jnp.bfloat16) -> dict:
+    c: dict = {}
+    kvp = (cfg.padded_num_heads if cfg.num_kv_heads == cfg.num_heads
+           else cfg.num_kv_heads)
+    if spec.kind == "attn":
+        c["self"] = attn_mod.init_attn_cache(batch, max_len, kvp,
+                                             cfg.head_dim, dtype)
+    else:
+        c["self"] = mamba_mod.init_mamba_cache(batch, cfg, dtype)
+    if spec.cross:
+        c["cross"] = attn_mod.init_attn_cache(batch, cfg.encoder_seq, kvp,
+                                              cfg.head_dim, dtype)
+    return c
+
+
+def _apply_layer(p: dict, spec: LayerSpec, x: jax.Array, *, cfg, mode: str,
+                 positions: jax.Array, cache: dict | None,
+                 cur_len: jax.Array | None, enc_out: jax.Array | None):
+    aux = {"lb_loss": jnp.zeros((), jnp.float32),
+           "router_z": jnp.zeros((), jnp.float32)}
+    new_cache: dict = {}
+
+    h = _norm_apply(p["ln1"], x)
+    # Megatron-SP boundary: the norm ran on the sequence-sharded residual;
+    # gather the full sequence HERE, on the bf16 activation, so the
+    # all-gather is explicit and half-precision (GSPMD otherwise picks the
+    # fp32 point inside the mixer).
+    h = shard(h, "batch", None, "embed")
+    if spec.kind == "attn":
+        a, c_new = attn_mod.attention(
+            p["attn"], h, cfg=cfg, mode=mode, positions=positions,
+            cache=cache.get("self") if cache else None, cur_len=cur_len,
+            layer_window=spec.window,
+            rope_enabled=cfg.max_position == 0)
+        if c_new is not None:
+            new_cache["self"] = c_new
+    else:
+        if mode == "decode":
+            a, c_new = mamba_mod.mamba_decode_step(
+                p["mamba"], h, cfg, cache["self"])
+        else:
+            a, c_new = mamba_mod.mamba_apply(
+                p["mamba"], h, cfg,
+                cache=cache.get("self") if cache else None,
+                want_cache=(mode == "prefill"))
+        if c_new is not None:
+            new_cache["self"] = c_new
+    if "ln1_post" in p:
+        a = _norm_apply(p["ln1_post"], a)
+    a = shard(a, "batch", "seq_act", "embed")   # SP re-scatter (RS in bwd)
+    x = x + a
+
+    if spec.cross:
+        h = _norm_apply(p["ln_cross"], x)
+        a, cc_new = attn_mod.attention(
+            p["cross"], h, cfg=cfg, mode=mode, positions=positions,
+            cache=cache.get("cross") if cache else None, cur_len=cur_len,
+            kv_source=enc_out, is_cross=True, rope_enabled=False)
+        if cc_new is not None:
+            new_cache["cross"] = cc_new
+        x = x + a
+
+    if spec.ffn is not None:
+        h = _norm_apply(p["ln2"], x)
+        h = shard(h, "batch", None, "embed")    # SP gather before FFN
+        if spec.ffn == "moe":
+            f, moe_aux = ffn_mod.moe_apply(p["moe"], h, cfg,
+                                           group_size=cfg.moe_group)
+            aux = {k: aux[k] + moe_aux[k] for k in aux}
+            if "mlp" in p:                       # arctic dense residual
+                f = f + ffn_mod.ffn_apply(p["mlp"], h, cfg)
+        else:
+            f = ffn_mod.ffn_apply(p["mlp"], h, cfg)
+        if "ln2_post" in p:
+            f = _norm_apply(p["ln2_post"], f)
+        f = shard(f, "batch", "seq_act", "embed")   # SP re-scatter
+        x = x + f
+
+    x = shard(x, "batch", "seq_act", "embed")
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# Whisper-style encoder (bidirectional, stub frontend provides embeddings)
+# ---------------------------------------------------------------------------
+
+def _encoder_params(key: jax.Array, cfg) -> dict:
+    keys = jax.random.split(key, cfg.encoder_layers + 1)
+    layers = []
+    for i in range(cfg.encoder_layers):
+        ks = jax.random.split(keys[i], 2)
+        layers.append({
+            "ln1": _norm_params(cfg),
+            "attn": attn_mod.attention_params(ks[0], cfg),
+            "ln2": _norm_params(cfg),
+            "mlp": ffn_mod.ffn_params(ks[1], cfg),
+        })
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *layers)
+    return {"layers": stacked, "final_norm": _norm_params(cfg)}
+
+
+def _encode(params: dict, frames: jax.Array, cfg) -> jax.Array:
+    x = frames.astype(cfg.dtype)
+
+    def body(x, lp):
+        h = _norm_apply(lp["ln1"], x)
+        a = attn_mod.encoder_attention(lp["attn"], h, cfg=cfg)
+        x = x + a
+        h = _norm_apply(lp["ln2"], x)
+        x = x + ffn_mod.ffn_apply(lp["mlp"], h, cfg)
+        return x, None
+
+    fn = jax.checkpoint(body) if cfg.remat else body
+    x, _ = jax.lax.scan(fn, x, params["layers"])
+    return _norm_apply(params["final_norm"], x)
+
+
+# ---------------------------------------------------------------------------
+# Full model
+# ---------------------------------------------------------------------------
+
+def lm_init(key: jax.Array, cfg) -> dict:
+    plan = layer_plan(cfg)
+    bs = block_size(plan)
+    n_blocks = len(plan) // bs
+    keys = jax.random.split(key, n_blocks * bs + 4)
+
+    blocks = []
+    for b in range(n_blocks):
+        block = {f"p{j}": _layer_params(keys[b * bs + j], cfg, plan[j])
+                 for j in range(bs)}
+        blocks.append(block)
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *blocks)
+
+    params = {
+        "embed": embed_init(keys[-1], cfg.padded_vocab, cfg.d_model),
+        "blocks": stacked,
+        "final_norm": _norm_params(cfg),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(keys[-2], (cfg.d_model, cfg.padded_vocab))
+    if cfg.max_position:
+        params["pos_embed"] = embed_init(keys[-3], cfg.max_position,
+                                         cfg.d_model)
+    if cfg.is_encdec:
+        params["encoder"] = _encoder_params(keys[-4], cfg)
+    return params
+
+
+def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16) -> dict:
+    plan = layer_plan(cfg)
+    bs = block_size(plan)
+    n_blocks = len(plan) // bs
+    one = {f"p{j}": _layer_cache(batch, max_len, cfg, plan[j], dtype)
+           for j in range(bs)}
+    return jax.tree.map(lambda x: jnp.broadcast_to(x[None], (n_blocks,) + x.shape),
+                        one)
+
+
+def lm_apply(params: dict, batch: dict, cfg, *, mode: str = "train",
+             cache: dict | None = None, cur_len: jax.Array | None = None):
+    """Forward pass.
+
+    batch: {"tokens": (B,S) int32} (+"patches" (B,P,D) for vlm prefill/train,
+    +"frames" (B,S_enc,D) for enc-dec).
+    Returns (logits (B,S,Vp), new_cache | None, aux).
+    """
+    plan = layer_plan(cfg)
+    bs = block_size(plan)
+    dt = cfg.dtype
+
+    tokens = batch["tokens"]
+    B = tokens.shape[0]
+    emb = shard(params["embed"], "vocab", "embed").astype(dt)
+    x = jnp.take(emb, tokens, axis=0)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, dt)
+
+    if "patches" in batch and batch["patches"] is not None:
+        x = jnp.concatenate([batch["patches"].astype(dt), x], axis=1)
+
+    S = x.shape[1]
+    if mode == "decode":
+        assert cur_len is not None
+        positions = cur_len[:, None]
+    else:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None],
+                                     (B, S))
+    if cfg.max_position:
+        pe = params["pos_embed"].astype(dt)
+        x = x + jnp.take(pe, jnp.clip(positions, 0, cfg.max_position - 1),
+                         axis=0)
+
+    enc_out = None
+    if cfg.is_encdec:
+        if mode == "decode":
+            enc_out = None          # cross K/V live in the cache
+        else:
+            enc_out = _encode(params["encoder"], batch["frames"], cfg)
+
+    x = shard(x.astype(dt), "batch", "seq_act", "embed")
+
+    def block_body(carry, xs):
+        x, lb, rz = carry
+        bp, bc = xs
+        new_bc = {}
+        for j in range(bs):
+            c_j = bc[f"p{j}"] if bc is not None else None
+            x, nc, aux = _apply_layer(
+                bp[f"p{j}"], plan[j], x, cfg=cfg, mode=mode,
+                positions=positions, cache=c_j, cur_len=cur_len,
+                enc_out=enc_out)
+            if nc:
+                new_bc[f"p{j}"] = nc
+            lb = lb + aux["lb_loss"]
+            rz = rz + aux["router_z"]
+        return (x, lb, rz), (new_bc if new_bc else None)
+
+    body = jax.checkpoint(block_body) if (cfg.remat and mode == "train") \
+        else block_body
+    zero = jnp.zeros((), jnp.float32)
+    xs = (params["blocks"], cache)
+    (x, lb, rz), new_cache = jax.lax.scan(body, (x, zero, zero), xs)
+
+    x = _norm_apply(params["final_norm"], x)
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    logits = jnp.einsum("bsd,dv->bsv", x, head.astype(dt))
+    if cfg.final_softcap:
+        logits = softcap(logits.astype(jnp.float32), cfg.final_softcap)
+    logits = shard(logits, "batch", None, "vocab")
+    aux = {"lb_loss": lb, "router_z": rz}
+    return logits, new_cache, aux
+
+
+class Transformer:
+    """Thin OO facade used by the launchers (init/apply/cache)."""
+
+    def __init__(self, cfg):
+        self.cfg = cfg
+
+    def init(self, key):
+        return lm_init(key, self.cfg)
+
+    def apply(self, params, batch, **kw):
+        return lm_apply(params, batch, self.cfg, **kw)
+
+    def init_cache(self, batch, max_len, dtype=jnp.bfloat16):
+        return init_cache(self.cfg, batch, max_len, dtype)

@@ -1,0 +1,221 @@
+"""Optimizers (optax-free: the container has no optax, so we own the math).
+
+API mirrors optax minimally:  ``opt = adamw(...); state = opt.init(params);
+updates, state = opt.update(grads, state, params); params = apply_updates``.
+All states are pytrees of arrays → they shard/checkpoint like params.
+
+Included: sgd (momentum), adamw, adafactor (factored second moment — the
+memory plan for the ≥100B archs), global-norm clipping, schedules.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "Optimizer", "sgd", "adamw", "adafactor", "apply_updates",
+    "clip_by_global_norm", "global_norm",
+    "cosine_schedule", "linear_warmup_cosine", "constant_schedule",
+]
+
+Pytree = Any
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Pytree], Pytree]
+    update: Callable[..., tuple[Pytree, Pytree]]  # (grads, state, params) -> (updates, state)
+
+
+def global_norm(tree: Pytree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def clip_by_global_norm(grads: Pytree, max_norm: float) -> tuple[Pytree, jax.Array]:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), norm
+
+
+def apply_updates(params: Pytree, updates: Pytree) -> Pytree:
+    return jax.tree.map(lambda p, u: (p + u).astype(p.dtype), params, updates)
+
+
+# ---------------------------------------------------------------------------
+# Schedules
+# ---------------------------------------------------------------------------
+
+def constant_schedule(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def cosine_schedule(lr: float, total_steps: int, final_frac: float = 0.1):
+    def fn(step):
+        t = jnp.clip(step / max(total_steps, 1), 0.0, 1.0)
+        cos = 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return lr * (final_frac + (1 - final_frac) * cos)
+    return fn
+
+
+def linear_warmup_cosine(lr: float, warmup: int, total_steps: int,
+                         final_frac: float = 0.1):
+    cos = cosine_schedule(lr, max(total_steps - warmup, 1), final_frac)
+    def fn(step):
+        w = jnp.clip(step / max(warmup, 1), 0.0, 1.0)
+        return jnp.where(step < warmup, lr * w, cos(step - warmup))
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# SGD / AdamW
+# ---------------------------------------------------------------------------
+
+class SGDState(NamedTuple):
+    step: jax.Array
+    momentum: Pytree
+
+
+def sgd(schedule, momentum: float = 0.9, nesterov: bool = False) -> Optimizer:
+    def init(params):
+        return SGDState(jnp.zeros((), jnp.int32),
+                        jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params))
+
+    def update(grads, state, params=None):
+        lr = schedule(state.step)
+        mom = jax.tree.map(lambda m, g: momentum * m + g.astype(jnp.float32),
+                           state.momentum, grads)
+        if nesterov:
+            upd = jax.tree.map(lambda m, g: -(lr * (momentum * m + g)), mom, grads)
+        else:
+            upd = jax.tree.map(lambda m: -lr * m, mom)
+        return upd, SGDState(state.step + 1, mom)
+
+    return Optimizer(init, update)
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    mu: Pytree
+    nu: Pytree
+
+
+def adamw(schedule, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        z = lambda p: jnp.zeros_like(p, jnp.float32)
+        return AdamWState(jnp.zeros((), jnp.int32),
+                          jax.tree.map(z, params), jax.tree.map(z, params))
+
+    def update(grads, state, params):
+        step = state.step + 1
+        lr = schedule(state.step)
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+                          state.mu, grads)
+        nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+                          state.nu, grads)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def u(m, v, p):
+            upd = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            if weight_decay:
+                upd = upd + weight_decay * p.astype(jnp.float32)
+            return -lr * upd
+
+        return jax.tree.map(u, mu, nu, params), AdamWState(step, mu, nu)
+
+    return Optimizer(init, update)
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (Shazeer & Stern 2018) — factored second moment: the optimizer
+# state for a (n, m) matrix is n + m floats instead of n·m, which is what
+# lets the 340B/480B configs fit the 16 GB/chip budget (see DESIGN.md §4).
+# ---------------------------------------------------------------------------
+
+class AdafactorState(NamedTuple):
+    step: jax.Array
+    vr: Pytree   # row second-moment (or full moment for <2D leaves)
+    vc: Pytree   # col second-moment (dummy for <2D leaves)
+
+
+def adafactor(schedule, decay: float = 0.8, eps: float = 1e-30,
+              clip_threshold: float = 1.0, min_dim_factored: int = 128,
+              weight_decay: float = 0.0) -> Optimizer:
+    def _factored(p):
+        # Factor the trailing dim against everything before it: covers both
+        # plain (in, out) matrices and head-split / block-stacked tensors
+        # like (L, d, heads, hd) — the leading dims behave as batch dims in
+        # the rank-1 reconstruction (they broadcast through r·c).
+        if p.ndim < 2 or p.shape[-1] < min_dim_factored:
+            return False
+        lead = 1
+        for s in p.shape[:-1]:
+            lead *= s
+        return lead >= min_dim_factored
+
+    def init(params):
+        def vrow(p):
+            if _factored(p):
+                return jnp.zeros(p.shape[:-1], jnp.float32)
+            return jnp.zeros_like(p, jnp.float32)
+
+        def vcol(p):
+            if _factored(p):
+                return jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+            # dummy; leading dim kept so block-stacked leaves stay scannable
+            return jnp.zeros(p.shape[:1] or (1,), jnp.float32)
+
+        return AdafactorState(jnp.zeros((), jnp.int32),
+                              jax.tree.map(vrow, params),
+                              jax.tree.map(vcol, params))
+
+    def update(grads, state, params):
+        step = state.step + 1
+        lr = schedule(state.step)
+        # beta2 ramps toward 1 (Shazeer-Stern schedule).
+        beta2 = 1.0 - step.astype(jnp.float32) ** (-decay)
+
+        def upd(g, vr, vc, p):
+            g = g.astype(jnp.float32)
+            g2 = jnp.square(g) + eps
+            # factored-ness is inferred from the state shape so that block
+            # slices of stacked leaves (train.streamed_update) stay
+            # consistent with the decision made at init time.
+            is_factored = (p.ndim >= 2 and vr.shape == p.shape[:-1]
+                           and vr.shape != p.shape)
+            if is_factored:
+                new_vr = beta2 * vr + (1 - beta2) * jnp.mean(g2, axis=-1)
+                new_vc = beta2 * vc + (1 - beta2) * jnp.mean(g2, axis=-2)
+                # rank-1 reconstruction of the preconditioner
+                r = new_vr / jnp.maximum(
+                    jnp.mean(new_vr, axis=-1, keepdims=True), eps)
+                u = g / (jnp.sqrt(r)[..., None] * jnp.sqrt(new_vc)[..., None, :] + eps)
+            else:
+                new_vr = beta2 * vr + (1 - beta2) * g2
+                new_vc = vc
+                u = g / (jnp.sqrt(new_vr) + eps)
+            # update clipping by RMS
+            rms = jnp.sqrt(jnp.mean(jnp.square(u)) + eps)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            if weight_decay:
+                u = u + weight_decay * p.astype(jnp.float32)
+            return -lr * u, new_vr, new_vc
+
+        flat_p, treedef = jax.tree.flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_vr = treedef.flatten_up_to(state.vr)
+        flat_vc = treedef.flatten_up_to(state.vc)
+        outs = [upd(g, vr, vc, p) for g, vr, vc, p in
+                zip(flat_g, flat_vr, flat_vc, flat_p)]
+        updates = treedef.unflatten([o[0] for o in outs])
+        new_vr = treedef.unflatten([o[1] for o in outs])
+        new_vc = treedef.unflatten([o[2] for o in outs])
+        return updates, AdafactorState(step, new_vr, new_vc)
+
+    return Optimizer(init, update)

@@ -1,0 +1,9 @@
+"""Serving substrate: prefill/decode engine, sequence-sharded KV cache,
+early-exit request retirement (the paper's active-pruning analogue)."""
+
+from .engine import (ServeState, generate, make_decode_step, make_prefill,
+                     pad_cache_to)
+from .early_exit import eos_gate, stability_gate
+
+__all__ = ["ServeState", "generate", "make_decode_step", "make_prefill",
+           "pad_cache_to", "eos_gate", "stability_gate"]

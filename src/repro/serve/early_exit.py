@@ -1,0 +1,50 @@
+"""Early exit: the serving-layer generalisation of the paper's active
+pruning (§III-D / §IV-C "identify quickly, sleep sooner").
+
+In the RTL, a neuron that has fired is clock-gated for the rest of the
+window.  At the serving layer the same idea retires *requests*: a sequence
+whose prediction has been stable for ``patience`` consecutive steps (or
+that emitted EOS) stops consuming decode steps — its cache writes and
+compute are gated off (see serve.engine.make_decode_step), and the freed
+slots shrink the active batch.  The measurable win is the same quantity the
+paper plots in Fig. 6/7: accuracy (or completion) per unit time/energy.
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["eos_gate", "stability_gate", "StabilityState"]
+
+
+def eos_gate(eos_id: int) -> Callable:
+    def gate(last_token: jax.Array, logits: jax.Array) -> jax.Array:
+        return last_token == eos_id
+    return gate
+
+
+class StabilityState:
+    """Stateful gate: retire when argmax prediction unchanged ``patience``×.
+
+    Mirrors core.pruning.stability_early_exit but runs online during
+    decode (no need to see the whole window).
+    """
+
+    def __init__(self, batch: int, patience: int = 3):
+        self.patience = patience
+        self.prev = jnp.full((batch,), -1, jnp.int32)
+        self.streak = jnp.zeros((batch,), jnp.int32)
+
+    def __call__(self, last_token: jax.Array, logits: jax.Array) -> jax.Array:
+        pred = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        same = pred == self.prev
+        self.streak = jnp.where(same, self.streak + 1, 0)
+        self.prev = pred
+        return self.streak >= self.patience
+
+
+def stability_gate(batch: int, patience: int = 3) -> StabilityState:
+    return StabilityState(batch, patience)

@@ -1,0 +1,112 @@
+"""Serving engine: prefill + decode steps with a pre-allocated KV cache.
+
+``prefill`` runs the full-sequence forward once, writing K/V (and SSM
+states) into a cache sized for ``max_len``; ``decode_step`` advances one
+token.  Both are pure functions designed to be jitted/pjitted by the
+launcher with the cache sharded over "kv_seq" (flash-decoding-style
+sequence sharding — the long-context decode path).
+
+Early exit (the paper's active-pruning analogue at the serving layer) lives
+in early_exit.py and composes with ``generate``.
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models.transformer import init_cache, lm_apply
+
+__all__ = ["ServeState", "make_prefill", "make_decode_step", "generate",
+           "pad_cache_to"]
+
+Pytree = Any
+
+
+class ServeState(NamedTuple):
+    cache: Pytree
+    cur_len: jax.Array       # (B,) valid cache lengths
+    last_token: jax.Array    # (B,) most recent token
+    done: jax.Array          # (B,) early-exit flags
+
+
+def pad_cache_to(cache: Pytree, max_len: int) -> Pytree:
+    """Grow prefill-created K/V caches (length S) to ``max_len`` slots."""
+
+    def one(path, x):
+        names = [getattr(e, "name", getattr(e, "key", "")) for e in path]
+        if names and names[-1] in ("k", "v") and "cross" not in names:
+            pad = max_len - x.shape[2]
+            if pad > 0:
+                widths = [(0, 0)] * x.ndim
+                widths[2] = (0, pad)
+                return jnp.pad(x, widths)
+        return x
+
+    return jax.tree_util.tree_map_with_path(one, cache)
+
+
+def make_prefill(cfg, *, max_len: int):
+    def prefill(params, batch):
+        tokens = batch["tokens"]
+        b = tokens.shape[0]
+        logits, cache, _ = lm_apply(params, batch, cfg, mode="prefill")
+        cache = pad_cache_to(cache, max_len)
+        s = logits.shape[1]
+        cur = jnp.full((b,), s, jnp.int32)
+        nxt = jnp.argmax(logits[:, -1, :cfg.vocab_size], axis=-1) \
+                 .astype(jnp.int32)
+        return ServeState(cache=cache, cur_len=cur, last_token=nxt,
+                          done=jnp.zeros((b,), bool)), logits
+
+    return prefill
+
+
+def make_decode_step(cfg):
+    def decode_step(params, state: ServeState):
+        batch = {"tokens": state.last_token[:, None]}
+        logits, cache, _ = lm_apply(params, batch, cfg, mode="decode",
+                                    cache=state.cache, cur_len=state.cur_len)
+        nxt = jnp.argmax(logits[:, -1, :cfg.vocab_size], axis=-1) \
+                 .astype(jnp.int32)
+        # retired sequences (early exit) stop writing / advancing
+        cache = jax.tree.map(
+            lambda new, old: jnp.where(
+                _bcast(state.done, new.ndim, 1), old, new),
+            cache, state.cache)
+        cur = jnp.where(state.done, state.cur_len, state.cur_len + 1)
+        nxt = jnp.where(state.done, state.last_token, nxt)
+        return ServeState(cache=cache, cur_len=cur, last_token=nxt,
+                          done=state.done), logits[:, -1]
+
+    return decode_step
+
+
+def _bcast(mask: jax.Array, ndim: int, batch_axis: int) -> jax.Array:
+    shape = [1] * ndim
+    shape[batch_axis] = mask.shape[0]
+    return mask.reshape(shape)
+
+
+def generate(params, batch, cfg, *, steps: int, max_len: int,
+             early_exit_fn=None):
+    """Greedy generation loop with optional per-sequence early exit.
+
+    early_exit_fn(tokens_so_far (B,t), logits (B,V)) -> (B,) bool — e.g.
+    serve.early_exit.stability_gate.  Returns (tokens (B,steps), n_active
+    per step (B? no: (steps,) active counts — the energy/latency signal).
+    """
+    prefill = make_prefill(cfg, max_len=max_len)
+    decode = make_decode_step(cfg)
+    state, _ = prefill(params, batch)
+    toks, actives = [], []
+    for _ in range(steps):
+        state, logits = decode(params, state)
+        if early_exit_fn is not None:
+            newly_done = early_exit_fn(state.last_token, logits)
+            state = state._replace(done=state.done | newly_done)
+        toks.append(state.last_token)
+        actives.append(jnp.sum(~state.done))
+    return jnp.stack(toks, axis=1), jnp.stack(actives)

@@ -1,0 +1,16 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS device-count forcing here — smoke
+tests and benchmarks must see the real (single) CPU device; only the
+dry-run and the subprocess-based distributed tests use fake device counts."""
+
+import os
+import sys
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,115 @@
+"""Bit-exactness of the integer LIF engine vs an independent NumPy golden
+model, plus dynamics/pruning properties (paper §III-A/B/D, Fig. 4)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import lif
+from repro.core.lif import LIFConfig, run_lif_int
+
+
+def numpy_golden_lif(spikes, w, cfg: LIFConfig, active_pruning=False):
+    """Straight-line NumPy transcription of the RTL timestep."""
+    T, B, _ = spikes.shape
+    n_out = w.shape[1]
+    v = np.full((B, n_out), cfg.v_rest, np.int64)
+    en = np.ones((B, n_out), bool)
+    out_spk = np.zeros((T, B, n_out), bool)
+    v_tr = np.zeros((T, B, n_out), np.int64)
+    for t in range(T):
+        cur = spikes[t].astype(np.int64) @ w.astype(np.int64)
+        cur = np.where(en, cur, 0)
+        v_int = np.clip(v + cur, cfg.v_min, cfg.v_max)
+        v_leak = v_int - (v_int >> cfg.decay_shift)
+        fired = (v_leak >= cfg.v_threshold) & en
+        v_new = np.where(fired, cfg.v_rest, v_leak)
+        v = np.where(en, v_new, v)
+        if active_pruning:
+            en = en & ~fired
+        out_spk[t] = fired
+        v_tr[t] = v
+    return out_spk, v_tr
+
+
+@pytest.mark.parametrize("prune", [False, True])
+@pytest.mark.parametrize("shift", [1, 4, 7])
+def test_bit_exact_vs_numpy_golden(rng, prune, shift):
+    T, B, n_in, n_out = 20, 5, 784, 10
+    spikes = rng.integers(0, 2, (T, B, n_in)).astype(np.uint8)
+    w = rng.integers(-256, 256, (n_in, n_out)).astype(np.int16)
+    cfg = LIFConfig(decay_shift=shift, v_threshold=128)
+    res = run_lif_int(jnp.asarray(spikes, bool), jnp.asarray(w), cfg,
+                      active_pruning=prune)
+    want_spk, want_v = numpy_golden_lif(spikes, w, cfg, prune)
+    np.testing.assert_array_equal(np.asarray(res["spikes"]), want_spk)
+    np.testing.assert_array_equal(np.asarray(res["v_trace"]), want_v)
+
+
+def test_arithmetic_shift_is_floor_division_for_negatives():
+    # two's-complement >> n == floor(x / 2^n), also for negative potentials
+    v = jnp.asarray([-255, -17, -1, 0, 1, 17, 255], jnp.int32)
+    got = v >> 4
+    want = jnp.floor_divide(v, 16)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_membrane_decays_without_input():
+    cfg = LIFConfig(decay_shift=2, v_threshold=10**6)
+    spikes = jnp.zeros((10, 1, 4), bool)
+    w = jnp.zeros((4, 3), jnp.int16)
+    init = lif.LIFStateInt(v=jnp.full((1, 3), 1000, jnp.int32),
+                           enable=jnp.ones((1, 3), bool))
+    res = run_lif_int(spikes, w, cfg, init=init)
+    v = np.asarray(res["v_trace"])[:, 0, 0]
+    assert (np.diff(v) <= 0).all() and v[-1] < 1000 * 0.1
+
+
+def test_fire_and_hard_reset(rng):
+    cfg = LIFConfig(decay_shift=4, v_threshold=128, v_rest=0)
+    # one input line with weight 200: crosses threshold on first spike
+    spikes = jnp.ones((3, 1, 1), bool)
+    w = jnp.asarray([[200]], jnp.int16)
+    res = run_lif_int(spikes, w, cfg)
+    spk = np.asarray(res["spikes"])[:, 0, 0]
+    v = np.asarray(res["v_trace"])[:, 0, 0]
+    assert spk[0] and v[0] == 0            # fired, then hard reset to V_rest
+
+
+def test_active_pruning_freezes_after_first_spike(rng):
+    cfg = LIFConfig(decay_shift=4, v_threshold=64)
+    spikes = jnp.ones((10, 2, 8), bool)
+    w = jnp.asarray(rng.integers(20, 40, (8, 4)), jnp.int16)
+    res = run_lif_int(spikes, w, cfg, active_pruning=True)
+    spk = np.asarray(res["spikes"])
+    assert spk.sum(axis=0).max() <= 1      # each neuron fires at most once
+    # pruned neurons stop accumulating: adds decrease over time
+    adds = np.asarray(res["active_adds"]).sum(axis=-1)
+    assert adds[-1] < adds[0]
+
+
+def test_pruning_reduces_active_adds(rng):
+    cfg = LIFConfig(decay_shift=4, v_threshold=64)
+    spikes = jnp.asarray(rng.integers(0, 2, (20, 4, 100)), bool)
+    w = jnp.asarray(rng.integers(-10, 30, (100, 10)), jnp.int16)
+    on = run_lif_int(spikes, w, cfg, active_pruning=True)
+    off = run_lif_int(spikes, w, cfg, active_pruning=False)
+    assert (np.asarray(on["active_adds"]).sum()
+            <= np.asarray(off["active_adds"]).sum())
+
+
+def test_float_int_datapaths_agree_on_dynamics(rng):
+    """Float twin follows the same trajectory shape (rate correlation)."""
+    T, B, n_in, n_out = 30, 8, 64, 10
+    spikes = rng.integers(0, 2, (T, B, n_in)).astype(np.float32)
+    w = rng.normal(0, 0.3, (n_in, n_out)).astype(np.float32)
+    fcfg = LIFConfig(decay_shift=4, v_threshold=1.0)  # type: ignore
+    out_f, _, _ = lif.run_lif_float(jnp.asarray(spikes), jnp.asarray(w), fcfg)
+    # integer path with the scaled weights (gain 128 = int threshold)
+    w_q = jnp.asarray(np.round(w * 128), jnp.int16)
+    icfg = LIFConfig(decay_shift=4, v_threshold=128)
+    res = run_lif_int(jnp.asarray(spikes, bool), w_q, icfg)
+    rf = np.asarray(out_f).mean(axis=0)
+    ri = np.asarray(res["spikes"]).mean(axis=0)
+    corr = np.corrcoef(rf.ravel(), ri.ravel())[0, 1]
+    assert corr > 0.95

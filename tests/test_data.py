@@ -1,0 +1,95 @@
+"""Data substrate: procedural digits (MNIST stand-in) and token streams."""
+
+import numpy as np
+
+from repro.data import digits, pipeline, tokens
+
+
+def test_digits_shapes_and_range():
+    ds = digits.make_dataset(n_train=200, n_test=50, seed=0)
+    assert ds.x_train.shape == (200, 784) and ds.x_train.dtype == np.float32
+    assert ds.x_train.min() >= 0.0 and ds.x_train.max() <= 1.0
+    assert set(np.unique(ds.y_train)) <= set(range(10))
+
+
+def test_digits_deterministic():
+    a = digits.make_dataset(n_train=50, n_test=10, seed=3)
+    b = digits.make_dataset(n_train=50, n_test=10, seed=3)
+    np.testing.assert_array_equal(a.x_train, b.x_train)
+    np.testing.assert_array_equal(a.y_train, b.y_train)
+
+
+def test_digits_classes_distinguishable():
+    """Nearest-centroid must beat 60% — classes must be separable enough
+    to support the paper's ≈89% claim on this stand-in."""
+    ds = digits.make_dataset(n_train=500, n_test=200, seed=0)
+    cents = np.stack([ds.x_train[ds.y_train == c].mean(0) for c in range(10)])
+    pred = np.argmin(((ds.x_test[:, None] - cents[None]) ** 2).sum(-1), axis=1)
+    acc = (pred == ds.y_test).mean()
+    assert acc > 0.6, acc
+
+
+def test_corruption_suite():
+    ds = digits.make_dataset(n_train=20, n_test=5, seed=0)
+    x = ds.x_train
+    for kind in ("rotation", "shift", "noise", "occlusion"):
+        xp = digits.corrupt(x, kind, seed=0)
+        assert xp.shape == x.shape
+        assert not np.array_equal(xp, x)
+    np.testing.assert_array_equal(digits.corrupt(x, "clean"), x)
+
+
+def test_token_stream_deterministic_and_in_range():
+    cfg = tokens.TokenStreamConfig(vocab_size=100, seq_len=32,
+                                   global_batch=4, seed=7)
+    a = next(tokens.token_batches(cfg))
+    b = next(tokens.token_batches(cfg))
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    assert a["tokens"].min() >= 0 and a["tokens"].max() < 100
+    assert a["tokens"].shape == (4, 32)
+    np.testing.assert_array_equal(a["labels"][:, :-1], a["tokens"][:, 1:])
+
+
+def test_token_stream_host_striping():
+    cfg = tokens.TokenStreamConfig(vocab_size=64, seq_len=16,
+                                   global_batch=8, seed=1)
+    h0 = next(tokens.token_batches(cfg, host_id=0, num_hosts=2))
+    h1 = next(tokens.token_batches(cfg, host_id=1, num_hosts=2))
+    assert h0["tokens"].shape == (4, 16)
+    assert not np.array_equal(h0["tokens"], h1["tokens"])
+
+
+def test_token_motifs_create_structure():
+    """Motif injection must make sequences more predictable than iid Zipf."""
+    cfg = tokens.TokenStreamConfig(vocab_size=1000, seq_len=512,
+                                   global_batch=8, seed=0, motif_prob=0.5)
+    batch = next(tokens.token_batches(cfg))
+    t = batch["tokens"]
+    # count exact 8-gram repeats within each row
+    reps = 0
+    for row in t:
+        grams = {}
+        for i in range(len(row) - 8):
+            g = tuple(row[i:i + 8])
+            reps += g in grams
+            grams[g] = True
+    assert reps > 0
+
+
+def test_host_shard_partitions_batch():
+    arr = np.arange(32).reshape(8, 4)
+    parts = [pipeline.host_shard(arr, h, 4) for h in range(4)]
+    np.testing.assert_array_equal(np.concatenate(parts), arr)
+
+
+def test_prefetch_preserves_order():
+    out = list(pipeline.prefetch(iter(range(50)), depth=4))
+    assert out == list(range(50))
+
+
+def test_digit_batches_iterator():
+    ds = digits.make_dataset(n_train=64, n_test=8, seed=0)
+    it = pipeline.digit_batches(ds.x_train, ds.y_train, batch=16, epochs=1)
+    batches = list(it)
+    assert len(batches) == 4
+    assert batches[0]["pixels"].shape == (16, 784)

@@ -1,0 +1,73 @@
+"""Quantization invariants (paper §III-A fixed-point datapath), with
+hypothesis property tests."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+from hypothesis.extra import numpy as hnp
+
+from repro.core import fixed_point as fp
+
+
+@settings(max_examples=50, deadline=None)
+@given(w=hnp.arrays(np.float32, hnp.array_shapes(min_dims=1, max_dims=3,
+                                                 max_side=16),
+                    elements=st.floats(-100, 100, width=32)),
+       bits=st.sampled_from([4, 8, 9, 16]))
+def test_quantize_roundtrip_error_bounded(w, bits):
+    qp = fp.QuantParams(bits=bits)
+    q, scale = fp.quantize(jnp.asarray(w), qp)
+    deq = np.asarray(fp.dequantize(q, scale))
+    # |w - deq| <= scale/2 within the representable range
+    err = np.abs(w - deq)
+    assert (err <= np.asarray(scale) * 0.5 + 1e-6).all()
+
+
+@settings(max_examples=50, deadline=None)
+@given(bits=st.sampled_from([4, 8, 16]))
+def test_quantize_codes_in_range(bits):
+    rng = np.random.default_rng(0)
+    w = rng.normal(0, 3, (32, 16)).astype(np.float32)
+    qp = fp.QuantParams(bits=bits)
+    q, _ = fp.quantize(jnp.asarray(w), qp)
+    q = np.asarray(q)
+    assert q.min() >= qp.qmin and q.max() <= qp.qmax
+
+
+def test_stochastic_rounding_unbiased():
+    w = jnp.full((20000,), 0.3)          # between two codes
+    qp = fp.QuantParams(bits=8)
+    scale = jnp.asarray(0.1)             # codes 3.0 and 4.0 * 0.1
+    q, _ = fp.quantize_stochastic(w, qp, jax.random.PRNGKey(0), scale)
+    mean = float(np.asarray(q).mean() * 0.1)
+    assert abs(mean - 0.3) < 0.005       # E[deq] == w
+
+
+def test_fake_quant_straight_through_gradient():
+    w = jnp.linspace(-1, 1, 64)
+    g = jax.grad(lambda x: jnp.sum(fp.fake_quant(x, 8) * 3.0))(w)
+    np.testing.assert_allclose(np.asarray(g), 3.0, rtol=1e-6)
+
+
+def test_int8_matmul_matches_float():
+    rng = np.random.default_rng(1)
+    x = rng.normal(0, 1, (8, 64)).astype(np.float32)
+    w = rng.normal(0, 1, (64, 32)).astype(np.float32)
+    qp = fp.QuantParams(bits=8)
+    xq, xs = fp.quantize(jnp.asarray(x), qp)
+    wq, ws = fp.quantize(jnp.asarray(w), qp)
+    got = np.asarray(fp.int8_matmul(xq, wq, xs, ws))
+    want = x @ w
+    # int8 quantization error ~ 1% relative on well-scaled data
+    assert np.abs(got - want).mean() / np.abs(want).mean() < 0.05
+
+
+def test_per_axis_scales():
+    rng = np.random.default_rng(2)
+    w = rng.normal(0, 1, (16, 4)).astype(np.float32) * np.array([1, 10, 100, 1000])
+    qp = fp.QuantParams(bits=8, axis=1)
+    q, scale = fp.quantize(jnp.asarray(w), qp)
+    deq = np.asarray(fp.dequantize(q, scale))
+    rel = np.abs(deq - w).max(axis=0) / np.abs(w).max(axis=0)
+    assert (rel < 0.01).all()            # each column well-resolved

@@ -1,0 +1,85 @@
+"""Trip-count-aware HLO cost model: exactness on known programs."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.hlo_cost import hlo_cost
+
+
+def compile_cost(f, *args):
+    c = jax.jit(f).lower(*args).compile()
+    return hlo_cost(c.as_text())
+
+
+def test_single_matmul():
+    n = 128
+    hc = compile_cost(lambda a, b: a @ b,
+                      jax.ShapeDtypeStruct((n, n), jnp.float32),
+                      jax.ShapeDtypeStruct((n, n), jnp.float32))
+    assert hc.flops == pytest.approx(2 * n**3, rel=0.01)
+
+
+@pytest.mark.parametrize("L", [1, 3, 17])
+def test_scan_multiplies_by_trip_count(L):
+    n = 64
+
+    def f(x, w):
+        def body(c, _):
+            return c @ w, None
+        y, _ = jax.lax.scan(body, x, None, length=L)
+        return y.sum()
+
+    hc = compile_cost(f, jax.ShapeDtypeStruct((n, n), jnp.float32),
+                      jax.ShapeDtypeStruct((n, n), jnp.float32))
+    assert hc.flops == pytest.approx(2 * n**3 * L, rel=0.02)
+
+
+def test_nested_scans():
+    n = 64
+
+    def f(x, w):
+        def outer(c, _):
+            def inner(c2, _):
+                return c2 @ w, None
+            c2, _ = jax.lax.scan(inner, c, None, length=4)
+            return c2, None
+        y, _ = jax.lax.scan(outer, x, None, length=3)
+        return y.sum()
+
+    hc = compile_cost(f, jax.ShapeDtypeStruct((n, n), jnp.float32),
+                      jax.ShapeDtypeStruct((n, n), jnp.float32))
+    assert hc.flops == pytest.approx(2 * n**3 * 12, rel=0.02)
+
+
+def test_fori_loop_counted():
+    n = 64
+
+    def f(x, w):
+        return jax.lax.fori_loop(0, 7, lambda i, c: c @ w, x).sum()
+
+    hc = compile_cost(f, jax.ShapeDtypeStruct((n, n), jnp.float32),
+                      jax.ShapeDtypeStruct((n, n), jnp.float32))
+    assert hc.flops == pytest.approx(2 * n**3 * 7, rel=0.02)
+
+
+def test_bytes_scale_with_trips():
+    n = 64
+
+    def f(x):
+        def body(c, _):
+            return jnp.tanh(c) * 2.0, None
+        y, _ = jax.lax.scan(body, x, None, length=10)
+        return y
+
+    hc1 = compile_cost(f, jax.ShapeDtypeStruct((n, n), jnp.float32))
+
+    def g(x):
+        def body(c, _):
+            return jnp.tanh(c) * 2.0, None
+        y, _ = jax.lax.scan(body, x, None, length=20)
+        return y
+
+    hc2 = compile_cost(g, jax.ShapeDtypeStruct((n, n), jnp.float32))
+    assert hc2.bytes > hc1.bytes * 1.5

@@ -1,0 +1,103 @@
+"""End-to-end behaviour of the paper's system: training → quantization →
+bit-exact integer inference → paper-claim checks (shortened budgets; the
+full-budget numbers live in benchmarks/)."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.snn_mnist import SNN_CONFIG, SNN_CONFIG_PRUNED
+from repro.core import prng, snn
+from repro.core.train_snn import int_accuracy, train_bptt, train_converted
+from repro.data import digits
+
+
+@pytest.fixture(scope="module")
+def trained():
+    ds = digits.make_dataset(n_train=2000, n_test=400, seed=0)
+    params = train_bptt(SNN_CONFIG, ds, steps=400, seed=0)
+    params_q = snn.quantize_params(params, SNN_CONFIG)
+    return params, params_q, ds
+
+
+def test_accuracy_reaches_paper_band(trained):
+    """Paper: ~89% by T=10. Short-budget training must clear 85%."""
+    _, params_q, ds = trained
+    acc, _ = int_accuracy(params_q, SNN_CONFIG, ds.x_test, ds.y_test,
+                          num_steps=10)
+    assert acc >= 0.85, acc
+
+
+def test_accuracy_monotone_ish_in_T(trained):
+    _, params_q, ds = trained
+    accs = [int_accuracy(params_q, SNN_CONFIG, ds.x_test[:200],
+                         ds.y_test[:200], num_steps=t)[0]
+            for t in (1, 5, 10, 20)]
+    assert accs[-1] >= accs[0]
+    assert accs[2] >= 0.8
+
+
+def test_quantized_codes_are_9bit(trained):
+    _, params_q, _ = trained
+    w = np.asarray(params_q["layers"][0]["w_q"])
+    assert w.min() >= -256 and w.max() <= 255      # 9-bit signed codes
+    assert w.dtype == np.int16
+
+
+def test_int_engine_deterministic(trained):
+    _, params_q, ds = trained
+    px = jnp.asarray((ds.x_test[:32] * 255).astype(np.uint8))
+    st = prng.seed_state(5, px.shape)
+    a = snn.snn_apply_int(params_q, px, st, SNN_CONFIG)
+    b = snn.snn_apply_int(params_q, px, st, SNN_CONFIG)
+    np.testing.assert_array_equal(np.asarray(a["pred"]), np.asarray(b["pred"]))
+    np.testing.assert_array_equal(np.asarray(a["v_trace"]),
+                                  np.asarray(b["v_trace"]))
+
+
+def test_active_pruning_engine(trained):
+    """Pruned engine: ≤1 spike/neuron, fewer adds, sane accuracy."""
+    _, params_q, ds = trained
+    px = jnp.asarray((ds.x_test[:200] * 255).astype(np.uint8))
+    st = prng.seed_state(5, px.shape)
+    on = snn.snn_apply_int(params_q, px, st, SNN_CONFIG_PRUNED)
+    off = snn.snn_apply_int(params_q, px, st, SNN_CONFIG)
+    assert int(np.asarray(on["spike_counts"]).max()) <= 1
+    assert (np.asarray(on["active_adds"]).sum()
+            < np.asarray(off["active_adds"]).sum())
+    acc_on = (np.asarray(on["pred"]) == ds.y_test[:200]).mean()
+    assert acc_on >= 0.6        # first-spike readout is coarser but sane
+
+
+def test_conversion_route_works():
+    ds = digits.make_dataset(n_train=2000, n_test=300, seed=1)
+    params = train_converted(SNN_CONFIG, ds, steps=400, seed=0)
+    params_q = snn.quantize_params(params, SNN_CONFIG)
+    acc, _ = int_accuracy(params_q, SNN_CONFIG, ds.x_test, ds.y_test,
+                          num_steps=20)
+    assert acc >= 0.75, acc     # Diehl conversion, single FC layer
+
+
+def test_ops_count_zero_multiplications(trained):
+    """Table II's headline: the integer engine executes no multiplies —
+    structurally true (masked adds); energy model accounts it that way."""
+    from repro.core import energy
+    _, params_q, ds = trained
+    acc, aux = int_accuracy(params_q, SNN_CONFIG, ds.x_test[:100],
+                            ds.y_test[:100], num_steps=10)
+    ops = energy.snn_op_counts(np.asarray([aux["adds_per_img"]]),
+                               num_steps=10)
+    assert ops.multiplications == 0
+    assert ops.additions < 784 * 10 * 10   # far below the dense MAC grid
+
+
+def test_seed_changes_spikes_not_accuracy(trained):
+    _, params_q, ds = trained
+    a, _ = int_accuracy(params_q, SNN_CONFIG, ds.x_test[:300],
+                        ds.y_test[:300], seed=1)
+    b, _ = int_accuracy(params_q, SNN_CONFIG, ds.x_test[:300],
+                        ds.y_test[:300], seed=999)
+    assert abs(a - b) < 0.05    # stochastic encoder, stable classifier

@@ -1,0 +1,112 @@
+"""Training-step semantics (microbatching, streaming optimizer) and the
+serving engine (generate, early exit, straggler detection)."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.serve import generate, stability_gate
+from repro.train import StragglerDetector, TrainSettings, init_state
+from repro.train.step import cross_entropy, make_train_step
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_reduced("qwen3-4b")
+    key = jax.random.PRNGKey(0)
+    toks = jax.random.randint(key, (8, 17), 0, cfg.vocab_size)
+    batch = {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+    return cfg, key, batch
+
+
+def test_microbatched_grads_match_full_batch(setup):
+    cfg, key, batch = setup
+    s1 = TrainSettings(num_microbatches=1)
+    s4 = TrainSettings(num_microbatches=4)
+    st = init_state(key, cfg, s1)
+    a, ma = jax.jit(make_train_step(cfg, s1))(st, batch)
+    b, mb = jax.jit(make_train_step(cfg, s4))(st, batch)
+    np.testing.assert_allclose(float(ma["loss"]), float(mb["loss"]), rtol=1e-5)
+    for x, y in zip(jax.tree.leaves(a.params), jax.tree.leaves(b.params)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_loss_decreases_over_steps(setup):
+    cfg, key, batch = setup
+    s = TrainSettings(learning_rate=3e-3, warmup_steps=1)
+    st = init_state(key, cfg, s)
+    step = jax.jit(make_train_step(cfg, s))
+    losses = []
+    for _ in range(15):
+        st, m = step(st, batch)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] * 0.8
+
+
+def test_cross_entropy_masks_padded_vocab():
+    logits = jnp.zeros((1, 2, 8))
+    # put huge mass on a padded slot — must not affect loss with vocab=4
+    logits = logits.at[..., 6].set(50.0)
+    labels = jnp.zeros((1, 2), jnp.int32)
+    nll, acc = cross_entropy(logits, labels, vocab_size=4)
+    np.testing.assert_allclose(float(nll), np.log(4), rtol=1e-5)
+    assert float(acc) == 1.0     # all unpadded logits equal ⇒ label is argmax
+
+
+def test_cross_entropy_matches_naive():
+    rng = np.random.default_rng(0)
+    logits = jnp.asarray(rng.normal(0, 2, (3, 5, 11)).astype(np.float32))
+    labels = jnp.asarray(rng.integers(0, 11, (3, 5)))
+    nll, _ = cross_entropy(logits, labels, vocab_size=11)
+    lp = jax.nn.log_softmax(logits, -1)
+    want = -np.take_along_axis(np.asarray(lp), np.asarray(labels)[..., None],
+                               axis=-1).mean()
+    np.testing.assert_allclose(float(nll), want, rtol=1e-6)
+
+
+def test_generate_with_early_exit(setup):
+    cfg, key, _ = setup
+    st = init_state(key, cfg, TrainSettings())
+    prompt = {"tokens": jax.random.randint(key, (4, 8), 0, cfg.vocab_size)}
+    toks, active = generate(st.params, prompt, cfg, steps=8, max_len=32,
+                            early_exit_fn=stability_gate(4, patience=1))
+    assert toks.shape == (4, 8)
+    active = np.asarray(active)
+    assert (np.diff(active) <= 0).all()        # retired sequences stay retired
+    # an untrained model decodes near-constant tokens ⇒ someone retires
+    assert active[-1] < 4
+
+
+def test_early_exit_frozen_sequences_stop_changing(setup):
+    cfg, key, _ = setup
+    st = init_state(key, cfg, TrainSettings())
+    prompt = {"tokens": jax.random.randint(key, (4, 8), 0, cfg.vocab_size)}
+    toks, active = generate(st.params, prompt, cfg, steps=10, max_len=32,
+                            early_exit_fn=stability_gate(4, patience=1))
+    toks = np.asarray(toks)
+    # once a sequence's token repeats to the end, it was retired & held
+    for b in range(4):
+        tail = toks[b, -3:]
+        if (tail == tail[0]).all():
+            assert (toks[b, -2:] == tail[0]).all()
+
+
+def test_straggler_detector_flags_slow_step():
+    det = StragglerDetector(warmup=3, k_sigma=2.0)
+    flagged = []
+    for i, dt in enumerate([1.0, 1.0, 1.0, 1.0, 1.0, 1.0, 5.0, 1.0]):
+        flagged.append(det.observe(i, dt))
+    assert flagged[6] is True and sum(flagged) == 1
+
+
+def test_straggler_detector_tolerates_noise():
+    rng = np.random.default_rng(0)
+    det = StragglerDetector(warmup=5, k_sigma=4.0)
+    flags = [det.observe(i, 1.0 + 0.05 * rng.standard_normal())
+             for i in range(100)]
+    assert sum(flags) <= 2
