@@ -6,7 +6,6 @@ stand-in, stable thereafter."""
 
 from __future__ import annotations
 
-import numpy as np
 
 from repro.configs.snn_mnist import SNN_CONFIG
 from repro.core.train_snn import int_accuracy

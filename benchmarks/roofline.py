@@ -25,7 +25,7 @@ import os
 
 from repro.configs import SHAPES, get_config
 
-from .common import emit, results_path, save_json
+from .common import emit, save_json
 
 # TPU v5e hardware constants (assignment-specified)
 PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip

@@ -4,11 +4,13 @@ results/bench/.
 
   PYTHONPATH=src python -m benchmarks.run            # everything
   PYTHONPATH=src python -m benchmarks.run --only fig5,roofline
+  PYTHONPATH=src python -m benchmarks.run --only fused --tiny   # CI smoke
 """
 
 from __future__ import annotations
 
 import argparse
+import os
 import sys
 import time
 import traceback
@@ -21,6 +23,7 @@ SUITES = {
     "fig7": ("bench_efficiency", "Fig 7 — efficiency score"),
     "fig8": ("bench_robustness", "Fig 8 — robustness"),
     "engine": ("bench_engine", "SNN engine throughput (JAX/kernels)"),
+    "fused": ("bench_fused", "Fused vs staged encode→LIF (time + bytes)"),
     "roofline": ("roofline", "Roofline terms from the dry-run"),
 }
 
@@ -29,7 +32,11 @@ def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated suite names")
+    ap.add_argument("--tiny", action="store_true",
+                    help="shrink problem sizes (CI kernel-regression smoke)")
     args = ap.parse_args(argv)
+    if args.tiny:
+        os.environ["REPRO_BENCH_TINY"] = "1"
     want = args.only.split(",") if args.only else list(SUITES)
 
     failures = []

@@ -1,10 +1,14 @@
 """Early-exit serving (the paper's active pruning at the request level).
 
-Two demos:
+Three demos:
   1. SNN classification with per-image early exit: an image whose running
      prediction has been stable for `patience` timesteps stops consuming
      timesteps — the latency/energy histogram is the paper's Fig 6/7 story.
-  2. LM serving with the same gate: a reduced qwen3 decodes a batch and
+  2. Batched STREAMING SNN serving (serve/snn_engine.py): requests queue
+     into a fixed batch tile, retire via the same stability gate mid-window,
+     and compaction admits waiting images into the freed lanes — the
+     continuous-batching view of the same energy win.
+  3. LM serving with the same gate: a reduced qwen3 decodes a batch and
      retires stable sequences (serve/early_exit.py).
 
   PYTHONPATH=src python examples/serve_early_exit.py
@@ -48,6 +52,30 @@ def snn_demo(T: int = 20, patience: int = 3):
     print("exit histogram:", hist.tolist())
 
 
+def stream_demo(n_requests: int = 64, batch: int = 8, patience: int = 3):
+    print("\n== batched streaming SNN serving (continuous batching) ==")
+    from repro.serve import SNNStreamEngine
+
+    params, params_q, ds = fit_or_load()
+    eng = SNNStreamEngine(params_q, SNN_CONFIG, batch_size=batch,
+                          chunk_steps=4, patience=patience, seed=11)
+    imgs = (ds.x_test[:n_requests] * 255).astype(np.uint8)
+    ids = [eng.submit(im) for im in imgs]
+    results = eng.run()
+    preds = np.array([results[i].pred for i in ids])
+    steps = np.array([results[i].steps for i in ids])
+    adds = np.array([results[i].adds for i in ids])
+    early = np.array([results[i].early_exit for i in ids])
+    acc = (preds == ds.y_test[:n_requests]).mean()
+    T = SNN_CONFIG.num_steps
+    print(f"{n_requests} requests through {batch} lanes: acc {acc:.3f}")
+    print(f"window steps: mean {steps.mean():.1f}/{T} "
+          f"({100 * (1 - steps.mean() / T):.0f}% saved), "
+          f"{early.mean() * 100:.0f}% early-exited")
+    print(f"synaptic adds/request: mean {adds.mean():.0f} "
+          f"(retired lanes stop accumulating)")
+
+
 def lm_demo():
     print("\n== LM early-exit serving (reduced qwen3) ==")
     from repro.configs import get_reduced
@@ -69,4 +97,5 @@ def lm_demo():
 
 if __name__ == "__main__":
     snn_demo()
+    stream_demo()
     lm_demo()

@@ -8,8 +8,7 @@ variant of any config (same family/feature flags, tiny dims).
 
 from __future__ import annotations
 
-import dataclasses
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass, replace
 
 import jax.numpy as jnp
 

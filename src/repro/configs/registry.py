@@ -7,7 +7,7 @@ paper's own model (snn-mnist) is a separate family handled by
 
 from __future__ import annotations
 
-from .base import ArchConfig, SHAPES, ShapeConfig, reduced
+from .base import ArchConfig, SHAPES, reduced
 
 __all__ = ["register", "get_config", "get_reduced", "list_archs", "SHAPES",
            "shape_cells", "cell_is_live"]
@@ -63,6 +63,7 @@ def _ensure_loaded():
     if _loaded:
         return
     _loaded = True
-    from . import (arctic_480b, dbrx_132b, gemma2_9b, jamba_v01_52b,  # noqa: F401
-                   llama3_8b, llava_next_34b, mamba2_1p3b, nemotron_4_340b,
-                   qwen3_4b, snn_mnist, whisper_small)
+    from . import (arctic_480b, dbrx_132b, gemma2_9b,  # noqa: F401
+                   jamba_v01_52b, llama3_8b, llava_next_34b,  # noqa: F401
+                   mamba2_1p3b, nemotron_4_340b, qwen3_4b,  # noqa: F401
+                   snn_mnist, whisper_small)  # noqa: F401

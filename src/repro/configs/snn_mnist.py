@@ -22,7 +22,9 @@ CONFIG = register(ArchConfig(
     optimizer="adamw", remat=False, scan_layers=False,
 ))
 
-# The real configuration object used by the SNN engine:
+# The real configuration object used by the SNN engine.  ``backend`` picks
+# the integer-engine realisation (fused megakernel | staged Pallas kernels |
+# pure-jnp reference); "auto" resolves to fused on TPU, reference on CPU.
 SNN_CONFIG = SNNConfig(
     layer_sizes=(784, 10),
     num_steps=20,
@@ -31,6 +33,7 @@ SNN_CONFIG = SNNConfig(
     qat=True,
     readout="count",
     active_pruning=False,
+    backend="auto",
 )
 
 SNN_CONFIG_PRUNED = SNNConfig(
@@ -41,4 +44,5 @@ SNN_CONFIG_PRUNED = SNNConfig(
     qat=True,
     readout="first_spike",
     active_pruning=True,
+    backend="auto",
 )

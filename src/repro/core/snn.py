@@ -21,7 +21,6 @@ Weights layout: ``params = {"layers": [{"w": (n_in, n_out)}, ...]}``.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -35,6 +34,8 @@ __all__ = [
     "snn_apply_int",
     "snn_loss",
     "quantize_params",
+    "encode_lif_timestep",
+    "resolve_backend",
 ]
 
 
@@ -50,6 +51,16 @@ class SNNConfig:
     active_pruning: bool = False
     dot_impl: str = "int32"                    # int32 | f32 (bit-exact fast path)
     fuse_encoder: bool = False                 # PRNG+encode inside the LIF scan
+    # Integer-engine backend: which realisation of the RTL datapath runs.
+    #   fused     — one Pallas launch for the whole encode→LIF window; the
+    #               (T, B, N_in) spike tensor never touches HBM (§V-B)
+    #   staged    — Pallas encoder kernel + per-layer Pallas LIF kernel
+    #               (spike train round-trips between launches)
+    #   reference — pure-jnp scans (core.encoding / core.lif); the bit-exact
+    #               oracle and the fast path on hosts without a TPU
+    #   auto      — fused on TPU, reference elsewhere (Pallas interpret mode
+    #               is a correctness tool, not a fast CPU path)
+    backend: str = "auto"
     emit_trace: bool = True                    # False: no v/spike-train outputs
                                                # (prediction-only serving)
     # Float-threshold used during training; the int path scales it (below).
@@ -127,18 +138,131 @@ def quantize_params(params: dict, cfg: SNNConfig):
     return {"layers": out}
 
 
+def resolve_backend(cfg: SNNConfig, backend: str | None = None,
+                    n_layers: int = 1) -> str:
+    """Pick the integer-engine backend actually run on this host.
+
+    ``auto`` resolves to the fused megakernel on TPU and to the pure-jnp
+    reference scans elsewhere (Pallas interpret mode is far slower than XLA
+    on CPU — it is a correctness tool, not a serving path).  The fused
+    kernel only implements the paper's single-layer topology; deeper stacks
+    automatically fall back to the staged kernels (TPU) or reference (CPU).
+    """
+    b = backend if backend is not None else cfg.backend
+    on_tpu = jax.default_backend() == "tpu"
+    if b == "auto":
+        b = ("fused" if n_layers == 1 else "staged") if on_tpu else "reference"
+    if b == "fused" and n_layers != 1:
+        b = "staged" if on_tpu else "reference"
+    if b not in ("fused", "staged", "reference"):
+        raise ValueError(f"unknown SNN backend {b!r}")
+    return b
+
+
 def snn_apply_int(params_q: dict, pixels_u8: jax.Array, prng_state: jax.Array,
-                  cfg: SNNConfig, *, use_kernels: bool = False):
+                  cfg: SNNConfig, *, backend: str | None = None):
     """Bit-exact fixed-point inference (the RTL-equivalent engine).
+
+    All backends (see :class:`SNNConfig.backend`; ``backend`` here overrides
+    the config) implement the identical integer datapath and produce
+    bit-identical spike counts / traces for the same PRNG seeds.
 
     Args:
       params_q: from :func:`quantize_params`.
       pixels_u8: (batch, n_in) uint8.
       prng_state: (batch, n_in) uint32 xorshift lanes.
 
-    Returns dict(pred, spike_counts, v_trace, active_adds, input_spikes,
-                 first_spike_t, prng_state).
+    Returns dict(pred, spike_counts, v_trace, v_final, active_adds,
+                 input_spikes, first_spike_t, prng_state).  ``input_spikes``
+    is None on the fused backend — the spike train intentionally never
+    exists as a tensor there.
     """
+    b = resolve_backend(cfg, backend, len(params_q["layers"]))
+    if b == "fused":
+        res = _apply_int_fused(params_q, pixels_u8, prng_state, cfg)
+    elif b == "staged":
+        res = _apply_int_staged(params_q, pixels_u8, prng_state, cfg)
+    else:
+        res = _apply_int_reference(params_q, pixels_u8, prng_state, cfg)
+
+    counts = res["spike_counts"]
+    first_t = res["first_spike_t"]
+    T = cfg.num_steps
+
+    if cfg.readout == "count":
+        pred = jnp.argmax(counts, axis=-1)
+    elif cfg.readout == "membrane":
+        pred = pruning.membrane_readout(res["v_trace"])
+    else:  # first_spike
+        large = jnp.int32(1 << 24)
+        score = jnp.where(counts > 0, (T - first_t) * large,
+                          jnp.clip(res["v_final"], -large + 1, large - 1))
+        pred = jnp.argmax(score, axis=-1)
+
+    # NB: no non-array metadata in the result — callers jit this function.
+    res["pred"] = pred
+    return res
+
+
+def _apply_int_fused(params_q, pixels_u8, prng_state, cfg: SNNConfig):
+    """Fused Pallas megakernel: the whole window in one launch."""
+    from ..kernels import ops
+    k = ops.fused_snn_op(
+        pixels_u8, prng_state, params_q["layers"][0]["w_q"],
+        num_steps=cfg.num_steps, decay_shift=cfg.lif.decay_shift,
+        v_threshold=cfg.lif.v_threshold, v_rest=cfg.lif.v_rest,
+        v_min=cfg.lif.v_min, v_max=cfg.lif.v_max,
+        active_pruning=cfg.active_pruning)
+    return {
+        "spike_counts": k["spike_counts"],
+        "v_trace": k["v_trace"],
+        "v_final": k["v_final"],
+        "active_adds": k["active_adds"],
+        "input_spikes": None,
+        "first_spike_t": k["first_spike_t"],
+        "prng_state": k["prng_state"],
+    }
+
+
+def _apply_int_staged(params_q, pixels_u8, prng_state, cfg: SNNConfig):
+    """Staged Pallas kernels: encoder launch + one LIF launch per layer."""
+    from ..kernels import ops
+    spikes, prng_next = ops.poisson_encode_op(
+        pixels_u8, prng_state, cfg.num_steps)
+    x = spikes
+    for layer in params_q["layers"]:
+        layer_in = x
+        x, v_trace, v_final = ops.lif_forward_op(
+            x, layer["w_q"], decay_shift=cfg.lif.decay_shift,
+            v_threshold=cfg.lif.v_threshold, v_rest=cfg.lif.v_rest,
+            v_min=cfg.lif.v_min, v_max=cfg.lif.v_max,
+            active_pruning=cfg.active_pruning)
+    out_spikes = x
+    counts = jnp.sum(out_spikes.astype(jnp.int32), axis=0)
+    t_idx = jnp.arange(cfg.num_steps, dtype=jnp.int32)[:, None, None]
+    first_t = jnp.min(jnp.where(out_spikes, t_idx, cfg.num_steps), axis=0)
+    # Energy side channel, re-derived from the spike streams: a neuron is
+    # enabled at step t iff it has not fired before t (or pruning is off).
+    n_spk = jnp.sum(layer_in.astype(jnp.int32), axis=-1)       # (T, B)
+    if cfg.active_pruning:
+        fired_before = jnp.cumsum(out_spikes.astype(jnp.int32), axis=0) \
+            - out_spikes.astype(jnp.int32)
+        n_en = jnp.sum((fired_before == 0).astype(jnp.int32), axis=-1)
+    else:
+        n_en = jnp.full_like(n_spk, out_spikes.shape[-1])
+    return {
+        "spike_counts": counts,
+        "v_trace": v_trace,
+        "v_final": v_final,
+        "active_adds": n_spk * n_en,
+        "input_spikes": spikes,
+        "first_spike_t": first_t,
+        "prng_state": prng_next,
+    }
+
+
+def _apply_int_reference(params_q, pixels_u8, prng_state, cfg: SNNConfig):
+    """Pure-jnp scans (the original engine), incl. the fuse_encoder path."""
     if cfg.fuse_encoder and len(params_q["layers"]) == 1:
         # single fused scan: xorshift -> compare -> ΣW·S -> LIF, per step —
         # the (T, B, n_in) spike train never round-trips through memory
@@ -149,39 +273,23 @@ def snn_apply_int(params_q: dict, pixels_u8: jax.Array, prng_state: jax.Array,
     else:
         spikes, prng_next = encoding.poisson_encode_hw(
             pixels_u8, prng_state, cfg.num_steps)
-
         res = None
         x = spikes
-        for li, layer in enumerate(params_q["layers"]):
+        for layer in params_q["layers"]:
             res = lif.run_lif_int(x, layer["w_q"], cfg.lif,
                                   active_pruning=cfg.active_pruning,
                                   dot_impl=cfg.dot_impl)
             x = res["spikes"]
 
     out_spikes = res["spikes"]                       # (T, batch, n_out)
-    v_trace = res["v_trace"]
     counts = jnp.sum(out_spikes.astype(jnp.int32), axis=0)
-
     T = cfg.num_steps
-    fired_any = counts > 0
-    # first spike times
     t_idx = jnp.arange(T, dtype=jnp.int32)[:, None, None]
     first_t = jnp.min(jnp.where(out_spikes, t_idx, T), axis=0)
-
-    if cfg.readout == "count":
-        pred = jnp.argmax(counts, axis=-1)
-    elif cfg.readout == "membrane":
-        pred = pruning.membrane_readout(v_trace)
-    else:  # first_spike
-        large = jnp.int32(1 << 24)
-        score = jnp.where(fired_any, (T - first_t) * large,
-                          jnp.clip(res["state"].v, -large + 1, large - 1))
-        pred = jnp.argmax(score, axis=-1)
-
     return {
-        "pred": pred,
         "spike_counts": counts,
-        "v_trace": v_trace,
+        "v_trace": res["v_trace"],
+        "v_final": res["state"].v,
         "active_adds": res["active_adds"],
         "input_spikes": spikes,
         "first_spike_t": first_t,
@@ -189,26 +297,44 @@ def snn_apply_int(params_q: dict, pixels_u8: jax.Array, prng_state: jax.Array,
     }
 
 
+def encode_lif_timestep(rng: jax.Array, pixels_u8: jax.Array,
+                        state: lif.LIFStateInt, w_q: jax.Array,
+                        lif_cfg: lif.LIFConfig, *, dot_impl: str = "int32",
+                        active_pruning: bool = False):
+    """One fused encoder+LIF timestep: PRNG step → spike compare → Σ W·S →
+    integrate/leak/fire/reset → pruning gate.
+
+    The single source of truth for the per-step datapath shared by the
+    jnp fused scan below and the streaming engine's window chunk
+    (serve.snn_engine.stream_chunk) — both must stay bit-identical to the
+    staged pipeline.  Returns (rng, new_state, fired, input_spikes).
+    """
+    from . import prng as prng_mod
+    rng = prng_mod.xorshift32_step(rng)
+    s_t = pixels_u8 > prng_mod.uniform_u8(rng)
+    current = lif.synaptic_current_int(s_t, w_q, dot_impl)
+    current = jnp.where(state.enable, current, 0)
+    new_state, fired = lif.lif_step_int(state, current, lif_cfg)
+    if active_pruning:
+        new_state = new_state._replace(
+            enable=jnp.logical_and(new_state.enable,
+                                   jnp.logical_not(fired)))
+    return rng, new_state, fired, s_t
+
+
 def _fused_encode_lif(w_q: jax.Array, pixels_u8: jax.Array,
                       prng_state: jax.Array, cfg: SNNConfig):
     """One scan per timestep: PRNG step, spike compare, synaptic sum, LIF
     update.  Bit-identical to the unfused pipeline (same op order)."""
-    from . import prng as prng_mod
     batch_shape = pixels_u8.shape[:-1]
     n_out = w_q.shape[-1]
     state0 = lif.init_state_int(batch_shape + (n_out,), cfg.lif)
 
     def body(carry, _):
         rng, state = carry
-        rng = prng_mod.xorshift32_step(rng)
-        s_t = pixels_u8 > prng_mod.uniform_u8(rng)
-        current = lif.synaptic_current_int(s_t, w_q, cfg.dot_impl)
-        current = jnp.where(state.enable, current, 0)
-        new_state, fired = lif.lif_step_int(state, current, cfg.lif)
-        if cfg.active_pruning:
-            new_state = new_state._replace(
-                enable=jnp.logical_and(new_state.enable,
-                                       jnp.logical_not(fired)))
+        rng, new_state, fired, s_t = encode_lif_timestep(
+            rng, pixels_u8, state, w_q, cfg.lif, dot_impl=cfg.dot_impl,
+            active_pruning=cfg.active_pruning)
         n_spk = jnp.sum(s_t.astype(jnp.int32), axis=-1)
         n_en = jnp.sum(state.enable.astype(jnp.int32), axis=-1)
         ys = (fired, new_state.v, n_spk * n_en, s_t) if cfg.emit_trace \

@@ -1,0 +1,158 @@
+"""Pallas TPU megakernel: fused Poisson-encode → LIF window in ONE launch.
+
+The paper's efficiency argument (§V-B) is that the encoder and the LIF
+datapath share a chip, so the spike stream never crosses an external-memory
+boundary.  The staged kernels (poisson_encode.py + lif_step.py) break that
+property on TPU: the full ``(T, B, N_in)`` spike tensor round-trips through
+HBM between the two launches — for the paper config that is T× more traffic
+than the pixels themselves.  This kernel restores the RTL's event-stream
+locality:
+
+  * pixels and the per-pixel xorshift32 PRNG lanes are loaded into VMEM
+    once and stay there for the whole T-step window (the free-running LFSR
+    bank of Fig. 2);
+  * the int16 weight tile is resident across the window (the BRAM weight
+    bank of Fig. 1);
+  * each timestep generates the spike vector in registers/VMEM, feeds it
+    straight into the Σ W·S contraction (MXU int path — "adds only" since
+    one operand is binary), then the shift-leak / fire / reset / pruning
+    VPU stages — and discards it.  Spikes are **never written to HBM**.
+  * only the per-neuron outputs come back: spike counts, first-spike
+    times, the (T, B, N_out) membrane trace (N_out ≪ N_in), the final
+    membrane state, the per-step executed-add count (energy side channel)
+    and the advanced PRNG state.
+
+Grid: (B/bB, N_out/bN) with the output tile innermost so the per-step add
+counter can be accumulated across N_out tiles (standard revisit idiom).
+``n_out_true`` masks padded output columns out of the enable set so the
+energy accounting stays bit-identical to the unpadded reference.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["fused_snn_forward_pallas"]
+
+DEFAULT_BLOCK = (8, 128)  # (batch tile, out-neuron tile)
+
+
+def _fused_kernel(px_ref, st_ref, w_ref,
+                  cnt_ref, vtr_ref, first_ref, vfin_ref, adds_ref, st_out_ref,
+                  *, num_steps: int, decay_shift: int, v_threshold: int,
+                  v_rest: int, v_min: int, v_max: int, active_pruning: bool,
+                  n_out_true: int):
+    j = pl.program_id(1)
+    px = px_ref[...]                              # (bB, n_in) uint8
+    w = w_ref[...].astype(jnp.int32)              # (n_in, bN) resident all T
+    bB, bN = cnt_ref.shape
+
+    # Padded output columns are never enabled: they cannot fire and do not
+    # count toward the executed-add side channel.
+    col = j * bN + jax.lax.broadcasted_iota(jnp.int32, (bB, bN), 1)
+    valid = col < n_out_true
+
+    s0 = st_ref[...]                              # (bB, n_in) uint32
+    v0 = jnp.full((bB, bN), v_rest, jnp.int32)
+    cnt0 = jnp.zeros((bB, bN), jnp.int32)
+    first0 = jnp.full((bB, bN), num_steps, jnp.int32)
+
+    def body(t, carry):
+        s, v, en, cnt, first = carry
+        # --- encoder: xorshift32 step + 8-bit comparator (Fig. 2) ---
+        s = s ^ (s << 13)
+        s = s ^ (s >> 17)
+        s = s ^ (s << 5)
+        r = (s >> 24).astype(jnp.uint8)
+        spk = px > r                              # (bB, n_in) — stays on-chip
+        # --- Σ W·S: binary operand ⇒ adds-only datapath (MXU int path) ---
+        cur = jax.lax.dot_general(
+            spk.astype(jnp.int32), w, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32)
+        cur = jnp.where(en, cur, 0)               # pruning clock-gate
+        # --- LIF: saturating add, shift leak, compare, hard reset ---
+        v_int = jnp.clip(v + cur, v_min, v_max)
+        v_leak = v_int - (v_int >> decay_shift)
+        fired = jnp.logical_and(v_leak >= v_threshold, en)
+        v_new = jnp.where(fired, jnp.int32(v_rest), v_leak)
+        v_new = jnp.where(en, v_new, v)           # frozen when gated
+        vtr_ref[t, :, :] = v_new
+        # --- spike register / first-spike latch (readout state) ---
+        first = jnp.where(jnp.logical_and(fired, first == num_steps),
+                          jnp.int32(t), first)
+        cnt = cnt + fired.astype(jnp.int32)
+        # --- energy side channel: adds executed = input spikes × enabled ---
+        n_spk = jnp.sum(spk.astype(jnp.int32), axis=-1)      # (bB,)
+        n_en = jnp.sum(en.astype(jnp.int32), axis=-1)        # this j tile
+        adds_t = n_spk * n_en
+        adds_ref[t, :] = jnp.where(j == 0, adds_t, adds_ref[t, :] + adds_t)
+        if active_pruning:
+            en = jnp.logical_and(en, jnp.logical_not(fired))
+        return (s, v_new, en, cnt, first)
+
+    s_f, v_f, _, cnt_f, first_f = jax.lax.fori_loop(
+        0, num_steps, body, (s0, v0, valid, cnt0, first0))
+    cnt_ref[...] = cnt_f
+    first_ref[...] = first_f
+    vfin_ref[...] = v_f
+    st_out_ref[...] = s_f
+
+
+def fused_snn_forward_pallas(pixels_u8: jax.Array, state_u32: jax.Array,
+                             w_q: jax.Array, *, num_steps: int,
+                             decay_shift: int, v_threshold: int,
+                             v_rest: int = 0, v_min: int = -(1 << 20),
+                             v_max: int = (1 << 20) - 1,
+                             active_pruning: bool = False,
+                             n_out_true: int | None = None,
+                             block=DEFAULT_BLOCK, interpret: bool = False):
+    """pixels/state: (B, N_in); w_q: (N_in, N_out) int16/int8.
+
+    Returns (counts i32 (B,N_out), v_trace i32 (T,B,N_out),
+             first_spike_t i32 (B,N_out), v_final i32 (B,N_out),
+             active_adds i32 (T,B), state u32 (B,N_in)).
+    """
+    B, n_in = pixels_u8.shape
+    n_out = w_q.shape[1]
+    if n_out_true is None:
+        n_out_true = n_out
+    bB, bN = block
+    grid = (pl.cdiv(B, bB), pl.cdiv(n_out, bN))
+
+    kernel = functools.partial(
+        _fused_kernel, num_steps=num_steps, decay_shift=decay_shift,
+        v_threshold=v_threshold, v_rest=v_rest, v_min=v_min, v_max=v_max,
+        active_pruning=active_pruning, n_out_true=n_out_true)
+
+    cnt, vtr, first, vfin, adds, st_out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bB, n_in), lambda i, j: (i, 0)),
+            pl.BlockSpec((bB, n_in), lambda i, j: (i, 0)),
+            pl.BlockSpec((n_in, bN), lambda i, j: (0, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bB, bN), lambda i, j: (i, j)),
+            pl.BlockSpec((num_steps, bB, bN), lambda i, j: (0, i, j)),
+            pl.BlockSpec((bB, bN), lambda i, j: (i, j)),
+            pl.BlockSpec((bB, bN), lambda i, j: (i, j)),
+            # revisited across j (innermost) — accumulates the add counter
+            pl.BlockSpec((num_steps, bB), lambda i, j: (0, i)),
+            pl.BlockSpec((bB, n_in), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, n_out), jnp.int32),
+            jax.ShapeDtypeStruct((num_steps, B, n_out), jnp.int32),
+            jax.ShapeDtypeStruct((B, n_out), jnp.int32),
+            jax.ShapeDtypeStruct((B, n_out), jnp.int32),
+            jax.ShapeDtypeStruct((num_steps, B), jnp.int32),
+            jax.ShapeDtypeStruct((B, n_in), jnp.uint32),
+        ],
+        interpret=interpret,
+    )(pixels_u8, state_u32, w_q)
+    return cnt, vtr, first, vfin, adds, st_out

@@ -12,9 +12,10 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from . import lif_step, poisson_encode, spike_matmul
+from . import fused_snn, lif_step, poisson_encode, spike_matmul
 
-__all__ = ["poisson_encode_op", "lif_forward_op", "spike_matmul_op"]
+__all__ = ["poisson_encode_op", "lif_forward_op", "spike_matmul_op",
+           "fused_snn_op"]
 
 
 def _use_interpret() -> bool:
@@ -46,9 +47,11 @@ def poisson_encode_op(pixels_u8: jax.Array, state_u32: jax.Array,
 
 
 @partial(jax.jit, static_argnames=(
-    "decay_shift", "v_threshold", "v_rest", "active_pruning", "interpret"))
+    "decay_shift", "v_threshold", "v_rest", "v_min", "v_max",
+    "active_pruning", "interpret"))
 def lif_forward_op(spikes_t: jax.Array, w_q: jax.Array, *, decay_shift: int,
                    v_threshold: int, v_rest: int = 0,
+                   v_min: int = -(1 << 20), v_max: int = (1 << 20) - 1,
                    active_pruning: bool = False,
                    interpret: bool | None = None):
     """Fused T-step LIF layer via the Pallas kernel. See lif_step.py."""
@@ -60,8 +63,48 @@ def lif_forward_op(spikes_t: jax.Array, w_q: jax.Array, *, decay_shift: int,
     w = _pad_to(w_q, 1, bN)
     spk, vtr, vfin = lif_step.lif_forward_pallas(
         s, w, decay_shift=decay_shift, v_threshold=v_threshold,
-        v_rest=v_rest, active_pruning=active_pruning, interpret=interpret)
+        v_rest=v_rest, v_min=v_min, v_max=v_max,
+        active_pruning=active_pruning, interpret=interpret)
     return spk[:, :B, :n_out], vtr[:, :B, :n_out], vfin[:B, :n_out]
+
+
+@partial(jax.jit, static_argnames=(
+    "num_steps", "decay_shift", "v_threshold", "v_rest", "v_min", "v_max",
+    "active_pruning", "interpret"))
+def fused_snn_op(pixels_u8: jax.Array, state_u32: jax.Array, w_q: jax.Array,
+                 *, num_steps: int, decay_shift: int, v_threshold: int,
+                 v_rest: int = 0, v_min: int = -(1 << 20),
+                 v_max: int = (1 << 20) - 1, active_pruning: bool = False,
+                 interpret: bool | None = None):
+    """Whole encode→LIF window in one Pallas launch (see fused_snn.py).
+
+    Returns a dict with ``spike_counts`` (B, N_out) i32, ``v_trace``
+    (T, B, N_out) i32, ``first_spike_t`` (B, N_out) i32, ``v_final``
+    (B, N_out) i32, ``active_adds`` (T, B) i32 and ``prng_state``
+    (B, N_in) u32 — the (T, B, N_in) spike tensor is never materialised.
+    """
+    interpret = _use_interpret() if interpret is None else interpret
+    B, n_in = pixels_u8.shape
+    n_out = w_q.shape[1]
+    bB, bN = fused_snn.DEFAULT_BLOCK
+    # Zero-padded pixel/state lanes never spike (0 > r is false, and 0 is
+    # the xorshift fixed point), so padding is invisible to the datapath.
+    px = _pad_to(_pad_to(pixels_u8, 0, bB), 1, 128)
+    st = _pad_to(_pad_to(state_u32, 0, bB), 1, 128)
+    w = _pad_to(_pad_to(w_q, 0, 128), 1, bN)
+    cnt, vtr, first, vfin, adds, st_out = fused_snn.fused_snn_forward_pallas(
+        px, st, w, num_steps=num_steps, decay_shift=decay_shift,
+        v_threshold=v_threshold, v_rest=v_rest, v_min=v_min, v_max=v_max,
+        active_pruning=active_pruning, n_out_true=n_out,
+        interpret=interpret)
+    return {
+        "spike_counts": cnt[:B, :n_out],
+        "v_trace": vtr[:, :B, :n_out],
+        "first_spike_t": first[:B, :n_out],
+        "v_final": vfin[:B, :n_out],
+        "active_adds": adds[:, :B],
+        "prng_state": st_out[:B, :n_in],
+    }
 
 
 @partial(jax.jit, static_argnames=("mode", "interpret"))

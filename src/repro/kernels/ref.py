@@ -11,7 +11,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["poisson_encode_ref", "lif_forward_ref", "spike_matmul_ref"]
+__all__ = ["poisson_encode_ref", "lif_forward_ref", "spike_matmul_ref",
+           "fused_snn_ref"]
 
 
 def poisson_encode_ref(pixels_u8: jax.Array, state_u32: jax.Array,
@@ -58,6 +59,56 @@ def lif_forward_ref(spikes_t: jax.Array, w_q: jax.Array, *, decay_shift: int,
 
     (v_f, _), (spk, vtr) = jax.lax.scan(step, (v0, en0), spikes_t)
     return spk, vtr, v_f
+
+
+def fused_snn_ref(pixels_u8: jax.Array, state_u32: jax.Array,
+                  w_q: jax.Array, *, num_steps: int, decay_shift: int,
+                  v_threshold: int, v_rest: int = 0,
+                  v_min: int = -(1 << 20), v_max: int = (1 << 20) - 1,
+                  active_pruning: bool = False):
+    """Oracle for the fused encode→LIF megakernel (fused_snn.py).
+
+    Re-derives the whole window — PRNG, comparator, Σ W·S, leak, fire,
+    reset, pruning gate, add counter — in one scan, independently of both
+    ``repro.core`` and the staged oracles above.
+
+    Returns (counts i32 (B,N_out), v_trace i32 (T,B,N_out),
+             first_spike_t i32 (B,N_out), v_final i32 (B,N_out),
+             active_adds i32 (T,B), state u32 (B,N_in)).
+    """
+    B = pixels_u8.shape[0]
+    n_out = w_q.shape[1]
+    w = w_q.astype(jnp.int32)
+    v0 = jnp.full((B, n_out), v_rest, jnp.int32)
+    en0 = jnp.ones((B, n_out), bool)
+    cnt0 = jnp.zeros((B, n_out), jnp.int32)
+    first0 = jnp.full((B, n_out), num_steps, jnp.int32)
+
+    def step(carry, t):
+        s, v, en, cnt, first = carry
+        s = s ^ (s << 13)
+        s = s ^ (s >> 17)
+        s = s ^ (s << 5)
+        spk = pixels_u8 > (s >> 24).astype(jnp.uint8)
+        cur = jnp.dot(spk.astype(jnp.int32), w)
+        cur = jnp.where(en, cur, 0)
+        v_int = jnp.clip(v + cur, v_min, v_max)
+        v_leak = v_int - (v_int >> decay_shift)
+        fired = jnp.logical_and(v_leak >= v_threshold, en)
+        v_new = jnp.where(fired, jnp.int32(v_rest), v_leak)
+        v_new = jnp.where(en, v_new, v)
+        first = jnp.where(jnp.logical_and(fired, first == num_steps),
+                          t.astype(jnp.int32), first)
+        cnt = cnt + fired.astype(jnp.int32)
+        adds = (jnp.sum(spk.astype(jnp.int32), axis=-1)
+                * jnp.sum(en.astype(jnp.int32), axis=-1))
+        if active_pruning:
+            en = jnp.logical_and(en, jnp.logical_not(fired))
+        return (s, v_new, en, cnt, first), (v_new, adds)
+
+    (s_f, v_f, _, cnt_f, first_f), (vtr, adds_t) = jax.lax.scan(
+        step, (state_u32, v0, en0, cnt0, first0), jnp.arange(num_steps))
+    return cnt_f, vtr, first_f, v_f, adds_t, s_f
 
 
 def spike_matmul_ref(spikes: jax.Array, w_q: jax.Array) -> jax.Array:

@@ -12,7 +12,7 @@ import time
 import jax
 import numpy as np
 
-from ..configs import get_config, get_reduced
+from ..configs import get_reduced
 from ..serve import generate, stability_gate
 from .mesh import make_local_mesh
 from ..distributed.sharding import make_rules, use_rules

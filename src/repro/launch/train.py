@@ -20,8 +20,7 @@ from ..checkpoint import CheckpointManager, latest_step
 from ..configs import get_config, get_reduced
 from ..data import tokens as tok
 from ..data.pipeline import prefetch
-from ..distributed.partition import (batch_specs, to_shardings,
-                                     train_state_specs)
+from ..distributed.partition import to_shardings, train_state_specs
 from ..distributed.sharding import make_rules, use_rules
 from ..train import (StragglerDetector, TrainLoop, TrainSettings, init_state,
                      make_train_step)

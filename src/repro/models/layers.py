@@ -9,7 +9,6 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from ..distributed.sharding import shard
 
 __all__ = [
     "rmsnorm", "layernorm", "rope", "apply_rope", "activation_fn",

@@ -19,7 +19,6 @@ the scan layout.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -28,7 +27,6 @@ from ..distributed.sharding import shard
 from . import attention as attn_mod
 from . import ffn as ffn_mod
 from . import mamba as mamba_mod
-from .attention import AttnCache
 from .layers import embed_init, dense_init, layernorm, rmsnorm, softcap
 
 __all__ = ["LayerSpec", "layer_plan", "block_size", "lm_init", "lm_apply",

@@ -1,9 +1,22 @@
 """Serving substrate: prefill/decode engine, sequence-sharded KV cache,
-early-exit request retirement (the paper's active-pruning analogue)."""
+early-exit request retirement (the paper's active-pruning analogue), and
+the batched streaming SNN engine (continuous batching over window chunks).
 
+Two request shapes share one early-exit mechanism:
+  * LM requests — ``generate`` + ``make_prefill``/``make_decode_step``
+    (engine.py), early exit retires stable/EOS sequences.
+  * SNN image requests — ``SNNStreamEngine`` (snn_engine.py), early exit
+    retires stable classifications mid-window and lane compaction admits
+    queued images into the freed batch-tile slots.
+"""
+
+from .early_exit import (StabilityGateState, eos_gate, stability_gate,
+                         stability_init, stability_step)
 from .engine import (ServeState, generate, make_decode_step, make_prefill,
                      pad_cache_to)
-from .early_exit import eos_gate, stability_gate
+from .snn_engine import RequestResult, SNNStreamEngine
 
 __all__ = ["ServeState", "generate", "make_decode_step", "make_prefill",
-           "pad_cache_to", "eos_gate", "stability_gate"]
+           "pad_cache_to", "eos_gate", "stability_gate",
+           "StabilityGateState", "stability_init", "stability_step",
+           "SNNStreamEngine", "RequestResult"]

@@ -8,16 +8,30 @@ that emitted EOS) stops consuming decode steps — its cache writes and
 compute are gated off (see serve.engine.make_decode_step), and the freed
 slots shrink the active batch.  The measurable win is the same quantity the
 paper plots in Fig. 6/7: accuracy (or completion) per unit time/energy.
+
+The stability gate is a **pure** ``(state, pred) -> (state, done)``
+function over a :class:`StabilityGateState` pytree, so it can live inside
+``jax.jit`` / ``jax.lax.scan`` bodies — in particular inside the batched
+streaming SNN engine's window loop (serve.snn_engine) and the fused decode
+loop.  :class:`StabilityState` remains as a thin stateful convenience
+wrapper for the host-side ``generate`` loop.
 """
 
 from __future__ import annotations
 
-from typing import Callable
+from typing import Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
 
-__all__ = ["eos_gate", "stability_gate", "StabilityState"]
+__all__ = [
+    "eos_gate",
+    "stability_gate",
+    "StabilityGateState",
+    "stability_init",
+    "stability_step",
+    "StabilityState",
+]
 
 
 def eos_gate(eos_id: int) -> Callable:
@@ -26,24 +40,55 @@ def eos_gate(eos_id: int) -> Callable:
     return gate
 
 
-class StabilityState:
-    """Stateful gate: retire when argmax prediction unchanged ``patience``×.
+class StabilityGateState(NamedTuple):
+    """Per-lane gate state: previous prediction and its run length."""
 
-    Mirrors core.pruning.stability_early_exit but runs online during
-    decode (no need to see the whole window).
+    prev: jax.Array      # int32 (B,): last prediction (-1 = none yet)
+    streak: jax.Array    # int32 (B,): consecutive identical predictions
+
+
+def stability_init(batch: int) -> StabilityGateState:
+    return StabilityGateState(
+        prev=jnp.full((batch,), -1, jnp.int32),
+        streak=jnp.zeros((batch,), jnp.int32),
+    )
+
+
+def stability_step(state: StabilityGateState, pred: jax.Array,
+                   patience: int) -> tuple[StabilityGateState, jax.Array]:
+    """One gate update.  Pure — safe under jit/scan/vmap.
+
+    ``pred``: int (B,) current per-lane prediction.  Returns the new state
+    and ``done``: bool (B,), True once the prediction has repeated
+    ``patience`` times (i.e. been stable for patience+1 observations).
     """
+    pred = pred.astype(jnp.int32)
+    streak = jnp.where(pred == state.prev, state.streak + 1, 0)
+    return StabilityGateState(prev=pred, streak=streak), streak >= patience
+
+
+class StabilityState:
+    """Stateful convenience wrapper over the pure gate, matching the
+    ``early_exit_fn(last_token, logits) -> done`` callable contract of
+    ``serve.engine.generate``.  Mirrors core.pruning.stability_early_exit
+    but runs online during decode (no need to see the whole window)."""
 
     def __init__(self, batch: int, patience: int = 3):
         self.patience = patience
-        self.prev = jnp.full((batch,), -1, jnp.int32)
-        self.streak = jnp.zeros((batch,), jnp.int32)
+        self.state = stability_init(batch)
+
+    @property
+    def prev(self) -> jax.Array:
+        return self.state.prev
+
+    @property
+    def streak(self) -> jax.Array:
+        return self.state.streak
 
     def __call__(self, last_token: jax.Array, logits: jax.Array) -> jax.Array:
-        pred = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        same = pred == self.prev
-        self.streak = jnp.where(same, self.streak + 1, 0)
-        self.prev = pred
-        return self.streak >= self.patience
+        pred = jnp.argmax(logits, axis=-1)
+        self.state, done = stability_step(self.state, pred, self.patience)
+        return done
 
 
 def stability_gate(batch: int, patience: int = 3) -> StabilityState:

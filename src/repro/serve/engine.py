@@ -7,7 +7,11 @@ launcher with the cache sharded over "kv_seq" (flash-decoding-style
 sequence sharding — the long-context decode path).
 
 Early exit (the paper's active-pruning analogue at the serving layer) lives
-in early_exit.py and composes with ``generate``.
+in early_exit.py and composes with ``generate``.  The SNN counterpart of
+this engine — batched streaming classification with early-exit lane
+compaction — is ``snn_engine.SNNStreamEngine``; the underlying integer
+datapath is selected by ``core.snn.SNNConfig.backend``
+(fused Pallas megakernel | staged kernels | jnp reference).
 """
 
 from __future__ import annotations
@@ -17,7 +21,7 @@ from typing import Any, NamedTuple
 import jax
 import jax.numpy as jnp
 
-from ..models.transformer import init_cache, lm_apply
+from ..models.transformer import lm_apply
 
 __all__ = ["ServeState", "make_prefill", "make_decode_step", "generate",
            "pad_cache_to"]

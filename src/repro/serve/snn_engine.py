@@ -1,0 +1,283 @@
+"""Batched streaming SNN serving engine (paper §IV-C at the request level).
+
+The RTL classifies one image per window.  A TPU serving deployment instead
+packs many requests into one batch tile and streams them through the
+integer datapath together.  This engine adds the two scheduling ideas that
+make that efficient under heavy traffic:
+
+  * **Early exit** — a lane whose running prediction has been stable for
+    ``patience`` consecutive steps retires before the window ends (the
+    request-level analogue of active pruning; pure gate from
+    serve.early_exit, evaluated *inside* the jitted window chunk so a lane
+    stops burning adds the step it retires, not at the next host sync).
+  * **Lane compaction** — at chunk boundaries, retired lanes are compacted
+    out of the batch tile and the freed slots admit queued images, so a
+    long-running image never blocks throughput (continuous batching).
+
+The per-lane executed-add counter is the same energy side channel the
+paper integrates (§V): a retired lane's counter is frozen, which is the
+measurable "sleep sooner" win.
+
+The window chunk is a pure jitted function over explicit lane state, so
+the whole engine state is a pytree; only queue admission and result
+collection happen on the host.  Full-window (non-streaming) requests
+should instead go straight through ``core.snn.snn_apply_int``, which
+dispatches to the fused Pallas megakernel via the backend selector.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import lif as lif_mod
+from ..core import prng as prng_mod
+from ..core.snn import SNNConfig, encode_lif_timestep
+from .early_exit import StabilityGateState, stability_init, stability_step
+
+__all__ = ["SNNStreamEngine", "LaneState", "RequestResult", "stream_chunk"]
+
+
+class LaneState(NamedTuple):
+    """Device-side state of one batch tile (all arrays leading dim B)."""
+
+    px: jax.Array          # (B, n_in) uint8 pixels
+    rng: jax.Array         # (B, n_in) uint32 xorshift lanes
+    v: jax.Array           # (B, n_out) int32 membrane accumulators
+    en: jax.Array          # (B, n_out) bool neuron clock-gates
+    counts: jax.Array      # (B, n_out) int32 spike registers
+    gate_prev: jax.Array   # (B,) int32 stability-gate memory
+    gate_streak: jax.Array  # (B,) int32
+    steps: jax.Array       # (B,) int32 window steps executed
+    adds: jax.Array        # (B,) int32 executed synaptic adds (energy)
+    active: jax.Array      # (B,) bool — lane still consuming compute
+
+
+@dataclass
+class RequestResult:
+    request_id: int
+    pred: int
+    spike_counts: np.ndarray
+    steps: int             # window steps actually consumed
+    adds: int              # synaptic adds executed (energy side channel)
+    early_exit: bool       # retired by the stability gate before T
+
+
+def _init_lanes(batch: int, n_in: int, n_out: int,
+                v_rest: int) -> LaneState:
+    g = stability_init(batch)
+    return LaneState(
+        px=jnp.zeros((batch, n_in), jnp.uint8),
+        rng=jnp.full((batch, n_in), 1, jnp.uint32),
+        v=jnp.full((batch, n_out), v_rest, jnp.int32),
+        en=jnp.ones((batch, n_out), bool),
+        counts=jnp.zeros((batch, n_out), jnp.int32),
+        gate_prev=g.prev,
+        gate_streak=g.streak,
+        steps=jnp.zeros((batch,), jnp.int32),
+        adds=jnp.zeros((batch,), jnp.int32),
+        active=jnp.zeros((batch,), bool),
+    )
+
+
+@partial(jax.jit, static_argnames=(
+    "chunk_steps", "num_steps", "lif_cfg", "dot_impl", "active_pruning",
+    "patience"))
+def stream_chunk(lanes: LaneState, w_q: jax.Array, *, chunk_steps: int,
+                 num_steps: int, lif_cfg: lif_mod.LIFConfig,
+                 dot_impl: str, active_pruning: bool,
+                 patience: int) -> LaneState:
+    """Advance every active lane by up to ``chunk_steps`` window steps.
+
+    The per-step datapath is ``core.snn.encode_lif_timestep`` — the same
+    single source of truth the fused jnp scan uses — with two lane-level
+    gates on top: the stability early exit and the T-step window bound.
+    A retired/inactive lane is completely frozen — PRNG, membrane,
+    counters and the add counter stop, which is what the compaction test
+    measures.
+    """
+
+    def body(carry, _):
+        st = carry
+        act = st.active
+        neuron = lif_mod.LIFStateInt(v=st.v, enable=st.en)
+        rng, neuron, fired, spk = encode_lif_timestep(
+            st.rng, st.px, neuron, w_q, lif_cfg, dot_impl=dot_impl,
+            active_pruning=active_pruning)
+        v_new, en = neuron.v, neuron.enable
+        counts = st.counts + fired.astype(jnp.int32)
+        adds_t = (jnp.sum(spk.astype(jnp.int32), axis=-1)
+                  * jnp.sum(st.en.astype(jnp.int32), axis=-1))
+        # stability gate on the running prediction (pure, in-loop); a lane
+        # with no output spikes yet has no prediction to be stable about —
+        # its gate state stays at init so neither the streak nor the retire
+        # can trigger before the first spike (argmax(zeros)=0 is not a
+        # stable class-0 vote, and the streak must not pre-accumulate).
+        has_spike = jnp.max(counts, axis=-1) > 0
+        pred = jnp.argmax(counts, axis=-1).astype(jnp.int32)
+        gate, done = stability_step(
+            StabilityGateState(prev=st.gate_prev, streak=st.gate_streak),
+            pred, patience)
+        gate = StabilityGateState(
+            prev=jnp.where(has_spike, gate.prev, -1),
+            streak=jnp.where(has_spike, gate.streak, 0))
+        done = jnp.logical_and(done, has_spike)
+        steps = st.steps + act.astype(jnp.int32)
+        still = jnp.logical_and(act, jnp.logical_not(done))
+        still = jnp.logical_and(still, steps < num_steps)
+
+        def keep(new, old, mask=act):
+            return jnp.where(mask.reshape((-1,) + (1,) * (new.ndim - 1)),
+                             new, old)
+
+        return LaneState(
+            px=st.px,
+            rng=keep(rng, st.rng),
+            v=keep(v_new, st.v),
+            en=keep(en, st.en),
+            counts=keep(counts, st.counts),
+            gate_prev=keep(gate.prev, st.gate_prev),
+            gate_streak=keep(gate.streak, st.gate_streak),
+            steps=steps,
+            adds=st.adds + jnp.where(act, adds_t, 0),
+            active=jnp.where(act, still, st.active),
+        ), None
+
+    lanes, _ = jax.lax.scan(body, lanes, None, length=chunk_steps)
+    return lanes
+
+
+class SNNStreamEngine:
+    """Continuous-batching front end over the streaming window chunk.
+
+    Usage::
+
+        eng = SNNStreamEngine(params_q, cfg, batch_size=8)
+        ids = [eng.submit(img) for img in images]     # queue requests
+        results = eng.run()                            # {id: RequestResult}
+    """
+
+    def __init__(self, params_q: dict, cfg: SNNConfig, *, batch_size: int = 8,
+                 chunk_steps: int = 4, patience: int = 2, seed: int = 0):
+        if len(params_q["layers"]) != 1:
+            raise ValueError("streaming engine supports the paper's "
+                             "single-layer topology")
+        if cfg.readout != "count":
+            raise ValueError(
+                f"streaming engine implements the 'count' readout only; "
+                f"got readout={cfg.readout!r} — run first_spike/membrane "
+                f"configs through core.snn.snn_apply_int instead")
+        self.w_q = params_q["layers"][0]["w_q"]
+        self.cfg = cfg
+        self.batch_size = batch_size
+        self.chunk_steps = chunk_steps
+        self.patience = patience
+        self.seed = seed
+        self.n_in, self.n_out = self.w_q.shape
+        self.lanes = _init_lanes(batch_size, self.n_in, self.n_out,
+                                 cfg.lif.v_rest)
+        self.lane_req: list[int | None] = [None] * batch_size
+        self.queue: list[tuple[int, np.ndarray]] = []
+        self.results: dict[int, RequestResult] = {}
+        self._next_id = 0
+
+    # ---- request intake -------------------------------------------------
+    def submit(self, pixels_u8: np.ndarray) -> int:
+        """Enqueue one image; returns its request id."""
+        pixels_u8 = np.asarray(pixels_u8, np.uint8).reshape(self.n_in)
+        rid = self._next_id
+        self._next_id += 1
+        self.queue.append((rid, pixels_u8))
+        return rid
+
+    @property
+    def pending(self) -> int:
+        return len(self.queue) + sum(r is not None for r in self.lane_req)
+
+    # ---- scheduling -----------------------------------------------------
+    def _admit_and_compact(self) -> list[int]:
+        """Harvest retired lanes, compact active ones, admit queued images.
+
+        Returns the request ids finished in this call.  Runs on the host at
+        chunk boundaries: the batch tile stays dense, so freed slots start
+        contributing to throughput on the very next chunk.
+        """
+        occupied = np.array([r is not None for r in self.lane_req])
+        # Cheap pre-check: only the (B,) active mask crosses the device
+        # boundary.  The full lane-state round trip below happens only when
+        # a lane actually retired or a queued request can be admitted.
+        active = np.asarray(self.lanes.active)
+        if not (occupied & ~active).any() and not (
+                self.queue and not (occupied & active).all()):
+            return []
+        st = jax.tree.map(lambda a: np.array(a), self.lanes)
+        finished_lanes = occupied & ~st.active
+        done_ids = []
+        for i in np.nonzero(finished_lanes)[0]:
+            rid = self.lane_req[int(i)]
+            self.results[rid] = RequestResult(
+                request_id=rid,
+                pred=int(st.counts[i].argmax()),
+                spike_counts=st.counts[i].copy(),
+                steps=int(st.steps[i]),
+                adds=int(st.adds[i]),
+                early_exit=int(st.steps[i]) < self.cfg.num_steps,
+            )
+            done_ids.append(rid)
+
+        # Compact: live lanes first (stable), freed/empty lanes after.
+        live = np.nonzero(occupied & st.active)[0]
+        free = np.nonzero(~(occupied & st.active))[0]
+        order = np.concatenate([live, free]).astype(np.int32)
+        st = jax.tree.map(lambda a: a[order], st)
+        n_live = len(live)
+        self.lane_req = ([self.lane_req[int(i)] for i in live]
+                         + [None] * (self.batch_size - n_live))
+
+        # Admit queued requests into the freed tail slots.
+        for slot in range(n_live, self.batch_size):
+            if not self.queue:
+                break
+            rid, pixels = self.queue.pop(0)
+            st.px[slot] = pixels
+            st.rng[slot] = np.asarray(
+                prng_mod.seed_state(self.seed + rid, (self.n_in,)))
+            st.v[slot] = self.cfg.lif.v_rest
+            st.en[slot] = True
+            st.counts[slot] = 0
+            st.gate_prev[slot] = -1
+            st.gate_streak[slot] = 0
+            st.steps[slot] = 0
+            st.adds[slot] = 0
+            st.active[slot] = True
+            self.lane_req[slot] = rid
+
+        self.lanes = jax.tree.map(jnp.asarray, st)
+        return done_ids
+
+    def step(self) -> list[int]:
+        """Admit + run one chunk.  Returns request ids finished so far."""
+        done = self._admit_and_compact()
+        self.lanes = stream_chunk(
+            self.lanes, self.w_q, chunk_steps=self.chunk_steps,
+            num_steps=self.cfg.num_steps, lif_cfg=self.cfg.lif,
+            dot_impl=self.cfg.dot_impl,
+            active_pruning=self.cfg.active_pruning, patience=self.patience)
+        return done
+
+    def run(self, max_chunks: int | None = None) -> dict[int, RequestResult]:
+        """Drive chunks until every submitted request has a result."""
+        limit = max_chunks if max_chunks is not None else (
+            (self.pending + self.batch_size)
+            * (self.cfg.num_steps // self.chunk_steps + 2))
+        for _ in range(limit):
+            if self.pending == 0:
+                break
+            self.step()
+        self._admit_and_compact()
+        return self.results

@@ -20,7 +20,6 @@ load-balance and router-z auxiliaries.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from functools import partial
 from typing import Any, NamedTuple
 
 import jax

@@ -1,0 +1,134 @@
+"""Deterministic fallback for ``hypothesis`` when it is not installed.
+
+The property tests in this suite (test_fixed_point, test_perf_variants,
+test_prng_encoding) use a small hypothesis subset: ``given``, ``settings``,
+``strategies.integers/sampled_from/floats`` and
+``hypothesis.extra.numpy.arrays/array_shapes``.  CI installs the real
+hypothesis (see pyproject.toml dev extras) and this file is inert; in
+hermetic environments without it, :func:`install` registers a minimal
+emulation under ``sys.modules['hypothesis']`` so the suite still collects
+and the properties still execute — over a fixed-seed sample sweep instead
+of hypothesis's adaptive search (no shrinking, no example database).
+"""
+
+from __future__ import annotations
+
+import inspect
+import sys
+import types
+import zlib
+
+import numpy as np
+
+
+class _Strategy:
+    def __init__(self, sample):
+        self._sample = sample
+
+    def example(self, rng: np.random.Generator):
+        return self._sample(rng)
+
+
+def integers(min_value: int, max_value: int) -> _Strategy:
+    return _Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+
+def sampled_from(elements) -> _Strategy:
+    elements = list(elements)
+    return _Strategy(lambda rng: elements[int(rng.integers(len(elements)))])
+
+
+def floats(min_value=0.0, max_value=1.0, *, width: int = 64,
+           allow_nan: bool = False, allow_infinity: bool = False) -> _Strategy:
+    def sample(rng):
+        x = float(rng.uniform(min_value, max_value))
+        return float(np.float32(x)) if width == 32 else x
+    return _Strategy(sample)
+
+
+def array_shapes(*, min_dims: int = 1, max_dims: int = 3, min_side: int = 1,
+                 max_side: int = 16) -> _Strategy:
+    def sample(rng):
+        nd = int(rng.integers(min_dims, max_dims + 1))
+        return tuple(int(s) for s in rng.integers(min_side, max_side + 1, nd))
+    return _Strategy(sample)
+
+
+def arrays(dtype, shape, *, elements: _Strategy | None = None) -> _Strategy:
+    def sample(rng):
+        shp = shape.example(rng) if isinstance(shape, _Strategy) else shape
+        n = int(np.prod(shp)) if shp else 1
+        if elements is None:
+            flat = rng.standard_normal(n)
+        else:
+            flat = [elements.example(rng) for _ in range(n)]
+        return np.asarray(flat, dtype=dtype).reshape(shp)
+    return _Strategy(sample)
+
+
+_DEFAULT_EXAMPLES = 20
+
+
+def given(**param_strategies):
+    def decorate(fn):
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_stub_max_examples", _DEFAULT_EXAMPLES)
+            rng = np.random.default_rng(
+                zlib.crc32(fn.__qualname__.encode()) & 0x7FFFFFFF)
+            for _ in range(n):
+                drawn = {k: s.example(rng)
+                         for k, s in param_strategies.items()}
+                fn(*args, **kwargs, **drawn)
+
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        # Hide the drawn parameters from pytest's fixture resolution.
+        remaining = [p for name, p in
+                     inspect.signature(fn).parameters.items()
+                     if name not in param_strategies]
+        wrapper.__signature__ = inspect.Signature(remaining)
+        wrapper._stub_max_examples = _DEFAULT_EXAMPLES
+        return wrapper
+    return decorate
+
+
+def settings(*, max_examples: int | None = None, deadline=None, **_ignored):
+    def decorate(fn):
+        if max_examples is not None and hasattr(fn, "_stub_max_examples"):
+            fn._stub_max_examples = max_examples
+        return fn
+    return decorate
+
+
+def install() -> None:
+    """Register the emulation as ``hypothesis`` in sys.modules (idempotent;
+    a no-op if the real package is importable)."""
+    try:
+        import hypothesis  # noqa: F401
+        return
+    except ModuleNotFoundError:
+        pass
+    if "hypothesis" in sys.modules:
+        return
+
+    hyp = types.ModuleType("hypothesis")
+    strategies = types.ModuleType("hypothesis.strategies")
+    extra = types.ModuleType("hypothesis.extra")
+    extra_np = types.ModuleType("hypothesis.extra.numpy")
+
+    strategies.integers = integers
+    strategies.sampled_from = sampled_from
+    strategies.floats = floats
+    extra_np.arrays = arrays
+    extra_np.array_shapes = array_shapes
+    hyp.given = given
+    hyp.settings = settings
+    hyp.strategies = strategies
+    hyp.extra = extra
+    extra.numpy = extra_np
+    hyp.__stub__ = True
+
+    sys.modules["hypothesis"] = hyp
+    sys.modules["hypothesis.strategies"] = strategies
+    sys.modules["hypothesis.extra"] = extra
+    sys.modules["hypothesis.extra.numpy"] = extra_np

@@ -9,6 +9,14 @@ import numpy as np
 import pytest
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.dirname(__file__))
+
+# Property tests import hypothesis; fall back to the deterministic stub so
+# the suite collects/runs in environments without it (CI installs the real
+# thing via the dev extras).
+import _hypothesis_stub  # noqa: E402
+
+_hypothesis_stub.install()
 
 
 @pytest.fixture(scope="session")

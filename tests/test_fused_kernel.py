@@ -1,0 +1,321 @@
+"""Fused encode→LIF megakernel + backend selector + streaming engine.
+
+Contracts under test:
+  * the fused Pallas kernel is bit-identical to its independent jnp oracle
+    AND to the staged kernel pipeline on shared xorshift seeds (same PRNG
+    stream ⇒ identical spike counts/traces);
+  * ``snn_apply_int`` produces identical results on all three backends,
+    including the executed-add energy side channel;
+  * the pure stability gate is scan-safe and equivalent to the legacy
+    stateful wrapper;
+  * the streaming engine's early-exit compaction freezes a retired lane's
+    op counter (the "sleep sooner" energy win) and freed slots admit
+    queued images.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.snn_mnist import SNN_CONFIG, SNN_CONFIG_PRUNED
+from repro.core import prng, snn
+from repro.kernels import ops, ref
+from repro.serve import (SNNStreamEngine, stability_gate, stability_init,
+                         stability_step)
+from repro.serve.snn_engine import LaneState, stream_chunk
+
+_FUSED_KEYS = ["spike_counts", "v_trace", "first_spike_t", "v_final",
+               "active_adds", "prng_state"]
+
+
+@pytest.mark.parametrize("b,n_in,n_out,t,shift,prune", [
+    (4, 784, 10, 20, 4, False),
+    (4, 784, 10, 20, 4, True),
+    (2, 64, 130, 8, 2, False),
+    (9, 100, 200, 3, 4, True),
+    (1, 32, 10, 5, 6, False),
+])
+def test_fused_kernel_matches_ref(rng, b, n_in, n_out, t, shift, prune):
+    px = jnp.asarray(rng.integers(0, 256, (b, n_in), dtype=np.uint8))
+    st = prng.seed_state(99, (b, n_in))
+    w = jnp.asarray(rng.integers(-256, 256, (n_in, n_out), dtype=np.int16))
+    got = ops.fused_snn_op(px, st, w, num_steps=t, decay_shift=shift,
+                           v_threshold=128, active_pruning=prune,
+                           interpret=True)
+    want = ref.fused_snn_ref(px, st, w, num_steps=t, decay_shift=shift,
+                             v_threshold=128, active_pruning=prune)
+    for key, w_val in zip(_FUSED_KEYS, want):
+        np.testing.assert_array_equal(np.asarray(got[key]),
+                                      np.asarray(w_val), err_msg=key)
+
+
+@pytest.mark.parametrize("prune", [False, True])
+def test_fused_kernel_matches_staged_kernels(rng, prune):
+    """Same xorshift seeds ⇒ the megakernel and the staged two-launch
+    pipeline produce identical spikes — the fusion changes memory traffic,
+    not arithmetic."""
+    b, n_in, n_out, t = 6, 300, 10, 12
+    px = jnp.asarray(rng.integers(0, 256, (b, n_in), dtype=np.uint8))
+    st = prng.seed_state(7, (b, n_in))
+    w = jnp.asarray(rng.integers(-256, 256, (n_in, n_out), dtype=np.int16))
+
+    fused = ops.fused_snn_op(px, st, w, num_steps=t, decay_shift=4,
+                             v_threshold=128, active_pruning=prune,
+                             interpret=True)
+    spikes, st_out = ops.poisson_encode_op(px, st, t, interpret=True)
+    spk, vtr, vfin = ops.lif_forward_op(spikes, w, decay_shift=4,
+                                        v_threshold=128,
+                                        active_pruning=prune, interpret=True)
+    np.testing.assert_array_equal(
+        np.asarray(fused["spike_counts"]),
+        np.asarray(jnp.sum(spk.astype(jnp.int32), axis=0)))
+    np.testing.assert_array_equal(np.asarray(fused["v_trace"]),
+                                  np.asarray(vtr))
+    np.testing.assert_array_equal(np.asarray(fused["v_final"]),
+                                  np.asarray(vfin))
+    np.testing.assert_array_equal(np.asarray(fused["prng_state"]),
+                                  np.asarray(st_out))
+
+
+@pytest.mark.parametrize("base_cfg", [SNN_CONFIG, SNN_CONFIG_PRUNED])
+def test_backend_selector_bit_identical(rng, base_cfg):
+    cfg = dataclasses.replace(base_cfg, num_steps=10)
+    w = jnp.asarray(rng.integers(-256, 256, (784, 10)), jnp.int16)
+    params_q = {"layers": [{"w_q": w, "scale": jnp.float32(1.0)}]}
+    px = jnp.asarray(rng.integers(0, 256, (16, 784), dtype=np.uint8))
+    st = prng.seed_state(77, px.shape)
+    outs = {b: snn.snn_apply_int(params_q, px, st, cfg, backend=b)
+            for b in ("reference", "staged", "fused")}
+    for key in ("pred", "spike_counts", "v_trace", "first_spike_t",
+                "prng_state", "active_adds"):
+        a = np.asarray(outs["reference"][key])
+        for b in ("staged", "fused"):
+            np.testing.assert_array_equal(a, np.asarray(outs[b][key]),
+                                          err_msg=f"{key} on {b}")
+    # the fused backend never materialises the input spike train
+    assert outs["fused"]["input_spikes"] is None
+
+
+def test_backend_bit_identical_with_custom_saturation(rng):
+    """Non-default accumulator clamp bounds must reach the Pallas backends
+    too (regression: fused/staged once silently used the kernel defaults,
+    diverging from reference under tight v_min/v_max)."""
+    from repro.core.lif import LIFConfig
+    cfg = dataclasses.replace(
+        SNN_CONFIG, num_steps=8,
+        lif=LIFConfig(decay_shift=4, v_threshold=128, v_rest=0,
+                      v_min=-256, v_max=255))
+    w = jnp.asarray(rng.integers(-256, 256, (784, 10)), jnp.int16)
+    params_q = {"layers": [{"w_q": w, "scale": jnp.float32(1.0)}]}
+    px = jnp.asarray(rng.integers(0, 256, (8, 784), dtype=np.uint8))
+    st = prng.seed_state(13, px.shape)
+    ref_out = snn.snn_apply_int(params_q, px, st, cfg, backend="reference")
+    for b in ("staged", "fused"):
+        out = snn.snn_apply_int(params_q, px, st, cfg, backend=b)
+        np.testing.assert_array_equal(np.asarray(ref_out["spike_counts"]),
+                                      np.asarray(out["spike_counts"]),
+                                      err_msg=b)
+        np.testing.assert_array_equal(np.asarray(ref_out["v_trace"]),
+                                      np.asarray(out["v_trace"]),
+                                      err_msg=b)
+
+
+def test_backend_auto_resolution():
+    on_tpu = jax.default_backend() == "tpu"
+    assert snn.resolve_backend(SNN_CONFIG, None, 1) == (
+        "fused" if on_tpu else "reference")
+    # the fused kernel only covers the single-layer topology
+    assert snn.resolve_backend(SNN_CONFIG, "fused", 2) == (
+        "staged" if on_tpu else "reference")
+    with pytest.raises(ValueError):
+        snn.resolve_backend(SNN_CONFIG, "warp-drive", 1)
+
+
+# ---------------------------------------------------------------------------
+# pure stability gate
+# ---------------------------------------------------------------------------
+
+def test_stability_gate_pure_matches_legacy_wrapper(rng):
+    batch, steps, patience = 5, 12, 3
+    preds = rng.integers(0, 4, (steps, batch))
+    legacy = stability_gate(batch, patience=patience)
+    state = stability_init(batch)
+    for t in range(steps):
+        p = jnp.asarray(preds[t], jnp.int32)
+        # legacy wrapper consumes logits; one-hot encodes the same pred
+        done_legacy = legacy(None, jax.nn.one_hot(p, 4))
+        state, done_pure = stability_step(state, p, patience)
+        np.testing.assert_array_equal(np.asarray(done_legacy),
+                                      np.asarray(done_pure))
+
+
+def test_stability_gate_is_scan_safe(rng):
+    """The refactored gate is a pure (state, pred) -> (state, done) function
+    and therefore usable inside jit/scan (the old class held JAX arrays as
+    mutable Python attributes and silently broke under tracing)."""
+    batch, steps, patience = 4, 10, 2
+    preds = jnp.asarray(rng.integers(0, 3, (steps, batch)), jnp.int32)
+
+    @jax.jit
+    def run(preds):
+        def body(state, p):
+            state, done = stability_step(state, p, patience)
+            return state, done
+        return jax.lax.scan(body, stability_init(batch), preds)[1]
+
+    dones = np.asarray(run(preds))
+    # oracle: done[t] iff the last patience+1 predictions are identical
+    for t in range(steps):
+        for b in range(batch):
+            window = preds[max(0, t - patience):t + 1, b]
+            expect = (t >= patience
+                      and bool((np.asarray(window) ==
+                                int(preds[t, b])).all()))
+            assert bool(dones[t, b]) == expect, (t, b)
+
+
+# ---------------------------------------------------------------------------
+# streaming engine: early exit, compaction, energy side channel
+# ---------------------------------------------------------------------------
+
+def _params(rng, n_in=784, n_out=10):
+    w = jnp.asarray(rng.integers(-256, 256, (n_in, n_out)), jnp.int16)
+    return {"layers": [{"w_q": w, "scale": jnp.float32(1.0)}]}
+
+
+def test_stream_engine_matches_batch_engine(rng):
+    """Full-window lanes (patience too high to early-exit) are bit-identical
+    to snn_apply_int — pred, spike counts AND executed adds."""
+    cfg = dataclasses.replace(SNN_CONFIG, num_steps=12)
+    params_q = _params(rng)
+    eng = SNNStreamEngine(params_q, cfg, batch_size=3, chunk_steps=5,
+                          patience=10_000, seed=31)
+    imgs = rng.integers(0, 256, (7, 784), dtype=np.uint8)
+    ids = [eng.submit(im) for im in imgs]
+    results = eng.run()
+    assert set(results) == set(ids)        # 7 requests through 3 lanes
+    for rid in ids:
+        r = results[rid]
+        assert r.steps == cfg.num_steps and not r.early_exit
+        px = jnp.asarray(imgs[rid][None])
+        st = prng.seed_state(31 + rid, (1, 784))
+        out = snn.snn_apply_int(params_q, px, st, cfg)
+        assert r.pred == int(np.asarray(out["pred"])[0])
+        np.testing.assert_array_equal(r.spike_counts,
+                                      np.asarray(out["spike_counts"])[0])
+        assert r.adds == int(np.asarray(out["active_adds"]).sum())
+
+
+def test_retired_lane_stops_accumulating_ops(rng):
+    """The energy side channel freezes the step a lane retires: a bright
+    image whose prediction stabilises immediately must consume far fewer
+    adds than the same image run for the full window, while a blank image
+    (no output spikes, hence no prediction) must NOT be retired as a
+    spurious class 0."""
+    cfg = dataclasses.replace(SNN_CONFIG, num_steps=20)
+    params_q = _params(rng)
+    eng = SNNStreamEngine(params_q, cfg, batch_size=2, chunk_steps=4,
+                          patience=2, seed=5)
+    blank = eng.submit(np.zeros(784, np.uint8))
+    bright = eng.submit(np.full(784, 255, np.uint8))
+    results = eng.run()
+    rb, rf = results[blank], results[bright]
+    # spikeless lane: argmax(zeros)=0 is not a stable prediction
+    assert not rb.early_exit and rb.steps == cfg.num_steps
+    assert rb.adds == 0                    # no input spikes ⇒ no adds at all
+    # bright lane: retired early, add counter frozen at the exit step
+    assert rf.early_exit and rf.steps < cfg.num_steps
+    full = snn.snn_apply_int(
+        params_q, jnp.full((1, 784), 255, jnp.uint8),
+        prng.seed_state(5 + bright, (1, 784)), cfg)
+    full_adds = int(np.asarray(full["active_adds"]).sum())
+    assert 0 < rf.adds < full_adds
+
+
+def test_stream_chunk_freezes_inactive_lanes(rng):
+    """Direct chunk-level check: an inactive lane's PRNG, membrane, spike
+    register and add counter are all frozen while an active lane advances."""
+    cfg = dataclasses.replace(SNN_CONFIG, num_steps=50)
+    params_q = _params(rng)
+    w_q = params_q["layers"][0]["w_q"]
+    px = jnp.asarray(rng.integers(128, 256, (2, 784), dtype=np.uint8))
+    lanes = LaneState(
+        px=px,
+        rng=prng.seed_state(1, (2, 784)),
+        v=jnp.zeros((2, 10), jnp.int32),
+        en=jnp.ones((2, 10), bool),
+        counts=jnp.zeros((2, 10), jnp.int32),
+        gate_prev=jnp.full((2,), -1, jnp.int32),
+        gate_streak=jnp.zeros((2,), jnp.int32),
+        steps=jnp.zeros((2,), jnp.int32),
+        adds=jnp.asarray([123, 456], jnp.int32),
+        active=jnp.asarray([True, False]),
+    )
+    out = stream_chunk(lanes, w_q, chunk_steps=6, num_steps=cfg.num_steps,
+                       lif_cfg=cfg.lif, dot_impl="int32",
+                       active_pruning=False, patience=10_000)
+    out = jax.tree.map(np.asarray, out)
+    # active lane advanced
+    assert out.steps[0] == 6 and out.adds[0] > 123
+    assert (out.rng[0] != np.asarray(lanes.rng)[0]).any()
+    # inactive lane fully frozen
+    assert out.steps[1] == 0 and out.adds[1] == 456
+    np.testing.assert_array_equal(out.rng[1], np.asarray(lanes.rng)[1])
+    np.testing.assert_array_equal(out.v[1], np.asarray(lanes.v)[1])
+    np.testing.assert_array_equal(out.counts[1], np.asarray(lanes.counts)[1])
+
+
+def test_spikeless_lane_gate_stays_armed(rng):
+    """A lane with zero output spikes must keep its stability gate at the
+    init state — no streak pre-accumulation on argmax(zeros)=0, which would
+    otherwise retire the lane the moment its first spike lands on any
+    class (observed as spurious class-0 results)."""
+    cfg = dataclasses.replace(SNN_CONFIG, num_steps=50)
+    w_q = _params(rng)["layers"][0]["w_q"]
+    lanes = LaneState(
+        px=jnp.zeros((1, 784), jnp.uint8),          # never spikes
+        rng=prng.seed_state(4, (1, 784)),
+        v=jnp.zeros((1, 10), jnp.int32),
+        en=jnp.ones((1, 10), bool),
+        counts=jnp.zeros((1, 10), jnp.int32),
+        gate_prev=jnp.full((1,), -1, jnp.int32),
+        gate_streak=jnp.zeros((1,), jnp.int32),
+        steps=jnp.zeros((1,), jnp.int32),
+        adds=jnp.zeros((1,), jnp.int32),
+        active=jnp.asarray([True]),
+    )
+    out = stream_chunk(lanes, w_q, chunk_steps=8, num_steps=cfg.num_steps,
+                       lif_cfg=cfg.lif, dot_impl="int32",
+                       active_pruning=False, patience=2)
+    out = jax.tree.map(np.asarray, out)
+    assert out.gate_prev[0] == -1 and out.gate_streak[0] == 0
+    assert out.active[0]                    # still waiting for evidence
+
+
+def test_stream_engine_rejects_non_count_readout(rng):
+    """The engine only implements the count readout; silently returning
+    count-argmax for a first_spike config would diverge from
+    snn_apply_int, so the constructor must refuse."""
+    with pytest.raises(ValueError, match="count"):
+        SNNStreamEngine(_params(rng), SNN_CONFIG_PRUNED, batch_size=2)
+
+
+def test_compaction_admits_queued_requests(rng):
+    """batch_size=1 with 4 requests: each retirement must free the slot for
+    the next queued image (continuous batching), and every request ends
+    with a result."""
+    cfg = dataclasses.replace(SNN_CONFIG, num_steps=8)
+    params_q = _params(rng)
+    eng = SNNStreamEngine(params_q, cfg, batch_size=1, chunk_steps=4,
+                          patience=10_000, seed=2)
+    imgs = rng.integers(0, 256, (4, 784), dtype=np.uint8)
+    ids = [eng.submit(im) for im in imgs]
+    assert eng.pending == 4
+    results = eng.run()
+    assert set(results) == set(ids)
+    assert eng.pending == 0
+    for rid in ids:
+        assert results[rid].steps == cfg.num_steps

@@ -3,12 +3,11 @@
 Each kernel is swept over shapes/dtypes and asserted EXACTLY equal to
 ref.py (all three kernels are integer/bitwise datapaths — no tolerance)."""
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels import lif_step, ops, poisson_encode, ref, spike_matmul
+from repro.kernels import ops, ref
 from repro.core import prng
 
 

@@ -9,7 +9,7 @@ import numpy as np
 import pytest
 
 from repro.configs import get_reduced, list_archs
-from repro.models import init_cache, lm_apply, lm_init
+from repro.models import lm_apply, lm_init
 from repro.train import TrainSettings, init_state
 from repro.train.step import make_train_step
 

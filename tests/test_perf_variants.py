@@ -11,7 +11,6 @@ from hypothesis import given, settings, strategies as st
 
 from repro.configs.snn_mnist import SNN_CONFIG
 from repro.core import lif, prng, snn
-from repro.core.lif import LIFConfig
 
 
 @pytest.mark.parametrize("prune", [False, True])

@@ -3,7 +3,6 @@ including hypothesis property tests on the encoding invariants."""
 
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core import encoding, prng

@@ -2,9 +2,7 @@
 bit-exact integer inference → paper-claim checks (shortened budgets; the
 full-budget numbers live in benchmarks/)."""
 
-import dataclasses
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -1,7 +1,6 @@
 """Training-step semantics (microbatching, streaming optimizer) and the
 serving engine (generate, early exit, straggler detection)."""
 
-import dataclasses
 
 import jax
 import jax.numpy as jnp
