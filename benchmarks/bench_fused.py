@@ -25,7 +25,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.snn_mnist import SNN_CONFIG
+from repro.configs.snn_mnist import SNN_CONFIG, SNN_CONFIG_DEEP
 from repro.core import prng, snn
 
 from .common import emit, save_json, time_call
@@ -35,6 +35,13 @@ def _sizes():
     if os.environ.get("REPRO_BENCH_TINY"):
         return dict(batch=16, T=5, n_in=784, n_out=10, repeats=2)
     return dict(batch=128, T=20, n_in=784, n_out=10, repeats=3)
+
+
+def _sizes_multilayer():
+    if os.environ.get("REPRO_BENCH_TINY"):
+        return dict(batch=8, T=4, layer_sizes=(784, 64, 32, 10), repeats=2)
+    return dict(batch=64, T=20, layer_sizes=SNN_CONFIG_DEEP.layer_sizes,
+                repeats=3)
 
 
 def run():
@@ -94,6 +101,97 @@ def run():
         "hop_reduction_vs_pixels": ratio_vs_pixels,
         "backend_platform": jax.default_backend(),
     }, "bench", "BENCH_fused.json")
+
+    run_multilayer()
+    return times
+
+
+def run_multilayer():
+    """Hidden-layer stacks: per-hop HBM spike bytes, staged vs fused.
+
+    Bouvier et al. (arXiv:2005.01467) identify inter-layer spike traffic
+    as the dominant cost of multi-layer SNN hardware.  The staged path
+    materialises every hop — the encoder output AND each hidden
+    activation train — as a (T, B, N) tensor written+read through HBM
+    (2·T·B·N bytes per hop); the multi-layer megakernel carries all of it
+    in VMEM scratch across the static layer loop, so every hop moves ZERO
+    HBM bytes.  Acceptance bar: fused per-hop bytes are exactly 0 on a
+    ≥2-hidden-layer stack while the backends stay bit-identical.
+    """
+    s = _sizes_multilayer()
+    batch, T, sizes = s["batch"], s["T"], tuple(s["layer_sizes"])
+    rng = np.random.default_rng(1)
+    params_q = {"layers": [
+        {"w_q": jnp.asarray(rng.integers(-256, 256, (n_in, n_out)),
+                            jnp.int16),
+         "scale": jnp.float32(1.0)}
+        for n_in, n_out in zip(sizes[:-1], sizes[1:])]}
+    px = jnp.asarray(rng.integers(0, 256, (batch, sizes[0]), dtype=np.uint8))
+    st = prng.seed_state(23, px.shape)
+    cfg = dataclasses.replace(SNN_CONFIG_DEEP, layer_sizes=sizes,
+                              num_steps=T)
+
+    outs, adds, times = {}, {}, {}
+    for backend in ("reference", "staged", "fused"):
+        fn = jax.jit(lambda p, a, b, bk=backend:
+                     snn.snn_apply_int(p, a, b, cfg, backend=bk))
+        times[backend] = time_call(
+            lambda p, a, b: fn(p, a, b)["spike_counts"], params_q, px, st,
+            repeats=s["repeats"])
+        out = fn(params_q, px, st)
+        outs[backend] = np.asarray(out["spike_counts"])
+        adds[backend] = np.asarray(out["active_adds"])
+        emit(f"fused_ml.{backend}", times[backend] / batch,
+             f"layers={len(sizes) - 1} batch={batch} T={T}"
+             + ("" if jax.default_backend() == "tpu"
+                else " (Pallas interpret on CPU)"
+                if backend != "reference" else ""))
+    exact = all(np.array_equal(outs["reference"], outs[b])
+                and np.array_equal(adds["reference"], adds[b])
+                for b in ("staged", "fused"))
+    emit("fused_ml.bit_identical", None,
+         f"counts+adds staged==fused==reference={exact}")
+    assert exact, "multi-layer backends disagree"
+
+    # Per-hop HBM spike bytes: hop 0 is encoder→layer1, hop l is
+    # layer l→layer l+1.  Staged writes then reads each (T, B, N) uint8
+    # spike train.  The fused path's zero is OBSERVED, not assumed: the
+    # whole stack must lower to exactly one pallas_call (no inter-launch
+    # tensor to round-trip) and must never materialise an input spike
+    # train — if a regression reintroduces staged launches under the
+    # fused backend, this gate (and the CI assert on the JSON) goes red.
+    fused_jaxpr = str(jax.make_jaxpr(
+        lambda p, a, b: snn.snn_apply_int(p, a, b, cfg, backend="fused")
+        ["spike_counts"])(params_q, px, st))
+    n_launches = fused_jaxpr.count("pallas_call")
+    fused_out = snn.snn_apply_int(params_q, px, st, cfg, backend="fused")
+    fused_is_one_launch = (n_launches == 1
+                           and fused_out["input_spikes"] is None)
+    emit("fused_ml.launches", None,
+         f"fused_pallas_calls={n_launches} input_spikes_materialised="
+         f"{fused_out['input_spikes'] is not None}")
+    assert fused_is_one_launch, \
+        f"fused path no longer a single launch ({n_launches} pallas_calls)"
+    staged_hops = [2 * T * batch * n for n in sizes[:-1]]
+    fused_hops = [0 if fused_is_one_launch else h for h in staged_hops]
+    for i, (sh, fh) in enumerate(zip(staged_hops, fused_hops)):
+        emit(f"fused_ml.hop{i}_bytes", None, f"staged={sh} fused={fh}")
+    emit("fused_ml.hop_bytes_total", None,
+         f"staged={sum(staged_hops)} fused={sum(fused_hops)} "
+         f"({sum(staged_hops) / (batch * sizes[0]):.0f}x the pixel stream)")
+    assert sum(fused_hops) == 0, "fused path must not materialise spikes"
+    assert len(staged_hops) >= 3, "need >=2 hidden layers for this bench"
+
+    save_json({
+        "sizes": {"batch": batch, "T": T, "layer_sizes": list(sizes)},
+        "us_per_image": {k: v / batch for k, v in times.items()},
+        "bit_identical": bool(exact),
+        "hop_bytes": {"staged": staged_hops, "fused": fused_hops,
+                      "staged_total": sum(staged_hops),
+                      "fused_total": sum(fused_hops)},
+        "fused_single_launch": bool(fused_is_one_launch),
+        "backend_platform": jax.default_backend(),
+    }, "bench", "BENCH_fused_multilayer.json")
     return times
 
 

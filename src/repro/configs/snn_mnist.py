@@ -46,3 +46,17 @@ SNN_CONFIG_PRUNED = SNNConfig(
     active_pruning=True,
     backend="auto",
 )
+
+# Hidden-layer stack (beyond the paper's topology): exercises the
+# multi-layer fused megakernel — inter-layer spike traffic stays on-chip,
+# which is where staged execution pays 2·T·B·N HBM bytes per hop.
+SNN_CONFIG_DEEP = SNNConfig(
+    layer_sizes=(784, 128, 64, 10),
+    num_steps=20,
+    lif=LIFConfig(decay_shift=4, v_threshold=128, v_rest=0),
+    weight_bits=8,
+    qat=True,
+    readout="count",
+    active_pruning=False,
+    backend="auto",
+)

@@ -21,6 +21,7 @@ Weights layout: ``params = {"layers": [{"w": (n_in, n_out)}, ...]}``.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -35,7 +36,13 @@ __all__ = [
     "snn_loss",
     "quantize_params",
     "encode_lif_timestep",
+    "snn_int_stack_step",
     "resolve_backend",
+    "fused_unsupported_reason",
+    "readout_pred",
+    "SNNWindowState",
+    "snn_window_init",
+    "snn_window_chunk",
 ]
 
 
@@ -52,14 +59,17 @@ class SNNConfig:
     dot_impl: str = "int32"                    # int32 | f32 (bit-exact fast path)
     fuse_encoder: bool = False                 # PRNG+encode inside the LIF scan
     # Integer-engine backend: which realisation of the RTL datapath runs.
-    #   fused     — one Pallas launch for the whole encode→LIF window; the
-    #               (T, B, N_in) spike tensor never touches HBM (§V-B)
+    #   fused     — one resumable Pallas launch for the whole encode→LIF
+    #               window across the full layer stack; neither the input
+    #               nor any inter-layer spike tensor ever touches HBM (§V-B)
     #   staged    — Pallas encoder kernel + per-layer Pallas LIF kernel
-    #               (spike train round-trips between launches)
+    #               (every hop's spike train round-trips between launches)
     #   reference — pure-jnp scans (core.encoding / core.lif); the bit-exact
     #               oracle and the fast path on hosts without a TPU
-    #   auto      — fused on TPU, reference elsewhere (Pallas interpret mode
-    #               is a correctness tool, not a fast CPU path)
+    #   auto      — fused on TPU for any stack that fits the VMEM residency
+    #               budget (else staged), reference elsewhere (Pallas
+    #               interpret mode is a correctness tool, not a fast CPU
+    #               path)
     backend: str = "auto"
     emit_trace: bool = True                    # False: no v/spike-train outputs
                                                # (prediction-only serving)
@@ -138,25 +148,92 @@ def quantize_params(params: dict, cfg: SNNConfig):
     return {"layers": out}
 
 
+def fused_unsupported_reason(cfg: SNNConfig, n_layers: int,
+                             layer_sizes: tuple[int, ...] | None = None,
+                             trace_steps: int | None = None) -> str | None:
+    """Why the fused megakernel cannot run this configuration (None = ok).
+
+    The kernel handles arbitrary layer stacks, but it keeps every weight
+    matrix and per-layer state resident on-chip for the whole launch — a
+    stack whose footprint exceeds the VMEM budget cannot be fused and must
+    run staged (per-layer launches).  ``trace_steps`` is the per-launch
+    membrane-trace length: the full window for one-shot execution
+    (default), or ``chunk_steps`` for chunked/streaming callers, whose
+    launches only ever allocate a chunk of trace.
+    """
+    from ..kernels import fused_snn
+    if n_layers < 1:
+        return "the network has no layers"
+    sizes = layer_sizes
+    if sizes is None and len(cfg.layer_sizes) - 1 == n_layers:
+        sizes = cfg.layer_sizes
+    if sizes is None:
+        return None                      # shapes unknown — assume it fits
+    need = fused_snn.stack_vmem_bytes(
+        sizes, fused_snn.DEFAULT_BLOCK_B,
+        cfg.num_steps if trace_steps is None else trace_steps)
+    if need > fused_snn.VMEM_BUDGET_BYTES:
+        return (f"resident stack footprint ~{need / 2**20:.1f} MiB for "
+                f"layer_sizes={tuple(sizes)} exceeds the "
+                f"{fused_snn.VMEM_BUDGET_BYTES / 2**20:.0f} MiB VMEM "
+                f"budget")
+    return None
+
+
 def resolve_backend(cfg: SNNConfig, backend: str | None = None,
-                    n_layers: int = 1) -> str:
+                    n_layers: int = 1, *,
+                    layer_sizes: tuple[int, ...] | None = None,
+                    trace_steps: int | None = None) -> str:
     """Pick the integer-engine backend actually run on this host.
 
-    ``auto`` resolves to the fused megakernel on TPU and to the pure-jnp
-    reference scans elsewhere (Pallas interpret mode is far slower than XLA
-    on CPU — it is a correctness tool, not a serving path).  The fused
-    kernel only implements the paper's single-layer topology; deeper stacks
-    automatically fall back to the staged kernels (TPU) or reference (CPU).
+    ``auto`` resolves to the fused megakernel on TPU — for ANY stack depth
+    whose resident footprint fits VMEM (oversized stacks fall back to the
+    staged per-layer kernels) — and to the pure-jnp reference scans
+    elsewhere (Pallas interpret mode is far slower than XLA on CPU — it is
+    a correctness tool, not a serving path).  Explicitly requesting
+    ``fused`` for a configuration the kernel cannot run raises instead of
+    silently degrading.
     """
     b = backend if backend is not None else cfg.backend
     on_tpu = jax.default_backend() == "tpu"
+    reason = fused_unsupported_reason(cfg, n_layers, layer_sizes,
+                                      trace_steps)
     if b == "auto":
-        b = ("fused" if n_layers == 1 else "staged") if on_tpu else "reference"
-    if b == "fused" and n_layers != 1:
-        b = "staged" if on_tpu else "reference"
+        b = ("fused" if reason is None else "staged") if on_tpu \
+            else "reference"
+    if b == "fused" and reason is not None:
+        raise ValueError(
+            f"backend='fused' was explicitly requested but the fused "
+            f"megakernel does not support this configuration: {reason} — "
+            f"use backend='staged'")
     if b not in ("fused", "staged", "reference"):
         raise ValueError(f"unknown SNN backend {b!r}")
     return b
+
+
+def readout_pred(counts: jax.Array, first_t: jax.Array, v_final: jax.Array,
+                 readout: str, num_steps: int,
+                 v_trace: jax.Array | None = None) -> jax.Array:
+    """Per-lane prediction under the configured readout.
+
+    The single source of truth shared by ``snn_apply_int``, the streaming
+    engine's stability gate / harvest path, and (mirrored op-for-op) the
+    gated fused kernel.  ``count``: spike-register argmax.  ``first_spike``:
+    earliest-spiking class, membrane potential as the no-spike tiebreak.
+    ``membrane``: peak-membrane readout over the trace.
+    """
+    if readout == "count":
+        return jnp.argmax(counts, axis=-1)
+    if readout == "membrane":
+        return pruning.membrane_readout(v_trace)
+    # Two score tiers: any class that spiked outranks every membrane-only
+    # class (spiked tier is additive, large + (T - first), so it cannot
+    # overflow int32 for any realistic window — (T - first)·large would
+    # wrap already at T = 128).
+    large = jnp.int32(1 << 24)
+    score = jnp.where(counts > 0, large + (num_steps - first_t),
+                      jnp.clip(v_final, -large + 1, large - 1))
+    return jnp.argmax(score, axis=-1)
 
 
 def snn_apply_int(params_q: dict, pixels_u8: jax.Array, prng_state: jax.Array,
@@ -177,7 +254,8 @@ def snn_apply_int(params_q: dict, pixels_u8: jax.Array, prng_state: jax.Array,
     is None on the fused backend — the spike train intentionally never
     exists as a tensor there.
     """
-    b = resolve_backend(cfg, backend, len(params_q["layers"]))
+    b = resolve_backend(cfg, backend, len(params_q["layers"]),
+                        layer_sizes=_param_sizes(params_q))
     if b == "fused":
         res = _apply_int_fused(params_q, pixels_u8, prng_state, cfg)
     elif b == "staged":
@@ -185,30 +263,24 @@ def snn_apply_int(params_q: dict, pixels_u8: jax.Array, prng_state: jax.Array,
     else:
         res = _apply_int_reference(params_q, pixels_u8, prng_state, cfg)
 
-    counts = res["spike_counts"]
-    first_t = res["first_spike_t"]
-    T = cfg.num_steps
-
-    if cfg.readout == "count":
-        pred = jnp.argmax(counts, axis=-1)
-    elif cfg.readout == "membrane":
-        pred = pruning.membrane_readout(res["v_trace"])
-    else:  # first_spike
-        large = jnp.int32(1 << 24)
-        score = jnp.where(counts > 0, (T - first_t) * large,
-                          jnp.clip(res["v_final"], -large + 1, large - 1))
-        pred = jnp.argmax(score, axis=-1)
-
     # NB: no non-array metadata in the result — callers jit this function.
-    res["pred"] = pred
+    res["pred"] = readout_pred(res["spike_counts"], res["first_spike_t"],
+                               res["v_final"], cfg.readout, cfg.num_steps,
+                               v_trace=res["v_trace"])
     return res
 
 
+def _param_sizes(params_q: dict) -> tuple[int, ...]:
+    return tuple([params_q["layers"][0]["w_q"].shape[0]]
+                 + [l["w_q"].shape[1] for l in params_q["layers"]])
+
+
 def _apply_int_fused(params_q, pixels_u8, prng_state, cfg: SNNConfig):
-    """Fused Pallas megakernel: the whole window in one launch."""
+    """Fused Pallas megakernel: the whole window, all layers, one launch."""
     from ..kernels import ops
-    k = ops.fused_snn_op(
-        pixels_u8, prng_state, params_q["layers"][0]["w_q"],
+    k = ops.fused_snn_stack_op(
+        pixels_u8, prng_state,
+        tuple(layer["w_q"] for layer in params_q["layers"]),
         num_steps=cfg.num_steps, decay_shift=cfg.lif.decay_shift,
         v_threshold=cfg.lif.v_threshold, v_rest=cfg.lif.v_rest,
         v_min=cfg.lif.v_min, v_max=cfg.lif.v_max,
@@ -230,6 +302,7 @@ def _apply_int_staged(params_q, pixels_u8, prng_state, cfg: SNNConfig):
     spikes, prng_next = ops.poisson_encode_op(
         pixels_u8, prng_state, cfg.num_steps)
     x = spikes
+    adds = jnp.zeros(spikes.shape[:2], jnp.int32)              # (T, B)
     for layer in params_q["layers"]:
         layer_in = x
         x, v_trace, v_final = ops.lif_forward_op(
@@ -237,24 +310,26 @@ def _apply_int_staged(params_q, pixels_u8, prng_state, cfg: SNNConfig):
             v_threshold=cfg.lif.v_threshold, v_rest=cfg.lif.v_rest,
             v_min=cfg.lif.v_min, v_max=cfg.lif.v_max,
             active_pruning=cfg.active_pruning)
+        # Energy side channel, re-derived from the spike streams: a neuron
+        # is enabled at step t iff it has not fired before t (or pruning is
+        # off); summed over layers, like the fused kernel's counter.
+        n_spk = jnp.sum(layer_in.astype(jnp.int32), axis=-1)   # (T, B)
+        if cfg.active_pruning:
+            fired_before = jnp.cumsum(x.astype(jnp.int32), axis=0) \
+                - x.astype(jnp.int32)
+            n_en = jnp.sum((fired_before == 0).astype(jnp.int32), axis=-1)
+        else:
+            n_en = jnp.full_like(n_spk, x.shape[-1])
+        adds = adds + n_spk * n_en
     out_spikes = x
     counts = jnp.sum(out_spikes.astype(jnp.int32), axis=0)
     t_idx = jnp.arange(cfg.num_steps, dtype=jnp.int32)[:, None, None]
     first_t = jnp.min(jnp.where(out_spikes, t_idx, cfg.num_steps), axis=0)
-    # Energy side channel, re-derived from the spike streams: a neuron is
-    # enabled at step t iff it has not fired before t (or pruning is off).
-    n_spk = jnp.sum(layer_in.astype(jnp.int32), axis=-1)       # (T, B)
-    if cfg.active_pruning:
-        fired_before = jnp.cumsum(out_spikes.astype(jnp.int32), axis=0) \
-            - out_spikes.astype(jnp.int32)
-        n_en = jnp.sum((fired_before == 0).astype(jnp.int32), axis=-1)
-    else:
-        n_en = jnp.full_like(n_spk, out_spikes.shape[-1])
     return {
         "spike_counts": counts,
         "v_trace": v_trace,
         "v_final": v_final,
-        "active_adds": n_spk * n_en,
+        "active_adds": adds,
         "input_spikes": spikes,
         "first_spike_t": first_t,
         "prng_state": prng_next,
@@ -270,15 +345,19 @@ def _apply_int_reference(params_q, pixels_u8, prng_state, cfg: SNNConfig):
         res, prng_next = _fused_encode_lif(
             params_q["layers"][0]["w_q"], pixels_u8, prng_state, cfg)
         spikes = res["input_spikes"]
+        adds = res["active_adds"]
     else:
         spikes, prng_next = encoding.poisson_encode_hw(
             pixels_u8, prng_state, cfg.num_steps)
         res = None
+        adds = 0
         x = spikes
         for layer in params_q["layers"]:
             res = lif.run_lif_int(x, layer["w_q"], cfg.lif,
                                   active_pruning=cfg.active_pruning,
                                   dot_impl=cfg.dot_impl)
+            # executed adds summed over layers (fused-kernel counter parity)
+            adds = adds + res["active_adds"]
             x = res["spikes"]
 
     out_spikes = res["spikes"]                       # (T, batch, n_out)
@@ -290,7 +369,7 @@ def _apply_int_reference(params_q, pixels_u8, prng_state, cfg: SNNConfig):
         "spike_counts": counts,
         "v_trace": res["v_trace"],
         "v_final": res["state"].v,
-        "active_adds": res["active_adds"],
+        "active_adds": adds,
         "input_spikes": spikes,
         "first_spike_t": first_t,
         "prng_state": prng_next,
@@ -350,6 +429,135 @@ def _fused_encode_lif(w_q: jax.Array, pixels_u8: jax.Array,
     res = {"spikes": spk, "v_trace": vtr, "state": state_f,
            "active_adds": adds, "n_in": w_q.shape[0], "input_spikes": s_all}
     return res, rng_f
+
+
+def snn_int_stack_step(rng: jax.Array, pixels_u8: jax.Array,
+                       states: tuple, weights: tuple,
+                       lif_cfg: lif.LIFConfig, *, dot_impl: str = "int32",
+                       active_pruning: bool = False):
+    """One fused timestep through the WHOLE layer stack.
+
+    Layer 0 runs :func:`encode_lif_timestep` (the encoder+LIF single source
+    of truth); deeper layers feed each fired vector straight into the next
+    Σ W·S — the jnp mirror of the multi-layer megakernel's static layer
+    loop.  Returns ``(rng, new_states, fired_out, adds)`` where ``adds`` is
+    the executed-add count summed over layers (energy side channel).
+    """
+    rng, st0, fired, s_t = encode_lif_timestep(
+        rng, pixels_u8, states[0], weights[0], lif_cfg, dot_impl=dot_impl,
+        active_pruning=active_pruning)
+    adds = (jnp.sum(s_t.astype(jnp.int32), axis=-1)
+            * jnp.sum(states[0].enable.astype(jnp.int32), axis=-1))
+    new_states = [st0]
+    x = fired
+    for st, layer_w in zip(states[1:], weights[1:]):
+        current = lif.synaptic_current_int(x, layer_w, dot_impl)
+        current = jnp.where(st.enable, current, 0)
+        new_st, fired = lif.lif_step_int(st, current, lif_cfg)
+        adds = adds + (jnp.sum(x.astype(jnp.int32), axis=-1)
+                       * jnp.sum(st.enable.astype(jnp.int32), axis=-1))
+        if active_pruning:
+            new_st = new_st._replace(
+                enable=jnp.logical_and(new_st.enable,
+                                       jnp.logical_not(fired)))
+        new_states.append(new_st)
+        x = fired
+    return rng, tuple(new_states), x, adds
+
+
+class SNNWindowState(NamedTuple):
+    """Resumable mid-window state of the integer engine (a pytree).
+
+    Carried between :func:`snn_window_chunk` calls so a T-step window can be
+    executed in chunks with results bit-identical to one shot — the
+    device-side contract behind the streaming engine.
+    """
+
+    rng: jax.Array          # (B, n_in) uint32 xorshift lanes
+    v: tuple                # per-layer (B, n_l) int32 membranes
+    en: tuple               # per-layer (B, n_l) bool clock-gates
+    counts: jax.Array       # (B, n_out) int32 final-layer spike registers
+    first: jax.Array        # (B, n_out) int32, sentinel = cfg.num_steps
+    steps: jax.Array        # (B,) int32 window steps executed
+
+
+def snn_window_init(params_q: dict, prng_state: jax.Array,
+                    cfg: SNNConfig) -> SNNWindowState:
+    """Fresh start-of-window state for a batch of ``prng_state.shape[0]``."""
+    batch = prng_state.shape[0]
+    sizes = _param_sizes(params_q)
+    return SNNWindowState(
+        rng=prng_state,
+        v=tuple(jnp.full((batch, n), cfg.lif.v_rest, jnp.int32)
+                for n in sizes[1:]),
+        en=tuple(jnp.ones((batch, n), bool) for n in sizes[1:]),
+        counts=jnp.zeros((batch, sizes[-1]), jnp.int32),
+        first=jnp.full((batch, sizes[-1]), cfg.num_steps, jnp.int32),
+        steps=jnp.zeros((batch,), jnp.int32),
+    )
+
+
+def snn_window_chunk(params_q: dict, pixels_u8: jax.Array,
+                     state: SNNWindowState, cfg: SNNConfig, *,
+                     chunk_steps: int, backend: str | None = None):
+    """Advance the window by ``chunk_steps`` steps with carried state.
+
+    Dispatches to the resumable fused megakernel or the pure-jnp reference
+    scan (both bit-identical; the staged kernels cannot resume mid-window —
+    requesting them explicitly raises, and an ``auto`` resolution that
+    lands on staged — a VMEM-oversized stack on TPU — falls back to the
+    chunk-capable reference scan).  Returns ``(new_state, chunk)`` where
+    ``chunk`` holds the per-step ``v_trace`` (chunk, B, n_out) and
+    ``active_adds`` (chunk, B) for this segment.
+    """
+    weights = tuple(layer["w_q"] for layer in params_q["layers"])
+    requested = backend if backend is not None else cfg.backend
+    if requested == "staged":
+        raise ValueError("chunked window execution supports the 'fused' "
+                         "and 'reference' backends only (the staged "
+                         "kernels cannot resume mid-window)")
+    b = resolve_backend(cfg, backend, len(weights),
+                        layer_sizes=_param_sizes(params_q),
+                        trace_steps=chunk_steps)
+    if b == "staged":                      # auto picked it; we can't run it
+        b = "reference"
+    if b == "fused":
+        from ..kernels import ops
+        k = ops.fused_snn_stack_op(
+            pixels_u8, state.rng, weights, num_steps=cfg.num_steps,
+            chunk_steps=chunk_steps, decay_shift=cfg.lif.decay_shift,
+            v_threshold=cfg.lif.v_threshold, v_rest=cfg.lif.v_rest,
+            v_min=cfg.lif.v_min, v_max=cfg.lif.v_max,
+            active_pruning=cfg.active_pruning,
+            init={"v": state.v, "en": state.en, "counts": state.counts,
+                  "first": state.first, "steps": state.steps})
+        new_state = SNNWindowState(
+            rng=k["prng_state"], v=k["v"], en=k["en"], counts=k["spike_counts"],
+            first=k["first_spike_t"], steps=k["steps"])
+        return new_state, {"v_trace": k["v_trace"],
+                           "active_adds": k["active_adds"]}
+
+    def body(carry, _):
+        st = carry
+        layer_states = tuple(lif.LIFStateInt(v=v, enable=e)
+                             for v, e in zip(st.v, st.en))
+        rng, new_states, fired, adds = snn_int_stack_step(
+            st.rng, pixels_u8, layer_states, weights, cfg.lif,
+            dot_impl=cfg.dot_impl, active_pruning=cfg.active_pruning)
+        counts = st.counts + fired.astype(jnp.int32)
+        first = jnp.where(
+            jnp.logical_and(fired, st.first == cfg.num_steps),
+            st.steps[:, None], st.first)
+        new = SNNWindowState(
+            rng=rng,
+            v=tuple(s.v for s in new_states),
+            en=tuple(s.enable for s in new_states),
+            counts=counts, first=first, steps=st.steps + 1)
+        return new, (new_states[-1].v, adds)
+
+    new_state, (vtr, adds) = jax.lax.scan(
+        body, state, None, length=chunk_steps)
+    return new_state, {"v_trace": vtr, "active_adds": adds}
 
 
 def snn_loss(params: dict, pixels01: jax.Array, labels: jax.Array,

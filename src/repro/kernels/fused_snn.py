@@ -1,31 +1,41 @@
-"""Pallas TPU megakernel: fused Poisson-encode → LIF window in ONE launch.
+"""Pallas TPU megakernel: fused Poisson-encode → LIF *stack* in ONE launch.
 
 The paper's efficiency argument (§V-B) is that the encoder and the LIF
 datapath share a chip, so the spike stream never crosses an external-memory
 boundary.  The staged kernels (poisson_encode.py + lif_step.py) break that
-property on TPU: the full ``(T, B, N_in)`` spike tensor round-trips through
-HBM between the two launches — for the paper config that is T× more traffic
-than the pixels themselves.  This kernel restores the RTL's event-stream
-locality:
+property on TPU: the full ``(T, B, N)`` spike tensor round-trips through
+HBM between every pair of launches — and for multi-layer stacks the
+inter-layer spike traffic dominates (Bouvier et al. 2020; Abderrahmane et
+al. 2019).  This kernel restores the RTL's event-stream locality for an
+**arbitrary layer stack**:
 
   * pixels and the per-pixel xorshift32 PRNG lanes are loaded into VMEM
-    once and stay there for the whole T-step window (the free-running LFSR
-    bank of Fig. 2);
-  * the int16 weight tile is resident across the window (the BRAM weight
-    bank of Fig. 1);
-  * each timestep generates the spike vector in registers/VMEM, feeds it
-    straight into the Σ W·S contraction (MXU int path — "adds only" since
-    one operand is binary), then the shift-leak / fire / reset / pruning
-    VPU stages — and discards it.  Spikes are **never written to HBM**.
-  * only the per-neuron outputs come back: spike counts, first-spike
-    times, the (T, B, N_out) membrane trace (N_out ≪ N_in), the final
-    membrane state, the per-step executed-add count (energy side channel)
-    and the advanced PRNG state.
+    once and stay there for the whole chunk (the free-running LFSR bank of
+    Fig. 2);
+  * every layer's int16 weight matrix is resident across the chunk (the
+    BRAM weight banks of Fig. 1) — the grid tiles the batch only, so each
+    program owns the full stack;
+  * each timestep generates the input spike vector in registers/VMEM and
+    walks it through a *static Python layer loop*: Σ W·S contraction (MXU
+    int path — "adds only" since one operand is binary), then the
+    shift-leak / fire / reset / pruning VPU stages; the fired vector feeds
+    the next layer directly.  Inter-layer spikes are **never written to
+    HBM**.
+  * the kernel is **resumable**: it accepts initial per-layer membrane and
+    enable state, the PRNG lanes, the spike-count / first-spike registers
+    and a per-lane step counter, and returns the advanced versions — so a
+    T-step window split into chunks is bit-identical to one launch
+    (serve.snn_engine streams through this).
+  * optionally the kernel also runs the serving-layer **stability gate**
+    per step (``gated=True``): a lane whose running prediction has been
+    stable for ``patience`` steps freezes in place (PRNG, membranes,
+    counters), mirroring ``serve.snn_engine.stream_chunk``'s jnp fallback
+    bit-for-bit.
 
-Grid: (B/bB, N_out/bN) with the output tile innermost so the per-step add
-counter can be accumulated across N_out tiles (standard revisit idiom).
-``n_out_true`` masks padded output columns out of the enable set so the
-energy accounting stays bit-identical to the unpadded reference.
+Only per-neuron outputs come back: final-layer spike counts, first-spike
+times and membrane trace, per-layer membrane/enable state, the per-step
+executed-add count (energy side channel, summed over layers) and the
+advanced PRNG state.
 """
 
 from __future__ import annotations
@@ -36,123 +46,290 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["fused_snn_forward_pallas"]
+__all__ = ["fused_snn_stack_pallas", "stack_vmem_bytes",
+           "VMEM_BUDGET_BYTES", "DEFAULT_BLOCK_B", "LANE"]
 
-DEFAULT_BLOCK = (8, 128)  # (batch tile, out-neuron tile)
+DEFAULT_BLOCK_B = 8     # batch tile per program
+LANE = 128              # TPU lane width: every neuron axis pads to this
+
+# Conservative share of the ~16 MB/core VMEM the resident stack may claim
+# (weights + state + trace + temporaries).  ``core.snn.resolve_backend``
+# refuses/auto-falls-back when the estimate exceeds this.
+VMEM_BUDGET_BYTES = 12 << 20
 
 
-def _fused_kernel(px_ref, st_ref, w_ref,
-                  cnt_ref, vtr_ref, first_ref, vfin_ref, adds_ref, st_out_ref,
-                  *, num_steps: int, decay_shift: int, v_threshold: int,
-                  v_rest: int, v_min: int, v_max: int, active_pruning: bool,
-                  n_out_true: int):
-    j = pl.program_id(1)
-    px = px_ref[...]                              # (bB, n_in) uint8
-    w = w_ref[...].astype(jnp.int32)              # (n_in, bN) resident all T
-    bB, bN = cnt_ref.shape
+def _pad128(n: int) -> int:
+    return n + (-n) % LANE
 
-    # Padded output columns are never enabled: they cannot fire and do not
-    # count toward the executed-add side channel.
-    col = j * bN + jax.lax.broadcasted_iota(jnp.int32, (bB, bN), 1)
-    valid = col < n_out_true
 
-    s0 = st_ref[...]                              # (bB, n_in) uint32
-    v0 = jnp.full((bB, bN), v_rest, jnp.int32)
-    cnt0 = jnp.zeros((bB, bN), jnp.int32)
-    first0 = jnp.full((bB, bN), num_steps, jnp.int32)
+def stack_vmem_bytes(layer_sizes, block_b: int = DEFAULT_BLOCK_B,
+                     num_steps: int = 1) -> int:
+    """Estimate of the kernel's resident VMEM footprint for one program.
+
+    Counts the padded weight matrices (int16 storage + the int32 cast the
+    MXU path materialises), pixels + PRNG lanes, per-layer membrane/enable
+    state, the final-layer trace block and a working-set allowance for the
+    per-step spike/current temporaries.
+    """
+    sizes = [_pad128(int(n)) for n in layer_sizes]
+    bB = block_b
+    total = sizes[0] * bB * (1 + 4)                      # pixels + PRNG
+    for n_in, n_out in zip(sizes[:-1], sizes[1:]):
+        total += n_in * n_out * (2 + 4)                  # w int16 + i32 cast
+        total += bB * n_out * (4 + 1 + 4)                # v + en + current
+    total += num_steps * bB * sizes[-1] * 4              # v_trace block
+    total += bB * max(sizes) * 8                         # spike temporaries
+    return total
+
+
+def _first_argmax(x: jax.Array, n_true: int) -> jax.Array:
+    """First index of the row max — matches jnp.argmax tie-breaking.
+
+    x: (bB, n) int32.  Returns (bB, 1) int32.  Implemented with iota+min so
+    it lowers cleanly inside a Pallas TPU kernel.
+    """
+    bB, n = x.shape
+    m = jnp.max(x, axis=-1, keepdims=True)
+    col = jax.lax.broadcasted_iota(jnp.int32, (bB, n), 1)
+    return jnp.min(jnp.where(x == m, col, n_true), axis=-1, keepdims=True)
+
+
+def _stack_kernel(*refs, num_layers: int, chunk_steps: int, window_steps: int,
+                  decay_shift: int, v_threshold: int, v_rest: int,
+                  v_min: int, v_max: int, active_pruning: bool,
+                  gated: bool, patience: int, readout: str):
+    L = num_layers
+    it = iter(refs)
+    px_ref, st_ref = next(it), next(it)
+    w_refs = [next(it) for _ in range(L)]
+    v_refs = [next(it) for _ in range(L)]
+    en_refs = [next(it) for _ in range(L)]
+    cnt_ref, first_ref, steps_ref = next(it), next(it), next(it)
+    if gated:
+        act_ref, gprev_ref, gstreak_ref = next(it), next(it), next(it)
+    cnt_out, vtr_out, first_out, adds_out, st_out = (
+        next(it), next(it), next(it), next(it), next(it))
+    v_outs = [next(it) for _ in range(L)]
+    en_outs = [next(it) for _ in range(L)]
+    steps_out = next(it)
+    if gated:
+        act_out, gprev_out, gstreak_out = next(it), next(it), next(it)
+
+    px = px_ref[...]                                   # (bB, n_in) uint8
+    ws = [w_refs[l][...].astype(jnp.int32) for l in range(L)]  # resident
+    n_out = cnt_ref.shape[1]
+
+    carry0 = (
+        st_ref[...],
+        tuple(v_refs[l][...] for l in range(L)),
+        tuple(en_refs[l][...] != 0 for l in range(L)),
+        cnt_ref[...],
+        first_ref[...],
+        steps_ref[...],                                # (bB, 1) i32
+    )
+    if gated:
+        carry0 = carry0 + (act_ref[...] != 0, gprev_ref[...],
+                           gstreak_ref[...])
 
     def body(t, carry):
-        s, v, en, cnt, first = carry
-        # --- encoder: xorshift32 step + 8-bit comparator (Fig. 2) ---
-        s = s ^ (s << 13)
-        s = s ^ (s >> 17)
-        s = s ^ (s << 5)
-        r = (s >> 24).astype(jnp.uint8)
-        spk = px > r                              # (bB, n_in) — stays on-chip
-        # --- Σ W·S: binary operand ⇒ adds-only datapath (MXU int path) ---
-        cur = jax.lax.dot_general(
-            spk.astype(jnp.int32), w, (((1,), (0,)), ((), ())),
-            preferred_element_type=jnp.int32)
-        cur = jnp.where(en, cur, 0)               # pruning clock-gate
-        # --- LIF: saturating add, shift leak, compare, hard reset ---
-        v_int = jnp.clip(v + cur, v_min, v_max)
-        v_leak = v_int - (v_int >> decay_shift)
-        fired = jnp.logical_and(v_leak >= v_threshold, en)
-        v_new = jnp.where(fired, jnp.int32(v_rest), v_leak)
-        v_new = jnp.where(en, v_new, v)           # frozen when gated
-        vtr_ref[t, :, :] = v_new
-        # --- spike register / first-spike latch (readout state) ---
-        first = jnp.where(jnp.logical_and(fired, first == num_steps),
-                          jnp.int32(t), first)
-        cnt = cnt + fired.astype(jnp.int32)
-        # --- energy side channel: adds executed = input spikes × enabled ---
-        n_spk = jnp.sum(spk.astype(jnp.int32), axis=-1)      # (bB,)
-        n_en = jnp.sum(en.astype(jnp.int32), axis=-1)        # this j tile
-        adds_t = n_spk * n_en
-        adds_ref[t, :] = jnp.where(j == 0, adds_t, adds_ref[t, :] + adds_t)
-        if active_pruning:
-            en = jnp.logical_and(en, jnp.logical_not(fired))
-        return (s, v_new, en, cnt, first)
+        if gated:
+            s, vs, ens, cnt, first, steps, act, gprev, gstreak = carry
+        else:
+            s, vs, ens, cnt, first, steps = carry
 
-    s_f, v_f, _, cnt_f, first_f = jax.lax.fori_loop(
-        0, num_steps, body, (s0, v0, valid, cnt0, first0))
-    cnt_ref[...] = cnt_f
-    first_ref[...] = first_f
-    vfin_ref[...] = v_f
-    st_out_ref[...] = s_f
+        # --- encoder: xorshift32 step + 8-bit comparator (Fig. 2) --------
+        s_new = s ^ (s << 13)
+        s_new = s_new ^ (s_new >> 17)
+        s_new = s_new ^ (s_new << 5)
+        r = (s_new >> 24).astype(jnp.uint8)
+        x = px > r                                     # (bB, n_in) on-chip
+
+        # --- static layer loop: spikes stay in VMEM between layers -------
+        adds_t = jnp.zeros(steps.shape, jnp.int32)     # (bB, 1)
+        new_vs, new_ens = [], []
+        for l in range(L):
+            en = ens[l]
+            cur = jax.lax.dot_general(
+                x.astype(jnp.int32), ws[l], (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.int32)
+            cur = jnp.where(en, cur, 0)                # pruning clock-gate
+            v_int = jnp.clip(vs[l] + cur, v_min, v_max)
+            v_leak = v_int - (v_int >> decay_shift)
+            fired = jnp.logical_and(v_leak >= v_threshold, en)
+            v_new = jnp.where(fired, jnp.int32(v_rest), v_leak)
+            v_new = jnp.where(en, v_new, vs[l])        # frozen when gated
+            # energy: adds executed = input spikes × enabled outputs
+            n_spk = jnp.sum(x.astype(jnp.int32), axis=-1, keepdims=True)
+            n_en = jnp.sum(en.astype(jnp.int32), axis=-1, keepdims=True)
+            adds_t = adds_t + n_spk * n_en
+            if active_pruning:
+                en = jnp.logical_and(en, jnp.logical_not(fired))
+            new_vs.append(v_new)
+            new_ens.append(en)
+            x = fired                                  # next layer's input
+
+        # --- final-layer readout registers -------------------------------
+        cnt_new = cnt + x.astype(jnp.int32)
+        first_new = jnp.where(
+            jnp.logical_and(x, first == window_steps), steps, first)
+        v_last = new_vs[-1]
+
+        if gated:
+            # stability gate, mirroring serve.snn_engine.stream_chunk's jnp
+            # fallback bit-for-bit (same op order, same tie-breaking).
+            has_spike = jnp.max(cnt_new, axis=-1, keepdims=True) > 0
+            if readout == "first_spike":
+                large = jnp.int32(1 << 24)
+                score = jnp.where(
+                    cnt_new > 0, large + (window_steps - first_new),
+                    jnp.clip(v_last, -large + 1, large - 1))
+                pred = _first_argmax(score, n_out)
+            else:                                      # count
+                pred = _first_argmax(cnt_new, n_out)
+            streak_raw = jnp.where(pred == gprev, gstreak + 1, 0)
+            done = streak_raw >= patience
+            gprev_new = jnp.where(has_spike, pred, -1)
+            gstreak_new = jnp.where(has_spike, streak_raw, 0)
+            done = jnp.logical_and(done, has_spike)
+            steps_new = steps + act.astype(jnp.int32)
+            still = jnp.logical_and(act, jnp.logical_not(done))
+            still = jnp.logical_and(still, steps_new < window_steps)
+
+            def keep(new, old):
+                return jnp.where(act, new, old)
+
+            s_new = keep(s_new, s)
+            new_vs = [keep(nv, ov) for nv, ov in zip(new_vs, vs)]
+            new_ens = [jnp.where(act, ne, oe)
+                       for ne, oe in zip(new_ens, ens)]
+            cnt_new = keep(cnt_new, cnt)
+            first_new = keep(first_new, first)
+            gprev_new = keep(gprev_new, gprev)
+            gstreak_new = keep(gstreak_new, gstreak)
+            vtr_out[t, :, :] = new_vs[-1]
+            adds_out[t, :] = jnp.where(act, adds_t, 0)[:, 0]
+            return (s_new, tuple(new_vs), tuple(new_ens), cnt_new,
+                    first_new, steps_new, still, gprev_new, gstreak_new)
+
+        vtr_out[t, :, :] = v_last
+        adds_out[t, :] = adds_t[:, 0]
+        return (s_new, tuple(new_vs), tuple(new_ens), cnt_new, first_new,
+                steps + 1)
+
+    carry_f = jax.lax.fori_loop(0, chunk_steps, body, carry0)
+    if gated:
+        s_f, vs_f, ens_f, cnt_f, first_f, steps_f, act_f, gp_f, gs_f = carry_f
+        act_out[...] = act_f.astype(jnp.int32)
+        gprev_out[...] = gp_f
+        gstreak_out[...] = gs_f
+    else:
+        s_f, vs_f, ens_f, cnt_f, first_f, steps_f = carry_f
+    cnt_out[...] = cnt_f
+    first_out[...] = first_f
+    st_out[...] = s_f
+    steps_out[...] = steps_f
+    for l in range(num_layers):
+        v_outs[l][...] = vs_f[l]
+        en_outs[l][...] = ens_f[l].astype(jnp.uint8)
 
 
-def fused_snn_forward_pallas(pixels_u8: jax.Array, state_u32: jax.Array,
-                             w_q: jax.Array, *, num_steps: int,
-                             decay_shift: int, v_threshold: int,
-                             v_rest: int = 0, v_min: int = -(1 << 20),
-                             v_max: int = (1 << 20) - 1,
-                             active_pruning: bool = False,
-                             n_out_true: int | None = None,
-                             block=DEFAULT_BLOCK, interpret: bool = False):
-    """pixels/state: (B, N_in); w_q: (N_in, N_out) int16/int8.
+def fused_snn_stack_pallas(pixels_u8: jax.Array, state_u32: jax.Array,
+                           weights, v_init, en_init, counts_init: jax.Array,
+                           first_init: jax.Array, steps_init: jax.Array,
+                           gate_init=None, *, chunk_steps: int,
+                           window_steps: int, decay_shift: int,
+                           v_threshold: int, v_rest: int = 0,
+                           v_min: int = -(1 << 20),
+                           v_max: int = (1 << 20) - 1,
+                           active_pruning: bool = False, patience: int = 0,
+                           readout: str = "count",
+                           block_b: int = DEFAULT_BLOCK_B,
+                           interpret: bool = False):
+    """Run ``chunk_steps`` timesteps of the full encode→LIF stack.
 
-    Returns (counts i32 (B,N_out), v_trace i32 (T,B,N_out),
-             first_spike_t i32 (B,N_out), v_final i32 (B,N_out),
-             active_adds i32 (T,B), state u32 (B,N_in)).
+    All arrays must already be padded: batch to ``block_b``, every neuron
+    axis to 128 (use ``kernels.ops.fused_snn_stack_op``, which also masks
+    padded neurons out of the enable sets).
+
+      pixels_u8/state_u32: (B, n_in);  weights: [(n_l, n_{l+1}) int16/8]
+      v_init/en_init: per-layer (B, n_{l+1}) int32 / uint8
+      counts_init/first_init: (B, n_out) int32 (first sentinel=window_steps)
+      steps_init: (B, 1) int32 — per-lane absolute step counter
+      gate_init: None, or (active u8, prev i32, streak i32) each (B, 1)
+
+    Returns (counts, v_trace (chunk,B,n_out), first, adds (chunk,B),
+    state_u32', v_final tuple, en_final tuple (uint8), steps', and — when
+    gated — (active', prev', streak')).
     """
     B, n_in = pixels_u8.shape
-    n_out = w_q.shape[1]
-    if n_out_true is None:
-        n_out_true = n_out
-    bB, bN = block
-    grid = (pl.cdiv(B, bB), pl.cdiv(n_out, bN))
+    L = len(weights)
+    sizes = [n_in] + [w.shape[1] for w in weights]
+    n_out = sizes[-1]
+    gated = gate_init is not None
+    grid = (pl.cdiv(B, block_b),)
+    bB = block_b
 
     kernel = functools.partial(
-        _fused_kernel, num_steps=num_steps, decay_shift=decay_shift,
+        _stack_kernel, num_layers=L, chunk_steps=chunk_steps,
+        window_steps=window_steps, decay_shift=decay_shift,
         v_threshold=v_threshold, v_rest=v_rest, v_min=v_min, v_max=v_max,
-        active_pruning=active_pruning, n_out_true=n_out_true)
+        active_pruning=active_pruning, gated=gated, patience=patience,
+        readout=readout)
 
-    cnt, vtr, first, vfin, adds, st_out = pl.pallas_call(
-        kernel,
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((bB, n_in), lambda i, j: (i, 0)),
-            pl.BlockSpec((bB, n_in), lambda i, j: (i, 0)),
-            pl.BlockSpec((n_in, bN), lambda i, j: (0, j)),
-        ],
-        out_specs=[
-            pl.BlockSpec((bB, bN), lambda i, j: (i, j)),
-            pl.BlockSpec((num_steps, bB, bN), lambda i, j: (0, i, j)),
-            pl.BlockSpec((bB, bN), lambda i, j: (i, j)),
-            pl.BlockSpec((bB, bN), lambda i, j: (i, j)),
-            # revisited across j (innermost) — accumulates the add counter
-            pl.BlockSpec((num_steps, bB), lambda i, j: (0, i)),
-            pl.BlockSpec((bB, n_in), lambda i, j: (i, 0)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((B, n_out), jnp.int32),
-            jax.ShapeDtypeStruct((num_steps, B, n_out), jnp.int32),
-            jax.ShapeDtypeStruct((B, n_out), jnp.int32),
-            jax.ShapeDtypeStruct((B, n_out), jnp.int32),
-            jax.ShapeDtypeStruct((num_steps, B), jnp.int32),
-            jax.ShapeDtypeStruct((B, n_in), jnp.uint32),
-        ],
-        interpret=interpret,
-    )(pixels_u8, state_u32, w_q)
-    return cnt, vtr, first, vfin, adds, st_out
+    def row(shape):      # batch-tiled 2-D state block
+        return pl.BlockSpec((bB,) + shape[1:], lambda i: (i,) + (0,) * (len(shape) - 1))
+
+    def whole(shape):    # fully resident (weights)
+        return pl.BlockSpec(shape, lambda i: (0,) * len(shape))
+
+    in_specs = [row(pixels_u8.shape), row(state_u32.shape)]
+    in_specs += [whole(w.shape) for w in weights]
+    in_specs += [row(v.shape) for v in v_init]
+    in_specs += [row(e.shape) for e in en_init]
+    in_specs += [row(counts_init.shape), row(first_init.shape),
+                 row(steps_init.shape)]
+    inputs = ([pixels_u8, state_u32] + list(weights) + list(v_init)
+              + list(en_init) + [counts_init, first_init, steps_init])
+    if gated:
+        in_specs += [row(g.shape) for g in gate_init]
+        inputs += list(gate_init)
+
+    out_specs = [
+        row((B, n_out)),
+        pl.BlockSpec((chunk_steps, bB, n_out), lambda i: (0, i, 0)),
+        row((B, n_out)),
+        pl.BlockSpec((chunk_steps, bB), lambda i: (0, i)),
+        row((B, n_in)),
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct((B, n_out), jnp.int32),
+        jax.ShapeDtypeStruct((chunk_steps, B, n_out), jnp.int32),
+        jax.ShapeDtypeStruct((B, n_out), jnp.int32),
+        jax.ShapeDtypeStruct((chunk_steps, B), jnp.int32),
+        jax.ShapeDtypeStruct((B, n_in), jnp.uint32),
+    ]
+    for l in range(L):
+        out_specs.append(row((B, sizes[l + 1])))
+        out_shape.append(jax.ShapeDtypeStruct((B, sizes[l + 1]), jnp.int32))
+    for l in range(L):
+        out_specs.append(row((B, sizes[l + 1])))
+        out_shape.append(jax.ShapeDtypeStruct((B, sizes[l + 1]), jnp.uint8))
+    out_specs.append(row((B, 1)))
+    out_shape.append(jax.ShapeDtypeStruct((B, 1), jnp.int32))
+    if gated:
+        for _ in range(3):
+            out_specs.append(row((B, 1)))
+            out_shape.append(jax.ShapeDtypeStruct((B, 1), jnp.int32))
+
+    outs = pl.pallas_call(
+        kernel, grid=grid, in_specs=in_specs, out_specs=out_specs,
+        out_shape=out_shape, interpret=interpret)(*inputs)
+
+    cnt, vtr, first, adds, st_out = outs[:5]
+    v_fin = tuple(outs[5:5 + L])
+    en_fin = tuple(outs[5 + L:5 + 2 * L])
+    steps_out = outs[5 + 2 * L]
+    if gated:
+        return (cnt, vtr, first, adds, st_out, v_fin, en_fin, steps_out,
+                tuple(outs[6 + 2 * L:9 + 2 * L]))
+    return cnt, vtr, first, adds, st_out, v_fin, en_fin, steps_out

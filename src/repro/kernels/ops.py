@@ -15,7 +15,7 @@ import jax.numpy as jnp
 from . import fused_snn, lif_step, poisson_encode, spike_matmul
 
 __all__ = ["poisson_encode_op", "lif_forward_op", "spike_matmul_op",
-           "fused_snn_op"]
+           "fused_snn_op", "fused_snn_stack_op"]
 
 
 def _use_interpret() -> bool:
@@ -69,6 +69,115 @@ def lif_forward_op(spikes_t: jax.Array, w_q: jax.Array, *, decay_shift: int,
 
 
 @partial(jax.jit, static_argnames=(
+    "num_steps", "chunk_steps", "decay_shift", "v_threshold", "v_rest",
+    "v_min", "v_max", "active_pruning", "patience", "readout", "interpret"))
+def fused_snn_stack_op(pixels_u8: jax.Array, state_u32: jax.Array,
+                       weights, *, num_steps: int, chunk_steps: int | None = None,
+                       decay_shift: int, v_threshold: int, v_rest: int = 0,
+                       v_min: int = -(1 << 20), v_max: int = (1 << 20) - 1,
+                       active_pruning: bool = False, init: dict | None = None,
+                       gate: dict | None = None, patience: int = 0,
+                       readout: str = "count",
+                       interpret: bool | None = None):
+    """Multi-layer encode→LIF stack in one resumable Pallas launch.
+
+    Args:
+      weights: tuple of per-layer (n_l, n_{l+1}) int16/int8 matrices.
+      num_steps: the full window length T (first-spike sentinel and, when
+        gated, the per-lane step bound).
+      chunk_steps: how many steps THIS launch executes (default: the whole
+        window).  Carry ``init``/``gate`` between launches for bit-identical
+        chunked execution.
+      init: optional carried state dict with ``v``/``en`` (per-layer tuples,
+        (B, n_l) i32 / bool), ``counts``/``first`` ((B, n_out) i32, first
+        sentinel = num_steps) and ``steps`` ((B,) i32).
+      gate: optional per-lane stability-gate state (``active`` bool (B,),
+        ``prev``/``streak`` i32 (B,)) — when given, the kernel runs the
+        serving early-exit gate each step and freezes retired lanes.
+
+    Returns a dict with ``spike_counts``/``first_spike_t``/``v_final``
+    ((B, n_out) i32), ``v_trace`` ((chunk, B, n_out) i32), ``active_adds``
+    ((chunk, B) i32, summed over layers), ``prng_state`` ((B, n_in) u32),
+    the carried ``v``/``en``/``steps`` state and (if gated) ``gate``.
+    The inter-layer spike tensors are never materialised.
+    """
+    interpret = _use_interpret() if interpret is None else interpret
+    if chunk_steps is None:
+        chunk_steps = num_steps
+    B, n_in = pixels_u8.shape
+    L = len(weights)
+    sizes = [n_in] + [w.shape[1] for w in weights]
+    n_out = sizes[-1]
+    bB = fused_snn.DEFAULT_BLOCK_B
+    lane = fused_snn.LANE
+    Bp = B + (-B) % bB
+
+    # Zero-padded pixel/state lanes never spike (0 > r is false, and 0 is
+    # the xorshift fixed point), so batch/input padding is invisible to the
+    # datapath; padded neurons are masked out of the enable sets below so
+    # they cannot fire and do not count toward the executed-add channel.
+    px = _pad_to(_pad_to(pixels_u8, 0, bB), 1, lane)
+    st = _pad_to(_pad_to(state_u32, 0, bB), 1, lane)
+    ws = tuple(_pad_to(_pad_to(w, 0, lane), 1, lane) for w in weights)
+
+    def valid_mask(n_true, n_pad):
+        col = jnp.arange(n_pad, dtype=jnp.int32)[None, :]
+        return jnp.broadcast_to(col < n_true, (Bp, n_pad))
+
+    if init is None:
+        v_in = tuple(jnp.full((Bp, ws[l].shape[1]), v_rest, jnp.int32)
+                     for l in range(L))
+        en_in = tuple(valid_mask(sizes[l + 1], ws[l].shape[1])
+                      for l in range(L))
+        cnt_in = jnp.zeros((Bp, ws[-1].shape[1]), jnp.int32)
+        first_in = jnp.full((Bp, ws[-1].shape[1]), num_steps, jnp.int32)
+        steps_in = jnp.zeros((Bp, 1), jnp.int32)
+    else:
+        v_in = tuple(_pad_to(_pad_to(init["v"][l], 0, bB), 1, lane)
+                     for l in range(L))
+        en_in = tuple(
+            _pad_to(_pad_to(init["en"][l].astype(bool), 0, bB), 1, lane)
+            for l in range(L))
+        cnt_in = _pad_to(_pad_to(init["counts"], 0, bB), 1, lane)
+        first_in = _pad_to(_pad_to(init["first"], 0, bB), 1, lane)
+        steps_in = _pad_to(init["steps"].astype(jnp.int32)[:, None], 0, bB)
+    en_in = tuple(e.astype(jnp.uint8) for e in en_in)
+
+    gate_in = None
+    if gate is not None:
+        gate_in = (
+            _pad_to(gate["active"].astype(jnp.int32)[:, None], 0, bB),
+            _pad_to(gate["prev"].astype(jnp.int32)[:, None], 0, bB),
+            _pad_to(gate["streak"].astype(jnp.int32)[:, None], 0, bB),
+        )
+
+    outs = fused_snn.fused_snn_stack_pallas(
+        px, st, ws, v_in, en_in, cnt_in, first_in, steps_in, gate_in,
+        chunk_steps=chunk_steps, window_steps=num_steps,
+        decay_shift=decay_shift, v_threshold=v_threshold, v_rest=v_rest,
+        v_min=v_min, v_max=v_max, active_pruning=active_pruning,
+        patience=patience, readout=readout, interpret=interpret)
+    cnt, vtr, first, adds, st_out, v_fin, en_fin, steps_out = outs[:8]
+    res = {
+        "spike_counts": cnt[:B, :n_out],
+        "v_trace": vtr[:, :B, :n_out],
+        "first_spike_t": first[:B, :n_out],
+        "v_final": v_fin[-1][:B, :n_out],
+        "active_adds": adds[:, :B],
+        "prng_state": st_out[:B, :n_in],
+        "v": tuple(v_fin[l][:B, :sizes[l + 1]] for l in range(L)),
+        "en": tuple(en_fin[l][:B, :sizes[l + 1]].astype(bool)
+                    for l in range(L)),
+        "steps": steps_out[:B, 0],
+    }
+    if gate is not None:
+        act, prev, streak = outs[8]
+        res["gate"] = {"active": act[:B, 0] != 0, "prev": prev[:B, 0],
+                       "streak": streak[:B, 0]}
+    return res
+
+
+@partial(jax.jit, static_argnames=(
     "num_steps", "decay_shift", "v_threshold", "v_rest", "v_min", "v_max",
     "active_pruning", "interpret"))
 def fused_snn_op(pixels_u8: jax.Array, state_u32: jax.Array, w_q: jax.Array,
@@ -76,35 +185,18 @@ def fused_snn_op(pixels_u8: jax.Array, state_u32: jax.Array, w_q: jax.Array,
                  v_rest: int = 0, v_min: int = -(1 << 20),
                  v_max: int = (1 << 20) - 1, active_pruning: bool = False,
                  interpret: bool | None = None):
-    """Whole encode→LIF window in one Pallas launch (see fused_snn.py).
+    """Single-layer whole-window convenience wrapper over the stack op.
 
     Returns a dict with ``spike_counts`` (B, N_out) i32, ``v_trace``
     (T, B, N_out) i32, ``first_spike_t`` (B, N_out) i32, ``v_final``
     (B, N_out) i32, ``active_adds`` (T, B) i32 and ``prng_state``
     (B, N_in) u32 — the (T, B, N_in) spike tensor is never materialised.
     """
-    interpret = _use_interpret() if interpret is None else interpret
-    B, n_in = pixels_u8.shape
-    n_out = w_q.shape[1]
-    bB, bN = fused_snn.DEFAULT_BLOCK
-    # Zero-padded pixel/state lanes never spike (0 > r is false, and 0 is
-    # the xorshift fixed point), so padding is invisible to the datapath.
-    px = _pad_to(_pad_to(pixels_u8, 0, bB), 1, 128)
-    st = _pad_to(_pad_to(state_u32, 0, bB), 1, 128)
-    w = _pad_to(_pad_to(w_q, 0, 128), 1, bN)
-    cnt, vtr, first, vfin, adds, st_out = fused_snn.fused_snn_forward_pallas(
-        px, st, w, num_steps=num_steps, decay_shift=decay_shift,
-        v_threshold=v_threshold, v_rest=v_rest, v_min=v_min, v_max=v_max,
-        active_pruning=active_pruning, n_out_true=n_out,
+    return fused_snn_stack_op(
+        pixels_u8, state_u32, (w_q,), num_steps=num_steps,
+        decay_shift=decay_shift, v_threshold=v_threshold, v_rest=v_rest,
+        v_min=v_min, v_max=v_max, active_pruning=active_pruning,
         interpret=interpret)
-    return {
-        "spike_counts": cnt[:B, :n_out],
-        "v_trace": vtr[:, :B, :n_out],
-        "first_spike_t": first[:B, :n_out],
-        "v_final": vfin[:B, :n_out],
-        "active_adds": adds[:, :B],
-        "prng_state": st_out[:B, :n_in],
-    }
 
 
 @partial(jax.jit, static_argnames=("mode", "interpret"))

@@ -12,7 +12,7 @@ import jax
 import jax.numpy as jnp
 
 __all__ = ["poisson_encode_ref", "lif_forward_ref", "spike_matmul_ref",
-           "fused_snn_ref"]
+           "fused_snn_ref", "fused_snn_stack_ref"]
 
 
 def poisson_encode_ref(pixels_u8: jax.Array, state_u32: jax.Array,
@@ -109,6 +109,81 @@ def fused_snn_ref(pixels_u8: jax.Array, state_u32: jax.Array,
     (s_f, v_f, _, cnt_f, first_f), (vtr, adds_t) = jax.lax.scan(
         step, (state_u32, v0, en0, cnt0, first0), jnp.arange(num_steps))
     return cnt_f, vtr, first_f, v_f, adds_t, s_f
+
+
+def fused_snn_stack_ref(pixels_u8: jax.Array, state_u32: jax.Array,
+                        weights, *, num_steps: int, chunk_steps: int | None = None,
+                        decay_shift: int, v_threshold: int, v_rest: int = 0,
+                        v_min: int = -(1 << 20), v_max: int = (1 << 20) - 1,
+                        active_pruning: bool = False,
+                        init: dict | None = None):
+    """Oracle for the multi-layer resumable megakernel (fused_snn.py).
+
+    Re-derives the whole stack — PRNG, comparator, the per-layer Σ W·S /
+    leak / fire / reset / pruning chain, the layer-summed add counter and
+    the carried-state semantics — in one scan, independently of
+    ``repro.core``.  ``init`` mirrors the kernel's carried state (``v`` /
+    ``en`` per-layer tuples, ``counts``, ``first`` with sentinel
+    ``num_steps``, ``steps`` (B,)); ``chunk_steps`` is how many steps this
+    call executes (default: the full window).
+
+    Returns a dict shaped like ``kernels.ops.fused_snn_stack_op``'s.
+    """
+    if chunk_steps is None:
+        chunk_steps = num_steps
+    B = pixels_u8.shape[0]
+    L = len(weights)
+    ws = [w.astype(jnp.int32) for w in weights]
+    n_out = ws[-1].shape[1]
+    if init is None:
+        init = {
+            "v": tuple(jnp.full((B, w.shape[1]), v_rest, jnp.int32)
+                       for w in ws),
+            "en": tuple(jnp.ones((B, w.shape[1]), bool) for w in ws),
+            "counts": jnp.zeros((B, n_out), jnp.int32),
+            "first": jnp.full((B, n_out), num_steps, jnp.int32),
+            "steps": jnp.zeros((B,), jnp.int32),
+        }
+
+    def step(carry, _):
+        s, vs, ens, cnt, first, steps = carry
+        s = s ^ (s << 13)
+        s = s ^ (s >> 17)
+        s = s ^ (s << 5)
+        x = pixels_u8 > (s >> 24).astype(jnp.uint8)
+        adds = jnp.zeros((B,), jnp.int32)
+        new_vs, new_ens = [], []
+        for l in range(L):
+            en = ens[l]
+            cur = jnp.dot(x.astype(jnp.int32), ws[l])
+            cur = jnp.where(en, cur, 0)
+            v_int = jnp.clip(vs[l] + cur, v_min, v_max)
+            v_leak = v_int - (v_int >> decay_shift)
+            fired = jnp.logical_and(v_leak >= v_threshold, en)
+            v_new = jnp.where(fired, jnp.int32(v_rest), v_leak)
+            v_new = jnp.where(en, v_new, vs[l])
+            adds = adds + (jnp.sum(x.astype(jnp.int32), axis=-1)
+                           * jnp.sum(en.astype(jnp.int32), axis=-1))
+            if active_pruning:
+                en = jnp.logical_and(en, jnp.logical_not(fired))
+            new_vs.append(v_new)
+            new_ens.append(en)
+            x = fired
+        cnt = cnt + x.astype(jnp.int32)
+        first = jnp.where(jnp.logical_and(x, first == num_steps),
+                          steps[:, None], first)
+        carry = (s, tuple(new_vs), tuple(new_ens), cnt, first, steps + 1)
+        return carry, (new_vs[-1], adds)
+
+    carry0 = (state_u32, tuple(init["v"]), tuple(init["en"]),
+              init["counts"], init["first"], init["steps"].astype(jnp.int32))
+    (s_f, vs_f, ens_f, cnt_f, first_f, steps_f), (vtr, adds_t) = \
+        jax.lax.scan(step, carry0, None, length=chunk_steps)
+    return {
+        "spike_counts": cnt_f, "v_trace": vtr, "first_spike_t": first_f,
+        "v_final": vs_f[-1], "active_adds": adds_t, "prng_state": s_f,
+        "v": vs_f, "en": ens_f, "steps": steps_f,
+    }
 
 
 def spike_matmul_ref(spikes: jax.Array, w_q: jax.Array) -> jax.Array:

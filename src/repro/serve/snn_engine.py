@@ -8,21 +8,30 @@ make that efficient under heavy traffic:
   * **Early exit** — a lane whose running prediction has been stable for
     ``patience`` consecutive steps retires before the window ends (the
     request-level analogue of active pruning; pure gate from
-    serve.early_exit, evaluated *inside* the jitted window chunk so a lane
-    stops burning adds the step it retires, not at the next host sync).
+    serve.early_exit, evaluated *inside* the device-side window chunk so a
+    lane stops burning adds the step it retires, not at the next host
+    sync).
   * **Lane compaction** — at chunk boundaries, retired lanes are compacted
     out of the batch tile and the freed slots admit queued images, so a
     long-running image never blocks throughput (continuous batching).
+
+The window chunk dispatches through the integer engine's backends
+(core.snn): on TPU the **resumable fused megakernel** advances every lane
+``chunk_steps`` steps in one Pallas launch — layer weights stay resident,
+inter-layer spikes never touch HBM, and the stability gate runs inside the
+kernel so per-step retirement semantics are preserved bit-for-bit.  On
+hosts without a TPU the same datapath runs as a pure-jnp scan over
+``core.snn.snn_int_stack_step`` (the reference backend) — both paths
+produce identical lane-state evolution for the same seeds.
 
 The per-lane executed-add counter is the same energy side channel the
 paper integrates (§V): a retired lane's counter is frozen, which is the
 measurable "sleep sooner" win.
 
-The window chunk is a pure jitted function over explicit lane state, so
-the whole engine state is a pytree; only queue admission and result
-collection happen on the host.  Full-window (non-streaming) requests
-should instead go straight through ``core.snn.snn_apply_int``, which
-dispatches to the fused Pallas megakernel via the backend selector.
+Readouts: ``count`` (spike-register argmax) and ``first_spike`` (earliest
+spiking class, membrane tiebreak — the active-pruning config's readout)
+both stream; ``membrane`` needs the full trace and is rejected — run those
+configs through ``core.snn.snn_apply_int``.
 """
 
 from __future__ import annotations
@@ -37,8 +46,8 @@ import numpy as np
 
 from ..core import lif as lif_mod
 from ..core import prng as prng_mod
-from ..core.snn import SNNConfig, encode_lif_timestep
-from .early_exit import StabilityGateState, stability_init, stability_step
+from ..core.snn import SNNConfig, readout_pred, snn_int_stack_step
+from .early_exit import StabilityGateState, stability_step
 
 __all__ = ["SNNStreamEngine", "LaneState", "RequestResult", "stream_chunk"]
 
@@ -48,9 +57,10 @@ class LaneState(NamedTuple):
 
     px: jax.Array          # (B, n_in) uint8 pixels
     rng: jax.Array         # (B, n_in) uint32 xorshift lanes
-    v: jax.Array           # (B, n_out) int32 membrane accumulators
-    en: jax.Array          # (B, n_out) bool neuron clock-gates
+    v: tuple               # per-layer (B, n_l) int32 membrane accumulators
+    en: tuple              # per-layer (B, n_l) bool neuron clock-gates
     counts: jax.Array      # (B, n_out) int32 spike registers
+    first: jax.Array       # (B, n_out) int32 first-spike latch (sentinel=T)
     gate_prev: jax.Array   # (B,) int32 stability-gate memory
     gate_streak: jax.Array  # (B,) int32
     steps: jax.Array       # (B,) int32 window steps executed
@@ -68,17 +78,19 @@ class RequestResult:
     early_exit: bool       # retired by the stability gate before T
 
 
-def _init_lanes(batch: int, n_in: int, n_out: int,
+def _init_lanes(batch: int, layer_sizes: tuple[int, ...], num_steps: int,
                 v_rest: int) -> LaneState:
-    g = stability_init(batch)
+    n_in, n_out = layer_sizes[0], layer_sizes[-1]
     return LaneState(
         px=jnp.zeros((batch, n_in), jnp.uint8),
         rng=jnp.full((batch, n_in), 1, jnp.uint32),
-        v=jnp.full((batch, n_out), v_rest, jnp.int32),
-        en=jnp.ones((batch, n_out), bool),
+        v=tuple(jnp.full((batch, n), v_rest, jnp.int32)
+                for n in layer_sizes[1:]),
+        en=tuple(jnp.ones((batch, n), bool) for n in layer_sizes[1:]),
         counts=jnp.zeros((batch, n_out), jnp.int32),
-        gate_prev=g.prev,
-        gate_streak=g.streak,
+        first=jnp.full((batch, n_out), num_steps, jnp.int32),
+        gate_prev=jnp.full((batch,), -1, jnp.int32),
+        gate_streak=jnp.zeros((batch,), jnp.int32),
         steps=jnp.zeros((batch,), jnp.int32),
         adds=jnp.zeros((batch,), jnp.int32),
         active=jnp.zeros((batch,), bool),
@@ -87,45 +99,68 @@ def _init_lanes(batch: int, n_in: int, n_out: int,
 
 @partial(jax.jit, static_argnames=(
     "chunk_steps", "num_steps", "lif_cfg", "dot_impl", "active_pruning",
-    "patience"))
-def stream_chunk(lanes: LaneState, w_q: jax.Array, *, chunk_steps: int,
+    "patience", "readout", "backend", "interpret"))
+def stream_chunk(lanes: LaneState, weights: tuple, *, chunk_steps: int,
                  num_steps: int, lif_cfg: lif_mod.LIFConfig,
-                 dot_impl: str, active_pruning: bool,
-                 patience: int) -> LaneState:
+                 dot_impl: str, active_pruning: bool, patience: int,
+                 readout: str = "count", backend: str = "reference",
+                 interpret: bool | None = None) -> LaneState:
     """Advance every active lane by up to ``chunk_steps`` window steps.
 
-    The per-step datapath is ``core.snn.encode_lif_timestep`` — the same
-    single source of truth the fused jnp scan uses — with two lane-level
-    gates on top: the stability early exit and the T-step window bound.
-    A retired/inactive lane is completely frozen — PRNG, membrane,
-    counters and the add counter stop, which is what the compaction test
-    measures.
+    ``backend="fused"`` runs the whole chunk — every layer, every step,
+    the stability gate included — inside one resumable Pallas launch
+    (kernels.fused_snn); ``backend="reference"`` scans the same datapath
+    in jnp via ``core.snn.snn_int_stack_step``.  The two are bit-identical
+    on shared lane state, including mid-chunk retirement: a retired or
+    inactive lane is completely frozen — PRNG, membranes, counters and the
+    add counter stop, which is what the compaction test measures.
     """
+    if backend == "fused":
+        from ..kernels import ops
+        k = ops.fused_snn_stack_op(
+            lanes.px, lanes.rng, weights, num_steps=num_steps,
+            chunk_steps=chunk_steps, decay_shift=lif_cfg.decay_shift,
+            v_threshold=lif_cfg.v_threshold, v_rest=lif_cfg.v_rest,
+            v_min=lif_cfg.v_min, v_max=lif_cfg.v_max,
+            active_pruning=active_pruning,
+            init={"v": lanes.v, "en": lanes.en, "counts": lanes.counts,
+                  "first": lanes.first, "steps": lanes.steps},
+            gate={"active": lanes.active, "prev": lanes.gate_prev,
+                  "streak": lanes.gate_streak},
+            patience=patience, readout=readout, interpret=interpret)
+        return LaneState(
+            px=lanes.px, rng=k["prng_state"], v=k["v"], en=k["en"],
+            counts=k["spike_counts"], first=k["first_spike_t"],
+            gate_prev=k["gate"]["prev"], gate_streak=k["gate"]["streak"],
+            steps=k["steps"],
+            adds=lanes.adds + jnp.sum(k["active_adds"], axis=0),
+            active=k["gate"]["active"])
 
     def body(carry, _):
         st = carry
         act = st.active
-        neuron = lif_mod.LIFStateInt(v=st.v, enable=st.en)
-        rng, neuron, fired, spk = encode_lif_timestep(
-            st.rng, st.px, neuron, w_q, lif_cfg, dot_impl=dot_impl,
-            active_pruning=active_pruning)
-        v_new, en = neuron.v, neuron.enable
+        layer_states = tuple(lif_mod.LIFStateInt(v=v, enable=e)
+                             for v, e in zip(st.v, st.en))
+        rng, new_states, fired, adds_t = snn_int_stack_step(
+            st.rng, st.px, layer_states, weights, lif_cfg,
+            dot_impl=dot_impl, active_pruning=active_pruning)
         counts = st.counts + fired.astype(jnp.int32)
-        adds_t = (jnp.sum(spk.astype(jnp.int32), axis=-1)
-                  * jnp.sum(st.en.astype(jnp.int32), axis=-1))
+        first = jnp.where(
+            jnp.logical_and(fired, st.first == num_steps),
+            st.steps[:, None], st.first)
         # stability gate on the running prediction (pure, in-loop); a lane
         # with no output spikes yet has no prediction to be stable about —
         # its gate state stays at init so neither the streak nor the retire
         # can trigger before the first spike (argmax(zeros)=0 is not a
         # stable class-0 vote, and the streak must not pre-accumulate).
         has_spike = jnp.max(counts, axis=-1) > 0
-        pred = jnp.argmax(counts, axis=-1).astype(jnp.int32)
+        pred = readout_pred(counts, first, new_states[-1].v, readout,
+                            num_steps).astype(jnp.int32)
         gate, done = stability_step(
             StabilityGateState(prev=st.gate_prev, streak=st.gate_streak),
             pred, patience)
-        gate = StabilityGateState(
-            prev=jnp.where(has_spike, gate.prev, -1),
-            streak=jnp.where(has_spike, gate.streak, 0))
+        gate_prev = jnp.where(has_spike, gate.prev, -1)
+        gate_streak = jnp.where(has_spike, gate.streak, 0)
         done = jnp.logical_and(done, has_spike)
         steps = st.steps + act.astype(jnp.int32)
         still = jnp.logical_and(act, jnp.logical_not(done))
@@ -138,11 +173,13 @@ def stream_chunk(lanes: LaneState, w_q: jax.Array, *, chunk_steps: int,
         return LaneState(
             px=st.px,
             rng=keep(rng, st.rng),
-            v=keep(v_new, st.v),
-            en=keep(en, st.en),
+            v=tuple(keep(s.v, ov) for s, ov in zip(new_states, st.v)),
+            en=tuple(keep(s.enable, oe)
+                     for s, oe in zip(new_states, st.en)),
             counts=keep(counts, st.counts),
-            gate_prev=keep(gate.prev, st.gate_prev),
-            gate_streak=keep(gate.streak, st.gate_streak),
+            first=keep(first, st.first),
+            gate_prev=keep(gate_prev, st.gate_prev),
+            gate_streak=keep(gate_streak, st.gate_streak),
             steps=steps,
             adds=st.adds + jnp.where(act, adds_t, 0),
             active=jnp.where(act, still, st.active),
@@ -160,27 +197,50 @@ class SNNStreamEngine:
         eng = SNNStreamEngine(params_q, cfg, batch_size=8)
         ids = [eng.submit(img) for img in images]     # queue requests
         results = eng.run()                            # {id: RequestResult}
+
+    ``backend`` picks the chunk executor: ``"fused"`` (resumable Pallas
+    megakernel — interpret mode off-TPU, so slow but bit-exact there),
+    ``"reference"`` (jnp scan), or None/"auto" (fused on TPU, reference
+    elsewhere).  Arbitrary layer stacks are supported — hidden-layer spike
+    traffic stays on-chip on the fused path.
     """
 
     def __init__(self, params_q: dict, cfg: SNNConfig, *, batch_size: int = 8,
-                 chunk_steps: int = 4, patience: int = 2, seed: int = 0):
-        if len(params_q["layers"]) != 1:
-            raise ValueError("streaming engine supports the paper's "
-                             "single-layer topology")
-        if cfg.readout != "count":
+                 chunk_steps: int = 4, patience: int = 2, seed: int = 0,
+                 backend: str | None = None):
+        if cfg.readout not in ("count", "first_spike"):
             raise ValueError(
-                f"streaming engine implements the 'count' readout only; "
-                f"got readout={cfg.readout!r} — run first_spike/membrane "
+                f"streaming engine implements the 'count' and 'first_spike' "
+                f"readouts; got readout={cfg.readout!r} — run membrane "
                 f"configs through core.snn.snn_apply_int instead")
-        self.w_q = params_q["layers"][0]["w_q"]
+        if backend in (None, "auto"):
+            backend = ("fused" if jax.default_backend() == "tpu"
+                       else "reference")
+        if backend not in ("fused", "reference"):
+            raise ValueError(
+                f"streaming chunk backend must be 'fused' or 'reference' "
+                f"(the staged kernels cannot resume mid-window); got "
+                f"{backend!r}")
+        self.backend = backend
+        self.weights = tuple(layer["w_q"] for layer in params_q["layers"])
+        self.layer_sizes = tuple([self.weights[0].shape[0]]
+                                 + [w.shape[1] for w in self.weights])
+        if backend == "fused":
+            from ..core.snn import fused_unsupported_reason
+            reason = fused_unsupported_reason(cfg, len(self.weights),
+                                              self.layer_sizes,
+                                              trace_steps=chunk_steps)
+            if reason is not None:
+                raise ValueError(f"fused streaming backend unavailable: "
+                                 f"{reason} — use backend='reference'")
         self.cfg = cfg
         self.batch_size = batch_size
         self.chunk_steps = chunk_steps
         self.patience = patience
         self.seed = seed
-        self.n_in, self.n_out = self.w_q.shape
-        self.lanes = _init_lanes(batch_size, self.n_in, self.n_out,
-                                 cfg.lif.v_rest)
+        self.n_in, self.n_out = self.layer_sizes[0], self.layer_sizes[-1]
+        self.lanes = _init_lanes(batch_size, self.layer_sizes,
+                                 cfg.num_steps, cfg.lif.v_rest)
         self.lane_req: list[int | None] = [None] * batch_size
         self.queue: list[tuple[int, np.ndarray]] = []
         self.results: dict[int, RequestResult] = {}
@@ -198,6 +258,13 @@ class SNNStreamEngine:
     @property
     def pending(self) -> int:
         return len(self.queue) + sum(r is not None for r in self.lane_req)
+
+    # ---- readout --------------------------------------------------------
+    def _host_pred(self, counts: np.ndarray, first: np.ndarray,
+                   v_last: np.ndarray) -> int:
+        """Harvest-time prediction for one retired lane."""
+        return int(readout_pred(counts, first, v_last, self.cfg.readout,
+                                self.cfg.num_steps))
 
     # ---- scheduling -----------------------------------------------------
     def _admit_and_compact(self) -> list[int]:
@@ -222,7 +289,8 @@ class SNNStreamEngine:
             rid = self.lane_req[int(i)]
             self.results[rid] = RequestResult(
                 request_id=rid,
-                pred=int(st.counts[i].argmax()),
+                pred=self._host_pred(st.counts[i], st.first[i],
+                                     st.v[-1][i]),
                 spike_counts=st.counts[i].copy(),
                 steps=int(st.steps[i]),
                 adds=int(st.adds[i]),
@@ -247,9 +315,12 @@ class SNNStreamEngine:
             st.px[slot] = pixels
             st.rng[slot] = np.asarray(
                 prng_mod.seed_state(self.seed + rid, (self.n_in,)))
-            st.v[slot] = self.cfg.lif.v_rest
-            st.en[slot] = True
+            for v in st.v:
+                v[slot] = self.cfg.lif.v_rest
+            for en in st.en:
+                en[slot] = True
             st.counts[slot] = 0
+            st.first[slot] = self.cfg.num_steps
             st.gate_prev[slot] = -1
             st.gate_streak[slot] = 0
             st.steps[slot] = 0
@@ -264,10 +335,11 @@ class SNNStreamEngine:
         """Admit + run one chunk.  Returns request ids finished so far."""
         done = self._admit_and_compact()
         self.lanes = stream_chunk(
-            self.lanes, self.w_q, chunk_steps=self.chunk_steps,
+            self.lanes, self.weights, chunk_steps=self.chunk_steps,
             num_steps=self.cfg.num_steps, lif_cfg=self.cfg.lif,
             dot_impl=self.cfg.dot_impl,
-            active_pruning=self.cfg.active_pruning, patience=self.patience)
+            active_pruning=self.cfg.active_pruning, patience=self.patience,
+            readout=self.cfg.readout, backend=self.backend)
         return done
 
     def run(self, max_chunks: int | None = None) -> dict[int, RequestResult]:

@@ -127,11 +127,26 @@ def test_backend_auto_resolution():
     on_tpu = jax.default_backend() == "tpu"
     assert snn.resolve_backend(SNN_CONFIG, None, 1) == (
         "fused" if on_tpu else "reference")
-    # the fused kernel only covers the single-layer topology
-    assert snn.resolve_backend(SNN_CONFIG, "fused", 2) == (
-        "staged" if on_tpu else "reference")
+    # the fused kernel now covers arbitrary stacks: an explicit request is
+    # honoured for deep topologies instead of silently degrading
+    assert snn.resolve_backend(SNN_CONFIG, "fused", 2,
+                               layer_sizes=(784, 256, 10)) == "fused"
     with pytest.raises(ValueError):
         snn.resolve_backend(SNN_CONFIG, "warp-drive", 1)
+
+
+def test_backend_fused_rejects_oversized_stack():
+    """An explicit backend='fused' request for a stack whose resident
+    weights cannot fit VMEM must raise a clear error, not silently fall
+    back to the staged kernels; auto quietly picks staged/reference."""
+    huge = (784, 4096, 4096, 10)   # ~64 MB of resident weight codes
+    with pytest.raises(ValueError, match="VMEM"):
+        snn.resolve_backend(SNN_CONFIG, "fused", len(huge) - 1,
+                            layer_sizes=huge)
+    on_tpu = jax.default_backend() == "tpu"
+    assert snn.resolve_backend(SNN_CONFIG, "auto", len(huge) - 1,
+                               layer_sizes=huge) == (
+        "staged" if on_tpu else "reference")
 
 
 # ---------------------------------------------------------------------------
@@ -235,28 +250,37 @@ def test_retired_lane_stops_accumulating_ops(rng):
     assert 0 < rf.adds < full_adds
 
 
-def test_stream_chunk_freezes_inactive_lanes(rng):
+def _lanes(px, rng_seed, *, batch, active, adds=None, num_steps=50):
+    return LaneState(
+        px=px,
+        rng=prng.seed_state(rng_seed, (batch, 784)),
+        v=(jnp.zeros((batch, 10), jnp.int32),),
+        en=(jnp.ones((batch, 10), bool),),
+        counts=jnp.zeros((batch, 10), jnp.int32),
+        first=jnp.full((batch, 10), num_steps, jnp.int32),
+        gate_prev=jnp.full((batch,), -1, jnp.int32),
+        gate_streak=jnp.zeros((batch,), jnp.int32),
+        steps=jnp.zeros((batch,), jnp.int32),
+        adds=(jnp.zeros((batch,), jnp.int32) if adds is None
+              else jnp.asarray(adds, jnp.int32)),
+        active=jnp.asarray(active),
+    )
+
+
+@pytest.mark.parametrize("backend", ["reference", "fused"])
+def test_stream_chunk_freezes_inactive_lanes(rng, backend):
     """Direct chunk-level check: an inactive lane's PRNG, membrane, spike
-    register and add counter are all frozen while an active lane advances."""
+    register and add counter are all frozen while an active lane advances —
+    on the jnp fallback AND inside the gated fused kernel."""
     cfg = dataclasses.replace(SNN_CONFIG, num_steps=50)
     params_q = _params(rng)
-    w_q = params_q["layers"][0]["w_q"]
+    weights = (params_q["layers"][0]["w_q"],)
     px = jnp.asarray(rng.integers(128, 256, (2, 784), dtype=np.uint8))
-    lanes = LaneState(
-        px=px,
-        rng=prng.seed_state(1, (2, 784)),
-        v=jnp.zeros((2, 10), jnp.int32),
-        en=jnp.ones((2, 10), bool),
-        counts=jnp.zeros((2, 10), jnp.int32),
-        gate_prev=jnp.full((2,), -1, jnp.int32),
-        gate_streak=jnp.zeros((2,), jnp.int32),
-        steps=jnp.zeros((2,), jnp.int32),
-        adds=jnp.asarray([123, 456], jnp.int32),
-        active=jnp.asarray([True, False]),
-    )
-    out = stream_chunk(lanes, w_q, chunk_steps=6, num_steps=cfg.num_steps,
-                       lif_cfg=cfg.lif, dot_impl="int32",
-                       active_pruning=False, patience=10_000)
+    lanes = _lanes(px, 1, batch=2, active=[True, False], adds=[123, 456])
+    out = stream_chunk(lanes, weights, chunk_steps=6,
+                       num_steps=cfg.num_steps, lif_cfg=cfg.lif,
+                       dot_impl="int32", active_pruning=False,
+                       patience=10_000, backend=backend)
     out = jax.tree.map(np.asarray, out)
     # active lane advanced
     assert out.steps[0] == 6 and out.adds[0] > 123
@@ -264,8 +288,36 @@ def test_stream_chunk_freezes_inactive_lanes(rng):
     # inactive lane fully frozen
     assert out.steps[1] == 0 and out.adds[1] == 456
     np.testing.assert_array_equal(out.rng[1], np.asarray(lanes.rng)[1])
-    np.testing.assert_array_equal(out.v[1], np.asarray(lanes.v)[1])
+    np.testing.assert_array_equal(out.v[0][1], np.asarray(lanes.v[0])[1])
     np.testing.assert_array_equal(out.counts[1], np.asarray(lanes.counts)[1])
+
+
+def test_stream_chunk_fused_matches_reference(rng):
+    """The gated fused kernel and the jnp fallback must produce identical
+    lane-state evolution — including mid-chunk retirement (patience low
+    enough that the bright lane retires inside the chunk) and the frozen
+    add counters that follow."""
+    cfg = dataclasses.replace(SNN_CONFIG, num_steps=20)
+    params_q = _params(rng)
+    weights = (params_q["layers"][0]["w_q"],)
+    px = np.concatenate([
+        rng.integers(128, 256, (3, 784), dtype=np.uint8),
+        np.zeros((1, 784), np.uint8)])                  # one spikeless lane
+    lanes = _lanes(jnp.asarray(px), 9, batch=4, active=[True] * 4,
+                   num_steps=cfg.num_steps)
+    outs = {b: stream_chunk(lanes, weights, chunk_steps=12,
+                            num_steps=cfg.num_steps, lif_cfg=cfg.lif,
+                            dot_impl="int32", active_pruning=False,
+                            patience=1, backend=b)
+            for b in ("reference", "fused")}
+    a = jax.tree.map(np.asarray, outs["reference"])
+    b = jax.tree.map(np.asarray, outs["fused"])
+    assert a.steps[:3].max() < 12    # bright lanes retired mid-chunk
+    assert a.active[3]               # the spikeless lane kept running
+    for name in LaneState._fields:
+        jax.tree.map(
+            lambda x, y: np.testing.assert_array_equal(x, y, err_msg=name),
+            getattr(a, name), getattr(b, name))
 
 
 def test_spikeless_lane_gate_stays_armed(rng):
@@ -274,33 +326,46 @@ def test_spikeless_lane_gate_stays_armed(rng):
     otherwise retire the lane the moment its first spike lands on any
     class (observed as spurious class-0 results)."""
     cfg = dataclasses.replace(SNN_CONFIG, num_steps=50)
-    w_q = _params(rng)["layers"][0]["w_q"]
-    lanes = LaneState(
-        px=jnp.zeros((1, 784), jnp.uint8),          # never spikes
-        rng=prng.seed_state(4, (1, 784)),
-        v=jnp.zeros((1, 10), jnp.int32),
-        en=jnp.ones((1, 10), bool),
-        counts=jnp.zeros((1, 10), jnp.int32),
-        gate_prev=jnp.full((1,), -1, jnp.int32),
-        gate_streak=jnp.zeros((1,), jnp.int32),
-        steps=jnp.zeros((1,), jnp.int32),
-        adds=jnp.zeros((1,), jnp.int32),
-        active=jnp.asarray([True]),
-    )
-    out = stream_chunk(lanes, w_q, chunk_steps=8, num_steps=cfg.num_steps,
-                       lif_cfg=cfg.lif, dot_impl="int32",
-                       active_pruning=False, patience=2)
+    weights = (_params(rng)["layers"][0]["w_q"],)
+    lanes = _lanes(jnp.zeros((1, 784), jnp.uint8), 4, batch=1,
+                   active=[True])
+    out = stream_chunk(lanes, weights, chunk_steps=8,
+                       num_steps=cfg.num_steps, lif_cfg=cfg.lif,
+                       dot_impl="int32", active_pruning=False, patience=2)
     out = jax.tree.map(np.asarray, out)
     assert out.gate_prev[0] == -1 and out.gate_streak[0] == 0
     assert out.active[0]                    # still waiting for evidence
 
 
-def test_stream_engine_rejects_non_count_readout(rng):
-    """The engine only implements the count readout; silently returning
-    count-argmax for a first_spike config would diverge from
-    snn_apply_int, so the constructor must refuse."""
-    with pytest.raises(ValueError, match="count"):
-        SNNStreamEngine(_params(rng), SNN_CONFIG_PRUNED, batch_size=2)
+def test_stream_engine_first_spike_readout_matches_batch_engine(rng):
+    """SNN_CONFIG_PRUNED (first_spike readout + active pruning) streams:
+    with patience too high to early-exit, every prediction and counter is
+    bit-identical to the full-window snn_apply_int result."""
+    cfg = dataclasses.replace(SNN_CONFIG_PRUNED, num_steps=12)
+    params_q = _params(rng)
+    eng = SNNStreamEngine(params_q, cfg, batch_size=3, chunk_steps=5,
+                          patience=10_000, seed=17)
+    imgs = rng.integers(0, 256, (5, 784), dtype=np.uint8)
+    ids = [eng.submit(im) for im in imgs]
+    results = eng.run()
+    assert set(results) == set(ids)
+    for rid in ids:
+        r = results[rid]
+        out = snn.snn_apply_int(params_q, jnp.asarray(imgs[rid][None]),
+                                prng.seed_state(17 + rid, (1, 784)), cfg)
+        assert r.pred == int(np.asarray(out["pred"])[0])
+        np.testing.assert_array_equal(r.spike_counts,
+                                      np.asarray(out["spike_counts"])[0])
+        assert r.adds == int(np.asarray(out["active_adds"]).sum())
+
+
+def test_stream_engine_rejects_membrane_readout(rng):
+    """The membrane readout needs the full trace, which the chunked lane
+    state intentionally does not carry; silently approximating it would
+    diverge from snn_apply_int, so the constructor must refuse."""
+    cfg = dataclasses.replace(SNN_CONFIG, readout="membrane")
+    with pytest.raises(ValueError, match="membrane"):
+        SNNStreamEngine(_params(rng), cfg, batch_size=2)
 
 
 def test_compaction_admits_queued_requests(rng):

@@ -1,0 +1,207 @@
+"""Multi-layer fused megakernel + resumable (chunked) window execution.
+
+Contracts under test:
+  * the multi-layer stack kernel is bit-identical to its independent jnp
+    oracle (ref.fused_snn_stack_ref) on hidden-layer topologies, with and
+    without active pruning;
+  * ``snn_apply_int`` produces identical results on all three backends for
+    deep stacks — counts, traces, first-spike times AND the layer-summed
+    executed-add energy counter;
+  * chunked execution with carried state (``snn_window_chunk``) is
+    bit-identical to one T-step launch for every split of the window, on
+    both the fused and reference backends (property test);
+  * the streaming engine runs multi-layer stacks end-to-end and matches
+    the batch engine.
+"""
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.snn_mnist import SNN_CONFIG_DEEP
+from repro.core import prng, snn
+from repro.kernels import ops, ref
+from repro.serve import SNNStreamEngine
+
+_KEYS = ["spike_counts", "v_trace", "first_spike_t", "v_final",
+         "active_adds", "prng_state", "steps"]
+
+
+def _deep_params(rng, sizes):
+    layers = []
+    for n_in, n_out in zip(sizes[:-1], sizes[1:]):
+        w = jnp.asarray(rng.integers(-256, 256, (n_in, n_out)), jnp.int16)
+        layers.append({"w_q": w, "scale": jnp.float32(1.0)})
+    return {"layers": layers}
+
+
+@pytest.mark.parametrize("sizes,t,prune", [
+    ((784, 128, 10), 8, False),
+    ((784, 128, 10), 8, True),
+    ((96, 200, 64, 10), 6, False),
+    ((50, 33, 17, 9), 5, True),
+])
+def test_stack_kernel_matches_ref(rng, sizes, t, prune):
+    b = 5
+    px = jnp.asarray(rng.integers(0, 256, (b, sizes[0]), dtype=np.uint8))
+    state = prng.seed_state(3, (b, sizes[0]))
+    weights = tuple(l["w_q"] for l in _deep_params(rng, sizes)["layers"])
+    got = ops.fused_snn_stack_op(px, state, weights, num_steps=t,
+                                 decay_shift=4, v_threshold=128,
+                                 active_pruning=prune, interpret=True)
+    want = ref.fused_snn_stack_ref(px, state, weights, num_steps=t,
+                                   decay_shift=4, v_threshold=128,
+                                   active_pruning=prune)
+    for key in _KEYS:
+        np.testing.assert_array_equal(np.asarray(got[key]),
+                                      np.asarray(want[key]), err_msg=key)
+    for l in range(len(weights)):
+        np.testing.assert_array_equal(np.asarray(got["v"][l]),
+                                      np.asarray(want["v"][l]),
+                                      err_msg=f"v[{l}]")
+        np.testing.assert_array_equal(np.asarray(got["en"][l]),
+                                      np.asarray(want["en"][l]),
+                                      err_msg=f"en[{l}]")
+
+
+@pytest.mark.parametrize("prune", [False, True])
+def test_multilayer_backends_bit_identical(rng, prune):
+    """Deep stacks: fused == staged == reference on every output, incl.
+    the layer-summed executed-add side channel."""
+    cfg = dataclasses.replace(SNN_CONFIG_DEEP, num_steps=8,
+                              active_pruning=prune)
+    params_q = _deep_params(rng, cfg.layer_sizes)
+    px = jnp.asarray(rng.integers(0, 256, (6, cfg.n_in), dtype=np.uint8))
+    state = prng.seed_state(21, px.shape)
+    outs = {b: snn.snn_apply_int(params_q, px, state, cfg, backend=b)
+            for b in ("reference", "staged", "fused")}
+    for key in ("pred", "spike_counts", "v_trace", "first_spike_t",
+                "v_final", "prng_state", "active_adds"):
+        a = np.asarray(outs["reference"][key])
+        for b in ("staged", "fused"):
+            np.testing.assert_array_equal(a, np.asarray(outs[b][key]),
+                                          err_msg=f"{key} on {b}")
+    # inter-layer spike tensors intentionally never exist on fused
+    assert outs["fused"]["input_spikes"] is None
+
+
+@settings(max_examples=8, deadline=None)
+@given(n_chunks=st.integers(1, 5), seed=st.integers(1, 2**31),
+       prune=st.sampled_from([False, True]),
+       backend=st.sampled_from(["fused", "reference"]))
+def test_chunked_equals_one_shot(n_chunks, seed, prune, backend):
+    """Property: running the window in k chunks with carried state is
+    bit-identical to one T-step launch — spike counts, first-spike times,
+    membrane traces, the executed-add counter and the PRNG state all
+    match, on both chunk-capable backends."""
+    rng = np.random.default_rng(seed % (2**31))
+    cfg = dataclasses.replace(SNN_CONFIG_DEEP, num_steps=10,
+                              active_pruning=prune)
+    params_q = _deep_params(rng, cfg.layer_sizes)
+    px = jnp.asarray(rng.integers(0, 256, (4, cfg.n_in), dtype=np.uint8))
+    state0 = prng.seed_state(seed, px.shape)
+    T = cfg.num_steps
+
+    # one shot
+    full_state = snn.snn_window_init(params_q, state0, cfg)
+    full_state, full = snn.snn_window_chunk(params_q, px, full_state, cfg,
+                                            chunk_steps=T, backend=backend)
+
+    # k chunks with carried state (random split of the window)
+    cuts = sorted(rng.choice(np.arange(1, T), size=min(n_chunks - 1, T - 1),
+                             replace=False).tolist()) if n_chunks > 1 else []
+    bounds = [0] + cuts + [T]
+    chunk_state = snn.snn_window_init(params_q, state0, cfg)
+    traces, adds = [], []
+    for lo, hi in zip(bounds[:-1], bounds[1:]):
+        chunk_state, out = snn.snn_window_chunk(
+            params_q, px, chunk_state, cfg, chunk_steps=hi - lo,
+            backend=backend)
+        traces.append(np.asarray(out["v_trace"]))
+        adds.append(np.asarray(out["active_adds"]))
+
+    for field in snn.SNNWindowState._fields:
+        a, b = getattr(full_state, field), getattr(chunk_state, field)
+        if isinstance(a, tuple):
+            for l, (x, y) in enumerate(zip(a, b)):
+                np.testing.assert_array_equal(
+                    np.asarray(x), np.asarray(y),
+                    err_msg=f"{field}[{l}] split={bounds}")
+        else:
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                          err_msg=f"{field} split={bounds}")
+    np.testing.assert_array_equal(np.concatenate(traces, axis=0),
+                                  np.asarray(full["v_trace"]))
+    np.testing.assert_array_equal(np.concatenate(adds, axis=0),
+                                  np.asarray(full["active_adds"]))
+
+
+def test_chunked_fused_matches_reference(rng):
+    """Cross-backend: fused chunks and reference chunks walk through the
+    identical state sequence."""
+    cfg = dataclasses.replace(SNN_CONFIG_DEEP, num_steps=9)
+    params_q = _deep_params(rng, cfg.layer_sizes)
+    px = jnp.asarray(rng.integers(0, 256, (3, cfg.n_in), dtype=np.uint8))
+    state0 = prng.seed_state(5, px.shape)
+    states = {b: snn.snn_window_init(params_q, state0, cfg)
+              for b in ("fused", "reference")}
+    for chunk in (4, 3, 2):
+        outs = {}
+        for b in states:
+            states[b], outs[b] = snn.snn_window_chunk(
+                params_q, px, states[b], cfg, chunk_steps=chunk, backend=b)
+        np.testing.assert_array_equal(np.asarray(outs["fused"]["v_trace"]),
+                                      np.asarray(outs["reference"]["v_trace"]))
+        np.testing.assert_array_equal(
+            np.asarray(states["fused"].counts),
+            np.asarray(states["reference"].counts))
+        np.testing.assert_array_equal(np.asarray(states["fused"].rng),
+                                      np.asarray(states["reference"].rng))
+
+
+def test_chunked_rejects_staged_backend(rng):
+    cfg = SNN_CONFIG_DEEP
+    params_q = _deep_params(rng, cfg.layer_sizes)
+    px = jnp.zeros((2, cfg.n_in), jnp.uint8)
+    state = snn.snn_window_init(params_q, prng.seed_state(1, px.shape), cfg)
+    with pytest.raises(ValueError, match="staged"):
+        snn.snn_window_chunk(params_q, px, state, cfg, chunk_steps=2,
+                             backend="staged")
+
+
+def test_first_spike_readout_no_overflow_on_long_windows():
+    """Regression: the first_spike score once multiplied (T - first) by
+    2^24, which wraps int32 at T = 128 and made an early-spiking class
+    score BELOW a silent class's membrane tiebreak."""
+    counts = jnp.asarray([[1, 0]], jnp.int32)
+    first = jnp.asarray([[0, 4096]], jnp.int32)       # class 0 spiked at t=0
+    v_final = jnp.asarray([[0, (1 << 24) - 2]], jnp.int32)
+    for T in (20, 128, 4096):
+        pred = snn.readout_pred(counts, first, v_final, "first_spike", T)
+        assert int(pred[0]) == 0, T
+
+
+def test_stream_engine_multilayer_matches_batch_engine(rng):
+    """A hidden-layer stack streams through the engine (fused chunk path,
+    interpret mode on CPU) and reproduces the batch engine bit-for-bit
+    when patience disables early exit."""
+    cfg = dataclasses.replace(SNN_CONFIG_DEEP, num_steps=6)
+    params_q = _deep_params(rng, cfg.layer_sizes)
+    eng = SNNStreamEngine(params_q, cfg, batch_size=2, chunk_steps=4,
+                          patience=10_000, seed=43, backend="fused")
+    imgs = rng.integers(0, 256, (3, cfg.n_in), dtype=np.uint8)
+    ids = [eng.submit(im) for im in imgs]
+    results = eng.run()
+    assert set(results) == set(ids)
+    for rid in ids:
+        r = results[rid]
+        out = snn.snn_apply_int(params_q, jnp.asarray(imgs[rid][None]),
+                                prng.seed_state(43 + rid, (1, cfg.n_in)),
+                                cfg, backend="reference")
+        assert r.pred == int(np.asarray(out["pred"])[0])
+        np.testing.assert_array_equal(r.spike_counts,
+                                      np.asarray(out["spike_counts"])[0])
+        assert r.adds == int(np.asarray(out["active_adds"]).sum())
