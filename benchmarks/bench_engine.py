@@ -1,6 +1,10 @@
 """SNN engine throughput on this host: pure-JAX scan engine vs the Pallas
 kernels (interpret mode on CPU — correctness path; the BlockSpecs target
-TPU VMEM).  Reports images/s and µs per inference for the paper topology."""
+TPU VMEM).  Reports images/s and µs per inference for the paper topology.
+
+Single-device only — the data-parallel lane-mesh numbers (per-device
+throughput, admission-overlap timing) live in bench_engine_sharded.py
+(suite ``engine_sharded``)."""
 
 from __future__ import annotations
 

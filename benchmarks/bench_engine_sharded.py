@@ -1,0 +1,129 @@
+"""Sharded streaming-engine throughput: the data-parallel lane mesh.
+
+Drives ``serve.ShardedSNNStreamEngine`` over every visible device (run
+under ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` to get a real
+N-way mesh on a CPU host — the CI multi-device lane uses 4) and reports
+
+  * aggregate and **per-device lane throughput** (images/s),
+  * **admission-overlap timing** — wall-clock with and without the
+    speculative chunk-(k+1) dispatch, plus the speculation hit counters,
+  * a bit-identity spot check against the single-device engine on the
+    same seeds (the sharding equivalence guarantee, cheaply re-verified
+    where the numbers are produced).
+
+Saves results/bench/BENCH_engine_sharded.json (uploaded as a CI
+artifact).  REPRO_BENCH_TINY=1 shrinks sizes for the smoke lane.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.snn_mnist import (SNN_CONFIG, SNN_STREAM_MESH,
+                                     make_stream_engine, make_stream_mesh)
+from repro.serve import SNNStreamEngine
+
+from .common import emit, save_json
+
+
+def _params(rng, sizes):
+    return {"layers": [
+        {"w_q": jnp.asarray(rng.integers(-256, 256, (a, b)), jnp.int16),
+         "scale": jnp.float32(1.0)}
+        for a, b in zip(sizes[:-1], sizes[1:])]}
+
+
+def _drive(eng, imgs) -> tuple[float, dict]:
+    """Submit ``imgs``, run to completion, return (seconds, results)."""
+    for im in imgs:
+        eng.submit(im)
+    t0 = time.perf_counter()
+    res = eng.run()
+    return time.perf_counter() - t0, res
+
+
+def run():
+    tiny = bool(os.environ.get("REPRO_BENCH_TINY"))
+    sizes = (64, 10) if tiny else (784, 10)
+    T = 8 if tiny else 20
+    chunk = 4
+    lanes_per_device = 4 if tiny else 8
+    mesh = make_stream_mesh()
+    n_dev = int(mesh.devices.size)
+    n_imgs = 4 * lanes_per_device * n_dev
+
+    rng = np.random.default_rng(0)
+    cfg = dataclasses.replace(SNN_CONFIG, layer_sizes=sizes, num_steps=T)
+    params_q = _params(rng, sizes)
+    imgs = rng.integers(0, 256, (2 * n_imgs, sizes[0]), dtype=np.uint8)
+
+    # patience ~T/2: some lanes exit early (compaction happens), some run
+    # to T (steady chunks where the speculative dispatch actually lands)
+    patience = max(2, T // 2)
+    knobs = dataclasses.replace(SNN_STREAM_MESH, num_devices=n_dev,
+                                lanes_per_device=lanes_per_device,
+                                chunk_steps=chunk)
+
+    def make(overlap):
+        return make_stream_engine(
+            params_q, cfg, dataclasses.replace(knobs, overlap=overlap),
+            patience=patience, seed=0, backend="reference")
+
+    timings, engines = {}, {}
+    for overlap in (True, False):
+        eng = make(overlap)
+        _drive(eng, imgs[:n_imgs])              # warm-up: compile + caches
+        eng.stats = {k: 0 for k in eng.stats}
+        dt, _ = _drive(eng, imgs[n_imgs:])      # steady-state measurement
+        timings[overlap], engines[overlap] = dt, eng
+        ips = n_imgs / dt
+        emit(f"engine_sharded.overlap_{overlap}", dt * 1e6 / n_imgs,
+             f"devices={n_dev} imgs_per_s={ips:.0f} "
+             f"per_device={ips / n_dev:.0f} stats={eng.stats}")
+
+    # Equivalence spot check: per-request results vs the single-device
+    # engine on an identical submission stream (same rids ⇒ same seeds).
+    ref = SNNStreamEngine(params_q, cfg, batch_size=lanes_per_device,
+                          chunk_steps=chunk, patience=patience, seed=0,
+                          backend="reference")
+    _, ref_res = _drive(ref, imgs[:n_imgs])
+    sh = make(True)
+    _, sh_res = _drive(sh, imgs[:n_imgs])
+    identical = set(ref_res) == set(sh_res) and all(
+        r.pred == sh_res[rid].pred and r.steps == sh_res[rid].steps
+        and r.adds == sh_res[rid].adds
+        and (r.spike_counts == sh_res[rid].spike_counts).all()
+        for rid, r in ref_res.items())
+    emit("engine_sharded.bit_identical", None, f"vs_single_dev={identical}")
+
+    stats = engines[True].stats
+    ips = n_imgs / timings[True]
+    save_json({
+        "devices": n_dev,
+        "layer_sizes": list(sizes),
+        "num_steps": T,
+        "chunk_steps": chunk,
+        "lanes_per_device": lanes_per_device,
+        "imgs_per_s": ips,
+        "per_device_lane_imgs_per_s": ips / n_dev,
+        "overlap": {
+            "seconds_with": timings[True],
+            "seconds_without": timings[False],
+            "speedup": timings[False] / timings[True],
+            "spec_used": stats["spec_used"],
+            "spec_wasted": stats["spec_wasted"],
+            "chunks": stats["chunks"],
+        },
+        "bit_identical": identical,
+    }, "bench", "BENCH_engine_sharded.json")
+    assert identical
+    return timings
+
+
+if __name__ == "__main__":
+    run()

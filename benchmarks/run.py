@@ -23,6 +23,8 @@ SUITES = {
     "fig7": ("bench_efficiency", "Fig 7 — efficiency score"),
     "fig8": ("bench_robustness", "Fig 8 — robustness"),
     "engine": ("bench_engine", "SNN engine throughput (JAX/kernels)"),
+    "engine_sharded": ("bench_engine_sharded",
+                       "Sharded streaming engine (lane mesh + overlap)"),
     "fused": ("bench_fused", "Fused vs staged encode→LIF (time + bytes)"),
     "roofline": ("roofline", "Roofline terms from the dry-run"),
 }

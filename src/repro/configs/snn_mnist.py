@@ -9,6 +9,8 @@ benchmarks and its own batch-parallel dry-run entry.
 
 from __future__ import annotations
 
+from dataclasses import dataclass
+
 from ..core.lif import LIFConfig
 from ..core.snn import SNNConfig
 from .base import ArchConfig
@@ -46,6 +48,47 @@ SNN_CONFIG_PRUNED = SNNConfig(
     active_pruning=True,
     backend="auto",
 )
+
+# Streaming-serving mesh knobs (serve.ShardedSNNStreamEngine).  The lane
+# tile is data-parallel: ``axis_name`` shards the batch axis of every
+# LaneState leaf, weights are replicated per device.  ``num_devices=None``
+# takes every visible device; the engine asserts divisibility.
+@dataclass(frozen=True)
+class SNNStreamMeshConfig:
+    axis_name: str = "data"
+    num_devices: int | None = None     # None = all visible devices
+    lanes_per_device: int = 8          # device-local batch-tile slots
+    chunk_steps: int = 4               # window steps per device dispatch
+    overlap: bool = True               # speculative chunk k+1 dispatch
+
+
+SNN_STREAM_MESH = SNNStreamMeshConfig()
+
+
+def make_stream_mesh(knobs: SNNStreamMeshConfig = SNN_STREAM_MESH):
+    """Build the serving lane mesh from the knobs (AxisType-free fallback
+    via distributed.sharding, so it works on the pinned 0.4.x jax)."""
+    import jax
+
+    from ..distributed.sharding import make_device_mesh
+    n = knobs.num_devices or len(jax.devices())
+    return make_device_mesh((n,), (knobs.axis_name,),
+                            devices=jax.devices()[:n])
+
+
+def make_stream_engine(params_q: dict, snn_cfg: SNNConfig = SNN_CONFIG,
+                       knobs: SNNStreamMeshConfig = SNN_STREAM_MESH,
+                       **engine_kw):
+    """Build a ``serve.ShardedSNNStreamEngine`` from the mesh knobs — the
+    one place a deployment configures the lane mesh (knob changes flow
+    through here; constructing the engine directly bypasses them)."""
+    from ..serve import ShardedSNNStreamEngine
+    return ShardedSNNStreamEngine(
+        params_q, snn_cfg, mesh=make_stream_mesh(knobs),
+        axis_name=knobs.axis_name,
+        lanes_per_device=knobs.lanes_per_device,
+        chunk_steps=knobs.chunk_steps, overlap=knobs.overlap, **engine_kw)
+
 
 # Hidden-layer stack (beyond the paper's topology): exercises the
 # multi-layer fused megakernel — inter-layer spike traffic stays on-chip,

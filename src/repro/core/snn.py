@@ -150,7 +150,8 @@ def quantize_params(params: dict, cfg: SNNConfig):
 
 def fused_unsupported_reason(cfg: SNNConfig, n_layers: int,
                              layer_sizes: tuple[int, ...] | None = None,
-                             trace_steps: int | None = None) -> str | None:
+                             trace_steps: int | None = None,
+                             local_batch: int | None = None) -> str | None:
     """Why the fused megakernel cannot run this configuration (None = ok).
 
     The kernel handles arbitrary layer stacks, but it keeps every weight
@@ -159,7 +160,12 @@ def fused_unsupported_reason(cfg: SNNConfig, n_layers: int,
     run staged (per-layer launches).  ``trace_steps`` is the per-launch
     membrane-trace length: the full window for one-shot execution
     (default), or ``chunk_steps`` for chunked/streaming callers, whose
-    launches only ever allocate a chunk of trace.
+    launches only ever allocate a chunk of trace.  ``local_batch`` is the
+    per-device batch tile: VMEM is a per-device resource, so a sharded
+    caller (serve.ShardedSNNStreamEngine) validates against the launch one
+    device actually executes — ``kernels.fused_snn.block_b_for`` maps the
+    local tile to the batch block that launch allocates (never derived
+    from the global lane count).
     """
     from ..kernels import fused_snn
     if n_layers < 1:
@@ -170,7 +176,7 @@ def fused_unsupported_reason(cfg: SNNConfig, n_layers: int,
     if sizes is None:
         return None                      # shapes unknown — assume it fits
     need = fused_snn.stack_vmem_bytes(
-        sizes, fused_snn.DEFAULT_BLOCK_B,
+        sizes, fused_snn.block_b_for(local_batch),
         cfg.num_steps if trace_steps is None else trace_steps)
     if need > fused_snn.VMEM_BUDGET_BYTES:
         return (f"resident stack footprint ~{need / 2**20:.1f} MiB for "
@@ -183,7 +189,8 @@ def fused_unsupported_reason(cfg: SNNConfig, n_layers: int,
 def resolve_backend(cfg: SNNConfig, backend: str | None = None,
                     n_layers: int = 1, *,
                     layer_sizes: tuple[int, ...] | None = None,
-                    trace_steps: int | None = None) -> str:
+                    trace_steps: int | None = None,
+                    local_batch: int | None = None) -> str:
     """Pick the integer-engine backend actually run on this host.
 
     ``auto`` resolves to the fused megakernel on TPU — for ANY stack depth
@@ -192,12 +199,15 @@ def resolve_backend(cfg: SNNConfig, backend: str | None = None,
     elsewhere (Pallas interpret mode is far slower than XLA on CPU — it is
     a correctness tool, not a serving path).  Explicitly requesting
     ``fused`` for a configuration the kernel cannot run raises instead of
-    silently degrading.
+    silently degrading.  ``local_batch`` scopes the VMEM feasibility check
+    to one device's batch tile (see :func:`fused_unsupported_reason`) —
+    data-parallel sharding never *shrinks* what fits, but the check must
+    not be run against the global lane count either.
     """
     b = backend if backend is not None else cfg.backend
     on_tpu = jax.default_backend() == "tpu"
     reason = fused_unsupported_reason(cfg, n_layers, layer_sizes,
-                                      trace_steps)
+                                      trace_steps, local_batch)
     if b == "auto":
         b = ("fused" if reason is None else "staged") if on_tpu \
             else "reference"

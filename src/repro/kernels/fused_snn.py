@@ -46,7 +46,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["fused_snn_stack_pallas", "stack_vmem_bytes",
+__all__ = ["fused_snn_stack_pallas", "stack_vmem_bytes", "block_b_for",
            "VMEM_BUDGET_BYTES", "DEFAULT_BLOCK_B", "LANE"]
 
 DEFAULT_BLOCK_B = 8     # batch tile per program
@@ -60,6 +60,23 @@ VMEM_BUDGET_BYTES = 12 << 20
 
 def _pad128(n: int) -> int:
     return n + (-n) % LANE
+
+
+def block_b_for(batch: int | None) -> int:
+    """Batch block actually launched for a ``batch``-row tile.
+
+    The default block, shrunk to the 8-row-sublane-padded batch when that
+    is smaller — the single source of truth shared by the launcher
+    (kernels.ops.fused_snn_stack_op) and the VMEM feasibility estimate
+    (core.snn.fused_unsupported_reason), so the footprint a sharded
+    caller validates with ``local_batch`` is exactly the block its
+    per-device launch allocates.  With the current 8-row default the two
+    coincide for every batch; the clamp matters the day DEFAULT_BLOCK_B
+    grows past the sublane minimum.
+    """
+    if batch is None:
+        return DEFAULT_BLOCK_B
+    return min(DEFAULT_BLOCK_B, max(8, int(batch) + (-int(batch)) % 8))
 
 
 def stack_vmem_bytes(layer_sizes, block_b: int = DEFAULT_BLOCK_B,

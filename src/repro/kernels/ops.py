@@ -108,7 +108,7 @@ def fused_snn_stack_op(pixels_u8: jax.Array, state_u32: jax.Array,
     L = len(weights)
     sizes = [n_in] + [w.shape[1] for w in weights]
     n_out = sizes[-1]
-    bB = fused_snn.DEFAULT_BLOCK_B
+    bB = fused_snn.block_b_for(B)
     lane = fused_snn.LANE
     Bp = B + (-B) % bB
 
@@ -156,7 +156,8 @@ def fused_snn_stack_op(pixels_u8: jax.Array, state_u32: jax.Array,
         chunk_steps=chunk_steps, window_steps=num_steps,
         decay_shift=decay_shift, v_threshold=v_threshold, v_rest=v_rest,
         v_min=v_min, v_max=v_max, active_pruning=active_pruning,
-        patience=patience, readout=readout, interpret=interpret)
+        patience=patience, readout=readout, block_b=bB,
+        interpret=interpret)
     cnt, vtr, first, adds, st_out, v_fin, en_fin, steps_out = outs[:8]
     res = {
         "spike_counts": cnt[:B, :n_out],

@@ -16,23 +16,21 @@ from __future__ import annotations
 
 import jax
 
+from ..distributed.sharding import make_device_mesh
+
 __all__ = ["make_production_mesh", "make_local_mesh", "mesh_axis_sizes"]
-
-
-def _auto(n):
-    return (jax.sharding.AxisType.Auto,) * n
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+    return make_device_mesh(shape, axes)
 
 
 def make_local_mesh():
     """Whatever devices exist, as a 1×N ("data","model") mesh (tests/CPU)."""
     n = len(jax.devices())
-    return jax.make_mesh((1, n), ("data", "model"), axis_types=_auto(2))
+    return make_device_mesh((1, n), ("data", "model"))
 
 
 def mesh_axis_sizes(mesh) -> dict:

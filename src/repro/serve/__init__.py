@@ -11,12 +11,14 @@ Two request shapes share one early-exit mechanism:
 """
 
 from .early_exit import (StabilityGateState, eos_gate, stability_gate,
-                         stability_init, stability_step)
+                         stability_init, stability_specs, stability_step)
 from .engine import (ServeState, generate, make_decode_step, make_prefill,
                      pad_cache_to)
-from .snn_engine import RequestResult, SNNStreamEngine
+from .snn_engine import (RequestResult, ShardedSNNStreamEngine,
+                         SNNStreamEngine)
 
 __all__ = ["ServeState", "generate", "make_decode_step", "make_prefill",
            "pad_cache_to", "eos_gate", "stability_gate",
-           "StabilityGateState", "stability_init", "stability_step",
-           "SNNStreamEngine", "RequestResult"]
+           "StabilityGateState", "stability_init", "stability_specs",
+           "stability_step", "SNNStreamEngine", "ShardedSNNStreamEngine",
+           "RequestResult"]

@@ -29,6 +29,7 @@ __all__ = [
     "stability_gate",
     "StabilityGateState",
     "stability_init",
+    "stability_specs",
     "stability_step",
     "StabilityState",
 ]
@@ -52,6 +53,19 @@ def stability_init(batch: int) -> StabilityGateState:
         prev=jnp.full((batch,), -1, jnp.int32),
         streak=jnp.zeros((batch,), jnp.int32),
     )
+
+
+def stability_specs(axis_name: str | None = None) -> StabilityGateState:
+    """PartitionSpecs for the gate state on a data mesh.
+
+    The gate is strictly per-lane — ``stability_step`` never looks across
+    the batch axis — so both leaves shard on the mesh's batch axis and the
+    gate computes identically on any lane slice.  This is the property the
+    sharded streaming engine (serve.snn_engine) relies on to run the
+    in-kernel early exit under ``shard_map`` without collectives.
+    """
+    from jax.sharding import PartitionSpec as P
+    return StabilityGateState(prev=P(axis_name), streak=P(axis_name))
 
 
 def stability_step(state: StabilityGateState, pred: jax.Array,

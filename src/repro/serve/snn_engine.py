@@ -32,6 +32,11 @@ Readouts: ``count`` (spike-register argmax) and ``first_spike`` (earliest
 spiking class, membrane tiebreak — the active-pruning config's readout)
 both stream; ``membrane`` needs the full trace and is rejected — run those
 configs through ``core.snn.snn_apply_int``.
+
+:class:`ShardedSNNStreamEngine` scales the same engine across a device
+mesh: the lane tile is data-parallel (one contiguous slot block per
+device, weights replicated) and the chunk runs under ``shard_map`` —
+bit-identical to single-device serving because every op here is per-lane.
 """
 
 from __future__ import annotations
@@ -44,12 +49,17 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
 from ..core import lif as lif_mod
 from ..core import prng as prng_mod
 from ..core.snn import SNNConfig, readout_pred, snn_int_stack_step
-from .early_exit import StabilityGateState, stability_step
+from ..distributed.sharding import make_device_mesh, shard_map_compat
+from .early_exit import StabilityGateState, stability_specs, stability_step
 
-__all__ = ["SNNStreamEngine", "LaneState", "RequestResult", "stream_chunk"]
+__all__ = ["SNNStreamEngine", "ShardedSNNStreamEngine", "LaneState",
+           "RequestResult", "stream_chunk", "lane_partition_specs",
+           "make_sharded_stream_chunk"]
 
 
 class LaneState(NamedTuple):
@@ -97,24 +107,14 @@ def _init_lanes(batch: int, layer_sizes: tuple[int, ...], num_steps: int,
     )
 
 
-@partial(jax.jit, static_argnames=(
-    "chunk_steps", "num_steps", "lif_cfg", "dot_impl", "active_pruning",
-    "patience", "readout", "backend", "interpret"))
-def stream_chunk(lanes: LaneState, weights: tuple, *, chunk_steps: int,
-                 num_steps: int, lif_cfg: lif_mod.LIFConfig,
-                 dot_impl: str, active_pruning: bool, patience: int,
-                 readout: str = "count", backend: str = "reference",
-                 interpret: bool | None = None) -> LaneState:
-    """Advance every active lane by up to ``chunk_steps`` window steps.
-
-    ``backend="fused"`` runs the whole chunk — every layer, every step,
-    the stability gate included — inside one resumable Pallas launch
-    (kernels.fused_snn); ``backend="reference"`` scans the same datapath
-    in jnp via ``core.snn.snn_int_stack_step``.  The two are bit-identical
-    on shared lane state, including mid-chunk retirement: a retired or
-    inactive lane is completely frozen — PRNG, membranes, counters and the
-    add counter stop, which is what the compaction test measures.
-    """
+def _stream_chunk_impl(lanes: LaneState, weights: tuple, *, chunk_steps: int,
+                       num_steps: int, lif_cfg: lif_mod.LIFConfig,
+                       dot_impl: str, active_pruning: bool, patience: int,
+                       readout: str = "count", backend: str = "reference",
+                       interpret: bool | None = None) -> LaneState:
+    """Un-jitted chunk body: every op is per-lane (no cross-batch contact),
+    which is what lets the same code run whole-tile under ``jax.jit`` or
+    per-device-slice under ``shard_map`` with bit-identical results."""
     if backend == "fused":
         from ..kernels import ops
         k = ops.fused_snn_stack_op(
@@ -189,6 +189,78 @@ def stream_chunk(lanes: LaneState, weights: tuple, *, chunk_steps: int,
     return lanes
 
 
+@partial(jax.jit, static_argnames=(
+    "chunk_steps", "num_steps", "lif_cfg", "dot_impl", "active_pruning",
+    "patience", "readout", "backend", "interpret"))
+def stream_chunk(lanes: LaneState, weights: tuple, *, chunk_steps: int,
+                 num_steps: int, lif_cfg: lif_mod.LIFConfig,
+                 dot_impl: str, active_pruning: bool, patience: int,
+                 readout: str = "count", backend: str = "reference",
+                 interpret: bool | None = None) -> LaneState:
+    """Advance every active lane by up to ``chunk_steps`` window steps.
+
+    ``backend="fused"`` runs the whole chunk — every layer, every step,
+    the stability gate included — inside one resumable Pallas launch
+    (kernels.fused_snn); ``backend="reference"`` scans the same datapath
+    in jnp via ``core.snn.snn_int_stack_step``.  The two are bit-identical
+    on shared lane state, including mid-chunk retirement: a retired or
+    inactive lane is completely frozen — PRNG, membranes, counters and the
+    add counter stop, which is what the compaction test measures.
+    """
+    return _stream_chunk_impl(
+        lanes, weights, chunk_steps=chunk_steps, num_steps=num_steps,
+        lif_cfg=lif_cfg, dot_impl=dot_impl, active_pruning=active_pruning,
+        patience=patience, readout=readout, backend=backend,
+        interpret=interpret)
+
+
+def lane_partition_specs(n_layers: int,
+                         axis_name: str | None = "data") -> LaneState:
+    """Per-leaf ``PartitionSpec``s of a data-parallel lane tile.
+
+    Every :class:`LaneState` leaf leads with the batch axis and the chunk
+    body never looks across it, so the whole tile shards on one mesh axis;
+    quantized weights are the replicated operand.  The gate leaves come
+    from ``early_exit.stability_specs`` — the per-lane shardability of the
+    in-kernel early exit is that module's contract, not this one's.
+    """
+    p = P(axis_name)
+    gate = stability_specs(axis_name)
+    return LaneState(
+        px=p, rng=p, v=(p,) * n_layers, en=(p,) * n_layers,
+        counts=p, first=p, gate_prev=gate.prev, gate_streak=gate.streak,
+        steps=p, adds=p, active=p)
+
+
+def make_sharded_stream_chunk(mesh: Mesh, axis_name: str, n_layers: int, *,
+                              chunk_steps: int, num_steps: int,
+                              lif_cfg: lif_mod.LIFConfig, dot_impl: str,
+                              active_pruning: bool, patience: int,
+                              readout: str = "count",
+                              backend: str = "reference",
+                              interpret: bool | None = None):
+    """Build the data-parallel chunk executor for ``mesh``.
+
+    Returns a jitted ``(lanes, weights) -> lanes`` whose body runs under
+    ``shard_map``: each device executes the fused megakernel (or the jnp
+    scan fallback) on its local lane slice with the weights replicated —
+    the software analogue of the paper's replicated neuron-core lanes.
+    No collectives are emitted: the stability gate and lane freezing are
+    per-lane, so the mapped body is embarrassingly parallel and
+    bit-identical to the single-device :func:`stream_chunk` on the
+    concatenation of the slices.
+    """
+    specs = lane_partition_specs(n_layers, axis_name)
+    body = partial(
+        _stream_chunk_impl, chunk_steps=chunk_steps, num_steps=num_steps,
+        lif_cfg=lif_cfg, dot_impl=dot_impl, active_pruning=active_pruning,
+        patience=patience, readout=readout, backend=backend,
+        interpret=interpret)
+    mapped = shard_map_compat(body, mesh, in_specs=(specs, P()),
+                              out_specs=specs)
+    return jax.jit(mapped)
+
+
 class SNNStreamEngine:
     """Continuous-batching front end over the streaming window chunk.
 
@@ -207,7 +279,8 @@ class SNNStreamEngine:
 
     def __init__(self, params_q: dict, cfg: SNNConfig, *, batch_size: int = 8,
                  chunk_steps: int = 4, patience: int = 2, seed: int = 0,
-                 backend: str | None = None):
+                 backend: str | None = None,
+                 local_batch: int | None = None):
         if cfg.readout not in ("count", "first_spike"):
             raise ValueError(
                 f"streaming engine implements the 'count' and 'first_spike' "
@@ -225,11 +298,16 @@ class SNNStreamEngine:
         self.weights = tuple(layer["w_q"] for layer in params_q["layers"])
         self.layer_sizes = tuple([self.weights[0].shape[0]]
                                  + [w.shape[1] for w in self.weights])
+        # Per-device lane tile (the sharded subclass passes its slice;
+        # single-device serving holds the whole tile) — scopes the fused
+        # VMEM feasibility check below to one device's launch.
+        self.local_batch = batch_size if local_batch is None else local_batch
         if backend == "fused":
             from ..core.snn import fused_unsupported_reason
             reason = fused_unsupported_reason(cfg, len(self.weights),
                                               self.layer_sizes,
-                                              trace_steps=chunk_steps)
+                                              trace_steps=chunk_steps,
+                                              local_batch=self.local_batch)
             if reason is not None:
                 raise ValueError(f"fused streaming backend unavailable: "
                                  f"{reason} — use backend='reference'")
@@ -267,25 +345,10 @@ class SNNStreamEngine:
                                 self.cfg.num_steps))
 
     # ---- scheduling -----------------------------------------------------
-    def _admit_and_compact(self) -> list[int]:
-        """Harvest retired lanes, compact active ones, admit queued images.
-
-        Returns the request ids finished in this call.  Runs on the host at
-        chunk boundaries: the batch tile stays dense, so freed slots start
-        contributing to throughput on the very next chunk.
-        """
-        occupied = np.array([r is not None for r in self.lane_req])
-        # Cheap pre-check: only the (B,) active mask crosses the device
-        # boundary.  The full lane-state round trip below happens only when
-        # a lane actually retired or a queued request can be admitted.
-        active = np.asarray(self.lanes.active)
-        if not (occupied & ~active).any() and not (
-                self.queue and not (occupied & active).all()):
-            return []
-        st = jax.tree.map(lambda a: np.array(a), self.lanes)
-        finished_lanes = occupied & ~st.active
+    def _harvest(self, st: LaneState, finished: np.ndarray) -> list[int]:
+        """Collect RequestResults for every lane in the ``finished`` mask."""
         done_ids = []
-        for i in np.nonzero(finished_lanes)[0]:
+        for i in np.nonzero(finished)[0]:
             rid = self.lane_req[int(i)]
             self.results[rid] = RequestResult(
                 request_id=rid,
@@ -297,6 +360,58 @@ class SNNStreamEngine:
                 early_exit=int(st.steps[i]) < self.cfg.num_steps,
             )
             done_ids.append(rid)
+        return done_ids
+
+    def _admit_into(self, st: LaneState, slot: int) -> None:
+        """Reset host-side lane ``slot`` for the next queued request.
+
+        The PRNG lanes are seeded from ``seed + request_id``, so a
+        request's entire window is a pure function of its id — independent
+        of which slot, device, or chunk it lands in.  This is what makes
+        sharded and single-device serving bit-identical per request.
+        """
+        rid, pixels = self.queue.pop(0)
+        st.px[slot] = pixels
+        st.rng[slot] = np.asarray(
+            prng_mod.seed_state(self.seed + rid, (self.n_in,)))
+        for v in st.v:
+            v[slot] = self.cfg.lif.v_rest
+        for en in st.en:
+            en[slot] = True
+        st.counts[slot] = 0
+        st.first[slot] = self.cfg.num_steps
+        st.gate_prev[slot] = -1
+        st.gate_streak[slot] = 0
+        st.steps[slot] = 0
+        st.adds[slot] = 0
+        st.active[slot] = True
+        self.lane_req[slot] = rid
+
+    def _upload(self, st: LaneState) -> LaneState:
+        """Host tile → device (the sharded engine re-places onto its mesh)."""
+        return jax.tree.map(jnp.asarray, st)
+
+    def _needs_compaction(self) -> bool:
+        """Cheap pre-check: only the (B,) active mask crosses the device
+        boundary.  The full lane-state round trip happens only when a lane
+        actually retired or a queued request can be admitted."""
+        occupied = np.array([r is not None for r in self.lane_req])
+        active = np.asarray(self.lanes.active)
+        return bool((occupied & ~active).any() or (
+            self.queue and not (occupied & active).all()))
+
+    def _admit_and_compact(self) -> list[int]:
+        """Harvest retired lanes, compact active ones, admit queued images.
+
+        Returns the request ids finished in this call.  Runs on the host at
+        chunk boundaries: the batch tile stays dense, so freed slots start
+        contributing to throughput on the very next chunk.
+        """
+        if not self._needs_compaction():
+            return []
+        occupied = np.array([r is not None for r in self.lane_req])
+        st = jax.tree.map(lambda a: np.array(a), self.lanes)
+        done_ids = self._harvest(st, occupied & ~st.active)
 
         # Compact: live lanes first (stable), freed/empty lanes after.
         live = np.nonzero(occupied & st.active)[0]
@@ -311,35 +426,24 @@ class SNNStreamEngine:
         for slot in range(n_live, self.batch_size):
             if not self.queue:
                 break
-            rid, pixels = self.queue.pop(0)
-            st.px[slot] = pixels
-            st.rng[slot] = np.asarray(
-                prng_mod.seed_state(self.seed + rid, (self.n_in,)))
-            for v in st.v:
-                v[slot] = self.cfg.lif.v_rest
-            for en in st.en:
-                en[slot] = True
-            st.counts[slot] = 0
-            st.first[slot] = self.cfg.num_steps
-            st.gate_prev[slot] = -1
-            st.gate_streak[slot] = 0
-            st.steps[slot] = 0
-            st.adds[slot] = 0
-            st.active[slot] = True
-            self.lane_req[slot] = rid
+            self._admit_into(st, slot)
 
-        self.lanes = jax.tree.map(jnp.asarray, st)
+        self.lanes = self._upload(st)
         return done_ids
 
-    def step(self) -> list[int]:
-        """Admit + run one chunk.  Returns request ids finished so far."""
-        done = self._admit_and_compact()
-        self.lanes = stream_chunk(
-            self.lanes, self.weights, chunk_steps=self.chunk_steps,
+    def _advance(self, lanes: LaneState) -> LaneState:
+        """Dispatch one chunk on the device (async under jax dispatch)."""
+        return stream_chunk(
+            lanes, self.weights, chunk_steps=self.chunk_steps,
             num_steps=self.cfg.num_steps, lif_cfg=self.cfg.lif,
             dot_impl=self.cfg.dot_impl,
             active_pruning=self.cfg.active_pruning, patience=self.patience,
             readout=self.cfg.readout, backend=self.backend)
+
+    def step(self) -> list[int]:
+        """Admit + run one chunk.  Returns request ids finished so far."""
+        done = self._admit_and_compact()
+        self.lanes = self._advance(self.lanes)
         return done
 
     def run(self, max_chunks: int | None = None) -> dict[int, RequestResult]:
@@ -353,3 +457,158 @@ class SNNStreamEngine:
             self.step()
         self._admit_and_compact()
         return self.results
+
+
+class ShardedSNNStreamEngine(SNNStreamEngine):
+    """Data-parallel lane mesh over the streaming engine.
+
+    The batch tile is sharded over the ``axis_name`` axis of a
+    ``jax.sharding.Mesh`` — each device owns ``batch_size // n_devices``
+    contiguous lane slots and executes the fused (or jnp-scan fallback)
+    chunk on its local slice under ``shard_map``, with the quantized
+    weights replicated (the software analogue of replicating the paper's
+    neuron core across parallel hardware lanes).  Because every part of
+    the chunk — datapath, stability gate, lane freezing, add counter — is
+    per-lane, results are bit-identical to :class:`SNNStreamEngine` on the
+    same seeds: same predictions, same retirement steps, same frozen
+    executed-add counters.
+
+    Scheduling differences from the base engine:
+
+      * **Device-local compaction** — retired lanes are compacted within
+        their device's slot block, never across blocks, so lane state is
+        re-uploaded onto the same device and no resharding traffic is
+        generated at chunk boundaries.
+      * **Round-robin admission** — queued requests fill freed slots
+        cycling across device blocks, keeping every device's live-lane
+        count balanced under partial load.
+      * **Admission/compute overlap** — after dispatching chunk *k* the
+        engine speculatively enqueues chunk *k+1* on its (not yet ready)
+        output, so the devices keep running while the host blocks on the
+        chunk-*k* retirement readback and does queue bookkeeping.  If the
+        readback shows a retirement or a possible admission, the
+        speculative state is discarded and the chunk re-dispatched from
+        the compacted tile — speculation is the pure chunk function on
+        the same state, so using it never changes results.
+        ``stats['spec_used']``/``stats['spec_wasted']`` count the
+        outcomes (the benchmark's admission-overlap timing).
+    """
+
+    def __init__(self, params_q: dict, cfg: SNNConfig, *,
+                 mesh: Mesh | None = None, axis_name: str = "data",
+                 lanes_per_device: int | None = None,
+                 batch_size: int | None = None,
+                 chunk_steps: int = 4, patience: int = 2, seed: int = 0,
+                 backend: str | None = None, overlap: bool = True):
+        if mesh is None:
+            mesh = make_device_mesh((len(jax.devices()),), (axis_name,))
+        if axis_name not in mesh.axis_names:
+            raise ValueError(f"mesh {mesh.axis_names} has no "
+                             f"{axis_name!r} axis")
+        self.mesh = mesh
+        self.axis_name = axis_name
+        self.n_devices = mesh.shape[axis_name]
+        if batch_size is None:
+            batch_size = (8 if lanes_per_device is None
+                          else lanes_per_device) * self.n_devices
+        elif (lanes_per_device is not None
+              and batch_size != lanes_per_device * self.n_devices):
+            raise ValueError(
+                f"conflicting tile shape: batch_size={batch_size} but "
+                f"lanes_per_device={lanes_per_device} × "
+                f"{self.n_devices} devices = "
+                f"{lanes_per_device * self.n_devices} — pass one or the "
+                f"other")
+        if batch_size % self.n_devices:
+            raise ValueError(
+                f"batch_size={batch_size} must divide evenly over the "
+                f"{self.n_devices}-device {axis_name!r} axis")
+        self.overlap = overlap
+        self.stats = {"chunks": 0, "spec_used": 0, "spec_wasted": 0}
+        self._spec: LaneState | None = None
+        self._spec_src: LaneState | None = None
+        super().__init__(params_q, cfg, batch_size=batch_size,
+                         chunk_steps=chunk_steps, patience=patience,
+                         seed=seed, backend=backend,
+                         local_batch=batch_size // self.n_devices)
+        specs = lane_partition_specs(len(self.weights), axis_name)
+        self._shardings = jax.tree.map(
+            lambda s: NamedSharding(mesh, s), specs,
+            is_leaf=lambda x: isinstance(x, P))
+        self._chunk_fn = make_sharded_stream_chunk(
+            mesh, axis_name, len(self.weights),
+            chunk_steps=chunk_steps, num_steps=cfg.num_steps,
+            lif_cfg=cfg.lif, dot_impl=cfg.dot_impl,
+            active_pruning=cfg.active_pruning, patience=patience,
+            readout=cfg.readout, backend=self.backend)
+        self.weights = jax.device_put(self.weights,
+                                      NamedSharding(mesh, P()))
+        self.lanes = jax.device_put(self.lanes, self._shardings)
+
+    # ---- device placement ----------------------------------------------
+    def _upload(self, st: LaneState) -> LaneState:
+        return jax.device_put(st, self._shardings)
+
+    def _advance(self, lanes: LaneState) -> LaneState:
+        return self._chunk_fn(lanes, self.weights)
+
+    # ---- scheduling -----------------------------------------------------
+    def _admit_and_compact(self) -> list[int]:
+        """Block-local compaction + round-robin admission (see class doc)."""
+        if not self._needs_compaction():
+            return []
+        occupied = np.array([r is not None for r in self.lane_req])
+        st = jax.tree.map(lambda a: np.array(a), self.lanes)
+        done_ids = self._harvest(st, occupied & ~st.active)
+
+        # Compact each device block independently: live lanes first within
+        # the block, freed slots after — a lane never changes device.
+        order, lane_req, free_slots = [], [], []
+        for d in range(self.n_devices):
+            lo = d * self.local_batch
+            block = np.arange(lo, lo + self.local_batch)
+            live = block[occupied[block] & st.active[block]]
+            free = block[~(occupied[block] & st.active[block])]
+            order.extend(live.tolist() + free.tolist())
+            lane_req.extend([self.lane_req[int(i)] for i in live]
+                            + [None] * len(free))
+            free_slots.append(list(range(lo + len(live),
+                                         lo + self.local_batch)))
+        st = jax.tree.map(lambda a: a[np.asarray(order, np.int32)], st)
+        self.lane_req = lane_req
+
+        # Round-robin admission across device blocks.
+        while self.queue and any(free_slots):
+            for d in range(self.n_devices):
+                if not self.queue:
+                    break
+                if free_slots[d]:
+                    self._admit_into(st, free_slots[d].pop(0))
+
+        self.lanes = self._upload(st)
+        return done_ids
+
+    def step(self) -> list[int]:
+        """Admit + run one chunk, overlapping the next with host work."""
+        done = self._admit_and_compact()
+        if self._spec is not None and self.lanes is self._spec_src:
+            # the tile object is the very one the speculative chunk was
+            # dispatched from (no compaction replaced it — here OR in any
+            # intervening run()/_admit_and_compact call): the speculation
+            # IS this step's chunk (same pure function, same input)
+            nxt = self._spec
+            self.stats["spec_used"] += 1
+        else:
+            if self._spec is not None:
+                self.stats["spec_wasted"] += 1
+            nxt = self._advance(self.lanes)
+        self._spec = self._spec_src = None
+        self.lanes = nxt
+        self.stats["chunks"] += 1
+        if self.overlap and (self.queue
+                             or any(r is not None for r in self.lane_req)):
+            # enqueue chunk k+1 now — the devices stay busy while the next
+            # step's host-side readback and queue bookkeeping run
+            self._spec_src = nxt
+            self._spec = self._advance(nxt)
+        return done

@@ -11,7 +11,6 @@ import sys
 import textwrap
 
 import jax
-import pytest
 
 from repro.configs import get_config
 from repro.distributed.partition import _is_spec_leaf, param_specs
@@ -19,12 +18,10 @@ from repro.launch.specs import abstract_params
 
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
-# The mesh-based subprocess tests build jax.make_mesh(axis_types=...),
-# which needs jax.sharding.AxisType (absent from older jax releases).
-needs_axis_type = pytest.mark.skipif(
-    not hasattr(jax.sharding, "AxisType"),
-    reason="jax.sharding.AxisType requires a newer jax than this "
-           "environment provides")
+# The mesh-based subprocess tests build their meshes through
+# distributed.sharding.make_device_mesh, which falls back to the
+# AxisType-free jax.make_mesh/Mesh constructors on the pinned 0.4.x jax —
+# so they run (not skip) on every jax this repo supports.
 
 
 def run_sub(code: str) -> str:
@@ -69,7 +66,6 @@ def test_full_config_tp_divisibility():
                     assert dim % 16 == 0, (arch, path, leaf.shape, spec)
 
 
-@needs_axis_type
 def test_sharded_train_step_matches_single_device():
     """8-device pjit train step == single-device train step (same math)."""
     out = run_sub("""
@@ -77,7 +73,8 @@ def test_sharded_train_step_matches_single_device():
         from repro.configs import get_reduced
         from repro.distributed.partition import (batch_specs, to_shardings,
                                                  train_state_specs)
-        from repro.distributed.sharding import make_rules, use_rules
+        from repro.distributed.sharding import (make_device_mesh, make_rules,
+                                                use_rules)
         from repro.train import TrainSettings, init_state
         from repro.train.step import make_train_step
 
@@ -90,8 +87,7 @@ def test_sharded_train_step_matches_single_device():
         state = init_state(key, cfg, s)
         ref, mref = jax.jit(make_train_step(cfg, s))(state, batch)
 
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = make_device_mesh((2, 4), ("data", "model"))
         rules = make_rules(mesh, fsdp=True)
         with mesh, use_rules(rules):
             st_specs = train_state_specs(cfg, cfg.optimizer, state)
@@ -116,7 +112,6 @@ def test_sharded_train_step_matches_single_device():
     assert res["err"] < 5e-3
 
 
-@needs_axis_type
 def test_compressed_psum_int8_error_feedback():
     """int8 EF psum over a 'pod' axis: bounded per-step error, and the
     error-feedback residual keeps the *running average* unbiased."""
@@ -124,14 +119,14 @@ def test_compressed_psum_int8_error_feedback():
         import jax, jax.numpy as jnp, numpy as np, json
         from functools import partial
         from jax.sharding import PartitionSpec as P
+        from repro.distributed.sharding import make_device_mesh, shard_map_compat
         from repro.optim import compression
 
-        mesh = jax.make_mesh((8,), ("pod",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = make_device_mesh((8,), ("pod",))
         grads = {"w": jnp.asarray(
             np.random.default_rng(0).normal(0, 1, (8, 64, 32)).astype(np.float32))}
 
-        @partial(jax.shard_map, mesh=mesh,
+        @partial(shard_map_compat, mesh=mesh,
                  in_specs=(P("pod"), P("pod")), out_specs=(P("pod"), P("pod")))
         def step(g, err):
             gl = {"w": g[0]}

@@ -1,0 +1,116 @@
+"""readout_pred edge cases.
+
+The helper is the single source of truth for predictions across
+snn_apply_int, the streaming engine's gate/harvest paths and the fused
+kernel's in-kernel mirror — previously its corner semantics were only
+exercised indirectly through the engine e2e test.  Contracts:
+
+  * ``count`` with all-zero registers degenerates to argmax-of-zeros
+    (class 0) — callers that must not act on it guard with their own
+    has-spike check (the engine's gate does exactly that);
+  * ``first_spike`` ties break lowest-index-wins, matching jnp.argmax and
+    the kernel's iota+min implementation;
+  * any spiked class outranks every membrane-only class (the two score
+    tiers), which is the count/first-spike tiebreak the active-pruning
+    config relies on (a pruned neuron fires at most once, so counts alone
+    cannot rank spiked classes — arrival order must).
+"""
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.snn_mnist import SNN_CONFIG_PRUNED
+from repro.core import prng, snn
+from repro.core.snn import readout_pred
+
+T = 20
+SENT = T  # first-spike sentinel: "never spiked"
+
+
+def _first(*ts):
+    return jnp.asarray([list(ts)], jnp.int32)
+
+
+def test_count_all_zero_registers_is_class_zero():
+    counts = jnp.zeros((3, 5), jnp.int32)
+    first = jnp.full((3, 5), SENT, jnp.int32)
+    v = jnp.asarray(np.arange(15).reshape(3, 5), jnp.int32)
+    pred = readout_pred(counts, first, v, "count", T)
+    assert (np.asarray(pred) == 0).all()
+
+
+def test_first_spike_all_zero_counts_falls_back_to_membrane():
+    counts = jnp.zeros((1, 4), jnp.int32)
+    first = jnp.full((1, 4), SENT, jnp.int32)
+    v = jnp.asarray([[5, -3, 9, 2]], jnp.int32)
+    assert int(readout_pred(counts, first, v, "first_spike", T)[0]) == 2
+
+
+def test_first_spike_membrane_tiebreak_lowest_index():
+    counts = jnp.zeros((1, 4), jnp.int32)
+    first = jnp.full((1, 4), SENT, jnp.int32)
+    v = jnp.asarray([[5, 9, 9, 2]], jnp.int32)
+    assert int(readout_pred(counts, first, v, "first_spike", T)[0]) == 1
+
+
+def test_first_spike_tie_lowest_index_wins():
+    counts = jnp.asarray([[0, 1, 1, 0]], jnp.int32)
+    first = _first(SENT, 3, 3, SENT)
+    v = jnp.asarray([[0, 0, 10_000, 0]], jnp.int32)  # membrane must not rank
+    assert int(readout_pred(counts, first, v, "first_spike", T)[0]) == 1
+
+
+def test_first_spike_earliest_beats_higher_count():
+    counts = jnp.asarray([[0, 1, 7, 0]], jnp.int32)
+    first = _first(SENT, 2, 9, SENT)
+    v = jnp.zeros((1, 4), jnp.int32)
+    assert int(readout_pred(counts, first, v, "first_spike", T)[0]) == 1
+
+
+def test_spiked_class_outranks_any_membrane():
+    """Two score tiers: a last-step spike beats a near-threshold silent
+    class, for any realistic window length."""
+    counts = jnp.asarray([[0, 0, 0, 1]], jnp.int32)
+    first = _first(SENT, SENT, SENT, T - 1)
+    v = jnp.asarray([[(1 << 24) - 2, 127, 0, -5]], jnp.int32)
+    assert int(readout_pred(counts, first, v, "first_spike", T)[0]) == 3
+
+
+def test_count_vs_first_spike_tiebreak_on_pruned_config():
+    """Active pruning clamps every register to {0, 1}: the count readout
+    degenerates to lowest-index-of-the-spiked-set while the pruned
+    config's first_spike readout ranks by arrival — the exact divergence
+    the paper's §III-D readout swap exists for."""
+    counts = jnp.asarray([[1, 1, 1, 0]], jnp.int32)
+    first = _first(5, 2, 9, SENT)
+    v = jnp.zeros((1, 4), jnp.int32)
+    assert int(readout_pred(counts, first, v, "count", T)[0]) == 0
+    assert SNN_CONFIG_PRUNED.readout == "first_spike"
+    assert int(readout_pred(counts, first, v,
+                            SNN_CONFIG_PRUNED.readout, T)[0]) == 1
+
+
+def test_pruned_engine_counts_are_saturated(rng):
+    """End-to-end guard for the tiebreak above: under the pruned config
+    every neuron fires at most once, so the registers really are 0/1 and
+    first-spike times are the only ranking signal among spiked classes."""
+    cfg = dataclasses.replace(SNN_CONFIG_PRUNED, layer_sizes=(16, 6),
+                              num_steps=12)
+    params_q = {"layers": [{
+        "w_q": jnp.asarray(rng.integers(-64, 256, (16, 6)), jnp.int16),
+        "scale": jnp.float32(1.0)}]}
+    px = jnp.asarray(rng.integers(64, 256, (4, 16), dtype=np.uint8))
+    out = snn.snn_apply_int(params_q, px, prng.seed_state(9, px.shape),
+                            cfg, backend="reference")
+    counts = np.asarray(out["spike_counts"])
+    first = np.asarray(out["first_spike_t"])
+    assert counts.max() <= 1 and counts.max() == 1
+    np.testing.assert_array_equal(
+        np.asarray(out["pred"]),
+        np.asarray(readout_pred(out["spike_counts"], out["first_spike_t"],
+                                out["v_final"], cfg.readout,
+                                cfg.num_steps)))
+    # spiked ⇔ a real first-spike time; silent ⇔ sentinel
+    assert ((first < cfg.num_steps) == (counts == 1)).all()
