@@ -25,10 +25,36 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.snn_mnist import SNN_CONFIG, SNN_CONFIG_DEEP
+from repro.configs.snn_mnist import (SNN_CONFIG, SNN_CONFIG_DEEP,
+                                     SNN_CONFIG_WIDE)
 from repro.core import prng, snn
+from repro.kernels import fused_snn, ops
 
 from .common import emit, save_json, time_call
+
+
+def _resident_weight_bytes(weights):
+    """Per-program resident weight bytes, packed vs the pre-packing layout.
+
+    MEASURED, not assumed: the packed figure is the actual ``nbytes`` of
+    the plane arrays ``kernels.fused_snn.pack_weights`` emits for the
+    128-padded shapes the kernel allocates — if packing ever regresses to
+    a wider dtype or an extra plane, this number (and the CI gate on it)
+    moves.  Legacy is the pre-PR layout over the same padded shapes:
+    int16 storage plus the whole-matrix int32 cast the first kernel
+    revision held live for the entire launch (6 B/weight).
+    """
+    pad = fused_snn._pad128
+    packed_bytes = legacy_bytes = 0
+    for w in weights:
+        wp = jnp.pad(w, [(0, pad(w.shape[0]) - w.shape[0]),
+                         (0, pad(w.shape[1]) - w.shape[1])])
+        packed = fused_snn.pack_weights(wp)
+        packed_bytes += packed.size * packed.dtype.itemsize
+        legacy_bytes += wp.size * (2 + 4)       # int16 + resident i32 cast
+    return {"packed_int8": int(packed_bytes),
+            "legacy_int16_cast": int(legacy_bytes),
+            "reduction": round(legacy_bytes / packed_bytes, 3)}
 
 
 def _sizes():
@@ -93,17 +119,74 @@ def run():
     assert fused_hop == 0, "fused path must not materialise spikes"
     assert staged_hop >= T * batch * n_in, "hop accounting inconsistent"
 
+    # --- resident weight bytes: int8-packed planes vs int16+cast ---------
+    resident = _resident_weight_bytes((w,))
+    emit("fused.resident_weight_bytes", None,
+         f"packed_int8={resident['packed_int8']} "
+         f"legacy_int16_cast={resident['legacy_int16_cast']} "
+         f"reduction={resident['reduction']:.1f}x")
+    assert resident["legacy_int16_cast"] >= 2 * resident["packed_int8"], \
+        "packing must at least halve resident weight bytes"
+
+    sparse = run_sparse(params_q, cfg, batch)
+
     save_json({
         "sizes": {k: v for k, v in s.items() if k != "repeats"},
         "us_per_image": {k: v / batch for k, v in times.items()},
         "bit_identical": bool(exact),
         "hop_bytes": {"staged": staged_hop, "fused": fused_hop},
         "hop_reduction_vs_pixels": ratio_vs_pixels,
+        "resident_weight_bytes": resident,
+        "sparse": sparse,
         "backend_platform": jax.default_backend(),
     }, "bench", "BENCH_fused.json")
 
     run_multilayer()
+    run_streamed()
     return times
+
+
+def run_sparse(params_q, cfg, batch):
+    """Executed-adds vs spike density under event-driven tile skipping.
+
+    The kernel's energy counter counts ``input spikes × enabled outputs``
+    — on the sparse path a skipped tile pair carries zero of either, so
+    the counter measures exactly the adds the event-driven datapath
+    executes, and must scale linearly with the Poisson density px/256
+    (the analytic (1 − sparsity) law the paper's Table II argues from).
+    """
+    n_in, n_out = cfg.layer_sizes[0], cfg.layer_sizes[-1]
+    T = cfg.num_steps
+    weights = tuple(l["w_q"] for l in params_q["layers"])
+    st = prng.seed_state(29, (batch, n_in))
+    levels = [0, 33, 128, 255]
+    dense_cap = T * batch * n_in * n_out        # every line spiking
+    adds, fracs = [], []
+    for px_level in levels:
+        px = jnp.full((batch, n_in), px_level, jnp.uint8)
+        out = ops.fused_snn_stack_op(
+            px, st, weights, num_steps=T,
+            decay_shift=cfg.lif.decay_shift,
+            v_threshold=cfg.lif.v_threshold, sparse_skip=True)
+        total = int(np.asarray(out["active_adds"]).sum())
+        adds.append(total)
+        fracs.append(total / dense_cap)
+        emit(f"fused.sparse_adds@{px_level}", None,
+             f"density={px_level / 256:.3f} executed_adds={total} "
+             f"fraction_of_dense={total / dense_cap:.3f}")
+    # executed adds must track density: fraction ≈ px/256 per level
+    scaling_ok = all(abs(f - lv / 256) < 0.05
+                     for f, lv in zip(fracs, levels))
+    emit("fused.sparse_scaling", None,
+         f"adds_track_density={scaling_ok} "
+         f"(fractions={[round(f, 3) for f in fracs]})")
+    assert adds[0] == 0, "zero-density input must execute zero adds"
+    assert scaling_ok, "executed adds do not scale with spike density"
+    return {"px_levels": levels,
+            "densities": [lv / 256 for lv in levels],
+            "executed_adds": adds,
+            "fraction_of_dense": fracs,
+            "scaling_ok": bool(scaling_ok)}
 
 
 def run_multilayer():
@@ -182,6 +265,13 @@ def run_multilayer():
     assert sum(fused_hops) == 0, "fused path must not materialise spikes"
     assert len(staged_hops) >= 3, "need >=2 hidden layers for this bench"
 
+    resident = _resident_weight_bytes(
+        tuple(l["w_q"] for l in params_q["layers"]))
+    emit("fused_ml.resident_weight_bytes", None,
+         f"packed_int8={resident['packed_int8']} "
+         f"legacy_int16_cast={resident['legacy_int16_cast']} "
+         f"reduction={resident['reduction']:.1f}x")
+
     save_json({
         "sizes": {"batch": batch, "T": T, "layer_sizes": list(sizes)},
         "us_per_image": {k: v / batch for k, v in times.items()},
@@ -190,8 +280,101 @@ def run_multilayer():
                       "staged_total": sum(staged_hops),
                       "fused_total": sum(fused_hops)},
         "fused_single_launch": bool(fused_is_one_launch),
+        "resident_weight_bytes": resident,
         "backend_platform": jax.default_backend(),
     }, "bench", "BENCH_fused_multilayer.json")
+    return times
+
+
+def _sizes_streamed():
+    if os.environ.get("REPRO_BENCH_TINY"):
+        return dict(batch=8, T=2, repeats=1)
+    return dict(batch=16, T=8, repeats=2)
+
+
+def run_streamed():
+    """VMEM-oversized stack through the ``fused_streamed`` backend.
+
+    ``SNN_CONFIG_WIDE``'s packed resident footprint (~13.5 MiB padded)
+    exceeds the 12 MiB residency budget, so an explicit ``fused`` request
+    must raise — and ``fused_streamed`` must run the whole stack in ONE
+    Pallas launch anyway (packed weights double-buffered out of HBM),
+    bit-identical to the reference scan.  Interpret mode on CPU; the
+    wall-clock win is a TPU measurement (ROADMAP's on-TPU item).
+    """
+    s = _sizes_streamed()
+    batch, T = s["batch"], s["T"]
+    cfg = dataclasses.replace(SNN_CONFIG_WIDE, num_steps=T)
+    sizes = cfg.layer_sizes
+    rng = np.random.default_rng(5)
+    params_q = {"layers": [
+        {"w_q": jnp.asarray(rng.integers(-256, 256, (a, b)), jnp.int16),
+         "scale": jnp.float32(1.0)}
+        for a, b in zip(sizes[:-1], sizes[1:])]}
+    px = jnp.asarray(rng.integers(0, 256, (batch, sizes[0]),
+                                  dtype=np.uint8))
+    st = prng.seed_state(31, px.shape)
+
+    resident_mib = fused_snn.stack_vmem_bytes(sizes, 8, T) / 2**20
+    streamed_mib = fused_snn.stack_vmem_bytes(sizes, 8, T,
+                                              streamed=True) / 2**20
+    budget_mib = fused_snn.VMEM_BUDGET_BYTES / 2**20
+    emit("fused_streamed.vmem", None,
+         f"resident={resident_mib:.1f}MiB streamed={streamed_mib:.1f}MiB "
+         f"budget={budget_mib:.0f}MiB")
+    assert resident_mib > budget_mib, \
+        "streamed bench stack must exceed the residency budget"
+    assert streamed_mib <= budget_mib, \
+        "streamed working set must fit the budget"
+
+    fused_raises = False
+    try:
+        snn.snn_apply_int(params_q, px, st, cfg, backend="fused")
+    except ValueError:
+        fused_raises = True
+    emit("fused_streamed.fused_raises", None,
+         f"explicit_fused_raises={fused_raises}")
+    assert fused_raises, "oversized stack must reject backend='fused'"
+
+    outs, times = {}, {}
+    for backend in ("reference", "fused_streamed"):
+        fn = jax.jit(lambda p, a, b, bk=backend:
+                     snn.snn_apply_int(p, a, b, cfg, backend=bk))
+        times[backend] = time_call(
+            lambda p, a, b: fn(p, a, b)["spike_counts"], params_q, px, st,
+            repeats=s["repeats"])
+        out = fn(params_q, px, st)
+        outs[backend] = (np.asarray(out["spike_counts"]),
+                         np.asarray(out["active_adds"]))
+        emit(f"fused_streamed.{backend}", times[backend] / batch,
+             f"layer_sizes={sizes} batch={batch} T={T}"
+             + ("" if jax.default_backend() == "tpu"
+                else " (Pallas interpret on CPU)"
+                if backend != "reference" else ""))
+    exact = all(np.array_equal(a, b) for a, b in
+                zip(outs["reference"], outs["fused_streamed"]))
+    emit("fused_streamed.bit_identical", None,
+         f"counts+adds reference==fused_streamed={exact}")
+    assert exact, "streamed backend disagrees with reference"
+
+    jaxpr = str(jax.make_jaxpr(
+        lambda p, a, b: snn.snn_apply_int(p, a, b, cfg,
+                                          backend="fused_streamed")
+        ["spike_counts"])(params_q, px, st))
+    n_launches = jaxpr.count("pallas_call")
+    emit("fused_streamed.launches", None, f"pallas_calls={n_launches}")
+    assert n_launches == 1, "streamed stack must stay a single launch"
+
+    save_json({
+        "sizes": {"batch": batch, "T": T, "layer_sizes": list(sizes)},
+        "us_per_image": {k: v / batch for k, v in times.items()},
+        "bit_identical": bool(exact),
+        "single_launch": n_launches == 1,
+        "explicit_fused_raises": bool(fused_raises),
+        "vmem_mib": {"resident": resident_mib, "streamed": streamed_mib,
+                     "budget": budget_mib},
+        "backend_platform": jax.default_backend(),
+    }, "bench", "BENCH_fused_streamed.json")
     return times
 
 

@@ -1,0 +1,126 @@
+"""Diff the COMMITTED root-level BENCH_*.json artifacts against a fresh
+benchmark run.
+
+``benchmarks/run.py`` mirrors every fresh ``results/bench/BENCH_*.json``
+to the repo root so the perf trajectory is committed and reviewable
+across PRs (results/ itself is gitignored).  This checker keeps those
+tracked copies honest.  Crucially, the baseline is read from **git HEAD**
+(``git show HEAD:<name>``), NOT from the working-tree root file — the
+bench run that just executed has already overwritten the working-tree
+copy with the fresh artifact, so comparing the file on disk would be a
+tautology.  For every requested artifact the checker asserts that
+
+  * a committed copy exists at HEAD (the trajectory is actually
+    recorded),
+  * the fresh counterpart from this run exists in results/bench/, and
+  * every CONTRACT field present in the committed copy matches the fresh
+    run bit-for-bit.
+
+Contract fields are the run-invariant claims — bit-identity, zero fused
+hop bytes, the int8 resident-byte reduction, adds-vs-density scaling,
+single-launch streaming, device counts — never wall-clock timings, which
+legitimately drift between runners.  A contract mismatch means a kernel
+or accounting regression (or a stale committed artifact: re-run the
+suite and commit the refreshed root copies).
+
+  PYTHONPATH=src python -m benchmarks.check_tracked \\
+      BENCH_fused.json BENCH_fused_multilayer.json
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BENCH_DIR = os.path.join(REPO_ROOT, "results", "bench")
+
+# Dotted paths compared when present in the tracked copy.
+CONTRACT_FIELDS = [
+    "bit_identical",
+    "hop_bytes.fused",
+    "hop_bytes.fused_total",
+    "fused_single_launch",
+    "resident_weight_bytes.reduction",
+    "sparse.scaling_ok",
+    "single_launch",
+    "explicit_fused_raises",
+    "devices",
+]
+
+
+def _get(obj, dotted):
+    for part in dotted.split("."):
+        if not isinstance(obj, dict) or part not in obj:
+            return None, False
+        obj = obj[part]
+    return obj, True
+
+
+def _committed_json(name: str):
+    """The artifact as committed at git HEAD, or None with a reason.
+
+    The working-tree root copy is NOT a usable baseline here: the bench
+    run mirrors its fresh output over it before this checker runs.
+    """
+    try:
+        out = subprocess.run(
+            ["git", "show", f"HEAD:{name}"], cwd=REPO_ROOT,
+            capture_output=True, text=True, timeout=60)
+    except (OSError, subprocess.TimeoutExpired) as e:
+        return None, f"git unavailable ({e})"
+    if out.returncode != 0:
+        return None, "not committed at HEAD — run the suite and commit " \
+                     "the mirrored root artifact"
+    try:
+        return json.loads(out.stdout), None
+    except json.JSONDecodeError as e:
+        return None, f"committed copy is not valid JSON ({e})"
+
+
+def check(names: list[str]) -> list[str]:
+    errors = []
+    for name in names:
+        tracked, why = _committed_json(name)
+        if tracked is None:
+            errors.append(f"{name}: {why}")
+            continue
+        fresh_p = os.path.join(BENCH_DIR, name)
+        if not os.path.exists(fresh_p):
+            errors.append(f"{name}: no fresh results/bench copy — the "
+                          f"producing suite did not run")
+            continue
+        with open(fresh_p) as f:
+            fresh = json.load(f)
+        for field in CONTRACT_FIELDS:
+            tv, present = _get(tracked, field)
+            if not present:
+                continue
+            fv, fresh_present = _get(fresh, field)
+            if not fresh_present:
+                errors.append(f"{name}: contract field {field!r} vanished "
+                              f"from the fresh run")
+            elif tv != fv:
+                errors.append(f"{name}: contract field {field!r} tracked="
+                              f"{tv!r} fresh={fv!r}")
+    return errors
+
+
+def main(argv=None) -> None:
+    names = (argv if argv is not None else sys.argv[1:])
+    if not names:
+        print("usage: python -m benchmarks.check_tracked BENCH_x.json ...")
+        sys.exit(2)
+    errors = check(list(names))
+    for e in errors:
+        print(f"TRACKED-ARTIFACT MISMATCH: {e}")
+    if errors:
+        sys.exit(1)
+    print(f"# {len(names)} tracked benchmark artifact(s) match the fresh "
+          f"run on all contract fields")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,6 +1,8 @@
 """Benchmark harness: one module per paper table/figure + the roofline
 report.  Prints ``name,us_per_call,derived`` CSV lines; artifacts land in
-results/bench/.
+results/bench/ AND — so the perf trajectory survives the gitignored
+results/ dir — every fresh ``BENCH_*.json`` is mirrored to the repo root,
+where it is committed and diffed by CI (benchmarks/check_tracked.py).
 
   PYTHONPATH=src python -m benchmarks.run            # everything
   PYTHONPATH=src python -m benchmarks.run --only fig5,roofline
@@ -10,7 +12,9 @@ results/bench/.
 from __future__ import annotations
 
 import argparse
+import glob
 import os
+import shutil
 import sys
 import time
 import traceback
@@ -28,6 +32,20 @@ SUITES = {
     "fused": ("bench_fused", "Fused vs staged encode→LIF (time + bytes)"),
     "roofline": ("roofline", "Roofline terms from the dry-run"),
 }
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BENCH_DIR = os.path.join(REPO_ROOT, "results", "bench")
+
+
+def _mirror_fresh_artifacts(since: float) -> list[str]:
+    """Copy BENCH_*.json files (re)written after ``since`` to the repo
+    root, where they are git-tracked — results/ itself is gitignored."""
+    copied = []
+    for p in sorted(glob.glob(os.path.join(BENCH_DIR, "BENCH_*.json"))):
+        if os.path.getmtime(p) >= since:
+            shutil.copy(p, os.path.join(REPO_ROOT, os.path.basename(p)))
+            copied.append(os.path.basename(p))
+    return copied
 
 
 def main(argv=None) -> None:
@@ -49,6 +67,10 @@ def main(argv=None) -> None:
         try:
             mod = __import__(f"benchmarks.{mod_name}", fromlist=["run"])
             mod.run()
+            copied = _mirror_fresh_artifacts(t0)
+            if copied:
+                print(f"# tracked artifact copies at repo root: "
+                      f"{', '.join(copied)}", flush=True)
             print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
         except Exception as e:  # noqa: BLE001
             failures.append((name, e))

@@ -103,3 +103,21 @@ SNN_CONFIG_DEEP = SNNConfig(
     active_pruning=False,
     backend="auto",
 )
+
+# Widened SNN_CONFIG_DEEP whose int8-packed resident footprint
+# (~13.5 MiB by kernels.fused_snn.stack_vmem_bytes for the padded
+# 896→2048→2048→128 stack — the packed weights alone are 12 MiB) exceeds
+# the fused kernel's VMEM residency budget: the stack that exercises the
+# ``fused_streamed`` backend — weights stay in HBM and are double-buffered
+# through VMEM slab scratch, still ONE launch per chunk.  ``auto`` on TPU
+# resolves it to fused_streamed; an explicit ``fused`` request raises.
+SNN_CONFIG_WIDE = SNNConfig(
+    layer_sizes=(784, 2048, 2048, 10),
+    num_steps=20,
+    lif=LIFConfig(decay_shift=4, v_threshold=128, v_rest=0),
+    weight_bits=8,
+    qat=True,
+    readout="count",
+    active_pruning=False,
+    backend="auto",
+)

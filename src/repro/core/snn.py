@@ -59,18 +59,29 @@ class SNNConfig:
     dot_impl: str = "int32"                    # int32 | f32 (bit-exact fast path)
     fuse_encoder: bool = False                 # PRNG+encode inside the LIF scan
     # Integer-engine backend: which realisation of the RTL datapath runs.
-    #   fused     — one resumable Pallas launch for the whole encode→LIF
-    #               window across the full layer stack; neither the input
-    #               nor any inter-layer spike tensor ever touches HBM (§V-B)
+    #   fused          — one resumable Pallas launch for the whole
+    #               encode→LIF window across the full layer stack, weights
+    #               resident as int8-packed planes; neither the input nor
+    #               any inter-layer spike tensor ever touches HBM (§V-B)
+    #   fused_streamed — the same single launch for stacks OVER the VMEM
+    #               residency budget: packed weights stay in HBM and a
+    #               double-buffered DMA pipeline slabs them through a
+    #               2-slot VMEM scratch, overlapped with the step loop
     #   staged    — Pallas encoder kernel + per-layer Pallas LIF kernel
     #               (every hop's spike train round-trips between launches)
     #   reference — pure-jnp scans (core.encoding / core.lif); the bit-exact
     #               oracle and the fast path on hosts without a TPU
-    #   auto      — fused on TPU for any stack that fits the VMEM residency
-    #               budget (else staged), reference elsewhere (Pallas
+    #   auto      — on TPU: fused for any stack that fits the residency
+    #               budget, else fused_streamed when the streaming scratch
+    #               fits, else staged; reference elsewhere (Pallas
     #               interpret mode is a correctness tool, not a fast CPU
     #               path)
     backend: str = "auto"
+    # Event-driven tile skipping inside the fused kernels: zero-spike
+    # K-tiles and fully-pruned output tiles skip the MXU pass entirely
+    # (bit-identical either way — skipped tiles contribute exactly zero).
+    # None defers to the REPRO_SPARSE_SKIP env default (on).
+    sparse_skip: bool | None = None
     emit_trace: bool = True                    # False: no v/spike-train outputs
                                                # (prediction-only serving)
     # Float-threshold used during training; the int path scales it (below).
@@ -151,21 +162,25 @@ def quantize_params(params: dict, cfg: SNNConfig):
 def fused_unsupported_reason(cfg: SNNConfig, n_layers: int,
                              layer_sizes: tuple[int, ...] | None = None,
                              trace_steps: int | None = None,
-                             local_batch: int | None = None) -> str | None:
+                             local_batch: int | None = None,
+                             streamed: bool = False) -> str | None:
     """Why the fused megakernel cannot run this configuration (None = ok).
 
     The kernel handles arbitrary layer stacks, but it keeps every weight
-    matrix and per-layer state resident on-chip for the whole launch — a
-    stack whose footprint exceeds the VMEM budget cannot be fused and must
-    run staged (per-layer launches).  ``trace_steps`` is the per-launch
-    membrane-trace length: the full window for one-shot execution
-    (default), or ``chunk_steps`` for chunked/streaming callers, whose
-    launches only ever allocate a chunk of trace.  ``local_batch`` is the
-    per-device batch tile: VMEM is a per-device resource, so a sharded
-    caller (serve.ShardedSNNStreamEngine) validates against the launch one
-    device actually executes — ``kernels.fused_snn.block_b_for`` maps the
-    local tile to the batch block that launch allocates (never derived
-    from the global lane count).
+    matrix (int8-packed, 2 bytes/weight) and per-layer state resident
+    on-chip for the whole launch — a stack whose footprint exceeds the
+    VMEM budget cannot run resident-fused.  With ``streamed=True`` the
+    check is for the ``fused_streamed`` realisation instead: weights live
+    in HBM and only the 2-slot DMA slab scratch plus the per-layer state
+    must fit, so much wider/deeper stacks pass.  ``trace_steps`` is the
+    per-launch membrane-trace length: the full window for one-shot
+    execution (default), or ``chunk_steps`` for chunked/streaming callers,
+    whose launches only ever allocate a chunk of trace.  ``local_batch``
+    is the per-device batch tile: VMEM is a per-device resource, so a
+    sharded caller (serve.ShardedSNNStreamEngine) validates against the
+    launch one device actually executes — ``kernels.fused_snn.block_b_for``
+    maps the local tile to the batch block that launch allocates (never
+    derived from the global lane count).
     """
     from ..kernels import fused_snn
     if n_layers < 1:
@@ -177,9 +192,12 @@ def fused_unsupported_reason(cfg: SNNConfig, n_layers: int,
         return None                      # shapes unknown — assume it fits
     need = fused_snn.stack_vmem_bytes(
         sizes, fused_snn.block_b_for(local_batch),
-        cfg.num_steps if trace_steps is None else trace_steps)
+        cfg.num_steps if trace_steps is None else trace_steps,
+        streamed=streamed)
     if need > fused_snn.VMEM_BUDGET_BYTES:
-        return (f"resident stack footprint ~{need / 2**20:.1f} MiB for "
+        kind = "streamed working set" if streamed else \
+            "resident stack footprint"
+        return (f"{kind} ~{need / 2**20:.1f} MiB for "
                 f"layer_sizes={tuple(sizes)} exceeds the "
                 f"{fused_snn.VMEM_BUDGET_BYTES / 2**20:.0f} MiB VMEM "
                 f"budget")
@@ -193,30 +211,52 @@ def resolve_backend(cfg: SNNConfig, backend: str | None = None,
                     local_batch: int | None = None) -> str:
     """Pick the integer-engine backend actually run on this host.
 
-    ``auto`` resolves to the fused megakernel on TPU — for ANY stack depth
-    whose resident footprint fits VMEM (oversized stacks fall back to the
-    staged per-layer kernels) — and to the pure-jnp reference scans
-    elsewhere (Pallas interpret mode is far slower than XLA on CPU — it is
-    a correctness tool, not a serving path).  Explicitly requesting
-    ``fused`` for a configuration the kernel cannot run raises instead of
-    silently degrading.  ``local_batch`` scopes the VMEM feasibility check
-    to one device's batch tile (see :func:`fused_unsupported_reason`) —
-    data-parallel sharding never *shrinks* what fits, but the check must
-    not be run against the global lane count either.
+    ``auto`` resolves on TPU through the chain fused → fused_streamed →
+    staged: the resident megakernel for any stack whose int8-packed
+    footprint fits VMEM, the weight-streaming megakernel for oversized
+    stacks whose DMA working set still fits, and the staged per-layer
+    kernels only past that; elsewhere it resolves to the pure-jnp
+    reference scans (Pallas interpret mode is far slower than XLA on CPU —
+    it is a correctness tool, not a serving path).  Explicitly requesting
+    ``fused`` (or ``fused_streamed``) for a configuration that realisation
+    cannot run raises instead of silently degrading.  ``local_batch``
+    scopes the VMEM feasibility check to one device's batch tile (see
+    :func:`fused_unsupported_reason`) — data-parallel sharding never
+    *shrinks* what fits, but the check must not be run against the global
+    lane count either.
     """
     b = backend if backend is not None else cfg.backend
     on_tpu = jax.default_backend() == "tpu"
     reason = fused_unsupported_reason(cfg, n_layers, layer_sizes,
                                       trace_steps, local_batch)
+
+    def streamed_reason():
+        return fused_unsupported_reason(cfg, n_layers, layer_sizes,
+                                        trace_steps, local_batch,
+                                        streamed=True)
+
     if b == "auto":
-        b = ("fused" if reason is None else "staged") if on_tpu \
-            else "reference"
+        if not on_tpu:
+            b = "reference"
+        elif reason is None:
+            b = "fused"
+        elif streamed_reason() is None:
+            b = "fused_streamed"
+        else:
+            b = "staged"
     if b == "fused" and reason is not None:
         raise ValueError(
             f"backend='fused' was explicitly requested but the fused "
             f"megakernel does not support this configuration: {reason} — "
-            f"use backend='staged'")
-    if b not in ("fused", "staged", "reference"):
+            f"use backend='fused_streamed' or 'staged'")
+    if b == "fused_streamed":
+        sreason = streamed_reason()
+        if sreason is not None:
+            raise ValueError(
+                f"backend='fused_streamed' was explicitly requested but "
+                f"even the weight-streaming megakernel cannot run this "
+                f"configuration: {sreason} — use backend='staged'")
+    if b not in ("fused", "fused_streamed", "staged", "reference"):
         raise ValueError(f"unknown SNN backend {b!r}")
     return b
 
@@ -266,8 +306,9 @@ def snn_apply_int(params_q: dict, pixels_u8: jax.Array, prng_state: jax.Array,
     """
     b = resolve_backend(cfg, backend, len(params_q["layers"]),
                         layer_sizes=_param_sizes(params_q))
-    if b == "fused":
-        res = _apply_int_fused(params_q, pixels_u8, prng_state, cfg)
+    if b in ("fused", "fused_streamed"):
+        res = _apply_int_fused(params_q, pixels_u8, prng_state, cfg,
+                               streamed=(b == "fused_streamed"))
     elif b == "staged":
         res = _apply_int_staged(params_q, pixels_u8, prng_state, cfg)
     else:
@@ -285,16 +326,21 @@ def _param_sizes(params_q: dict) -> tuple[int, ...]:
                  + [l["w_q"].shape[1] for l in params_q["layers"]])
 
 
-def _apply_int_fused(params_q, pixels_u8, prng_state, cfg: SNNConfig):
-    """Fused Pallas megakernel: the whole window, all layers, one launch."""
+def _apply_int_fused(params_q, pixels_u8, prng_state, cfg: SNNConfig, *,
+                     streamed: bool = False):
+    """Fused Pallas megakernel: the whole window, all layers, one launch
+    (weights resident, or HBM-streamed when ``streamed``)."""
     from ..kernels import ops
+    ops.validate_weight_codes(
+        tuple(layer["w_q"] for layer in params_q["layers"]))
     k = ops.fused_snn_stack_op(
         pixels_u8, prng_state,
         tuple(layer["w_q"] for layer in params_q["layers"]),
         num_steps=cfg.num_steps, decay_shift=cfg.lif.decay_shift,
         v_threshold=cfg.lif.v_threshold, v_rest=cfg.lif.v_rest,
         v_min=cfg.lif.v_min, v_max=cfg.lif.v_max,
-        active_pruning=cfg.active_pruning)
+        active_pruning=cfg.active_pruning,
+        sparse_skip=cfg.sparse_skip, streamed=streamed)
     return {
         "spike_counts": k["spike_counts"],
         "v_trace": k["v_trace"],
@@ -512,33 +558,37 @@ def snn_window_chunk(params_q: dict, pixels_u8: jax.Array,
                      chunk_steps: int, backend: str | None = None):
     """Advance the window by ``chunk_steps`` steps with carried state.
 
-    Dispatches to the resumable fused megakernel or the pure-jnp reference
-    scan (both bit-identical; the staged kernels cannot resume mid-window —
-    requesting them explicitly raises, and an ``auto`` resolution that
-    lands on staged — a VMEM-oversized stack on TPU — falls back to the
-    chunk-capable reference scan).  Returns ``(new_state, chunk)`` where
-    ``chunk`` holds the per-step ``v_trace`` (chunk, B, n_out) and
+    Dispatches to the resumable fused megakernel (resident or
+    weight-streamed) or the pure-jnp reference scan (all bit-identical;
+    the staged kernels cannot resume mid-window — requesting them
+    explicitly raises, and an ``auto`` resolution that lands on staged —
+    a stack too large even for weight streaming on TPU — falls back to
+    the chunk-capable reference scan).  Returns ``(new_state, chunk)``
+    where ``chunk`` holds the per-step ``v_trace`` (chunk, B, n_out) and
     ``active_adds`` (chunk, B) for this segment.
     """
     weights = tuple(layer["w_q"] for layer in params_q["layers"])
     requested = backend if backend is not None else cfg.backend
     if requested == "staged":
-        raise ValueError("chunked window execution supports the 'fused' "
-                         "and 'reference' backends only (the staged "
-                         "kernels cannot resume mid-window)")
+        raise ValueError("chunked window execution supports the 'fused', "
+                         "'fused_streamed' and 'reference' backends only "
+                         "(the staged kernels cannot resume mid-window)")
     b = resolve_backend(cfg, backend, len(weights),
                         layer_sizes=_param_sizes(params_q),
                         trace_steps=chunk_steps)
     if b == "staged":                      # auto picked it; we can't run it
         b = "reference"
-    if b == "fused":
+    if b in ("fused", "fused_streamed"):
         from ..kernels import ops
+        ops.validate_weight_codes(weights)
         k = ops.fused_snn_stack_op(
             pixels_u8, state.rng, weights, num_steps=cfg.num_steps,
             chunk_steps=chunk_steps, decay_shift=cfg.lif.decay_shift,
             v_threshold=cfg.lif.v_threshold, v_rest=cfg.lif.v_rest,
             v_min=cfg.lif.v_min, v_max=cfg.lif.v_max,
             active_pruning=cfg.active_pruning,
+            sparse_skip=cfg.sparse_skip,
+            streamed=(b == "fused_streamed"),
             init={"v": state.v, "en": state.en, "counts": state.counts,
                   "first": state.first, "steps": state.steps})
         new_state = SNNWindowState(

@@ -7,20 +7,37 @@ property on TPU: the full ``(T, B, N)`` spike tensor round-trips through
 HBM between every pair of launches — and for multi-layer stacks the
 inter-layer spike traffic dominates (Bouvier et al. 2020; Abderrahmane et
 al. 2019).  This kernel restores the RTL's event-stream locality for an
-**arbitrary layer stack**:
+**arbitrary layer stack**, and makes the paper's two *sparsity* mechanisms
+— Poisson spike sparsity and active pruning — real skipped compute:
 
   * pixels and the per-pixel xorshift32 PRNG lanes are loaded into VMEM
     once and stay there for the whole chunk (the free-running LFSR bank of
     Fig. 2);
-  * every layer's int16 weight matrix is resident across the chunk (the
-    BRAM weight banks of Fig. 1) — the grid tiles the batch only, so each
-    program owns the full stack;
+  * every layer's weight matrix is resident as the paper's native 8-bit
+    fixed-point codes: the 9-bit signed weight codes are **packed into two
+    int8 planes** (``hi = w >> 1``, ``lo = w & 1``; see
+    :func:`pack_weights`) and widened to int32 only per 128×128 tile, per
+    use — 2 bytes/weight resident instead of the 6 (int16 storage + a
+    whole-matrix int32 cast) the first revision kept live, which is what
+    lets ~3× deeper/wider stacks fit the VMEM residency budget;
+  * the per-layer Σ W·S contraction is tiled 128×128 and **event-driven**
+    (``sparse_skip=True``): a K-tile whose spike block is all-zero, or an
+    output tile whose enable block is fully pruned, is skipped via
+    ``lax.cond`` — no MXU pass, no widen — instead of merely having its
+    result masked.  Skipped tiles contribute exactly zero to the integer
+    accumulator and zero executed adds, so the sparse path is bit-identical
+    to the dense one (results AND energy counters; integer addition is
+    exact and associative);
   * each timestep generates the input spike vector in registers/VMEM and
-    walks it through a *static Python layer loop*: Σ W·S contraction (MXU
-    int path — "adds only" since one operand is binary), then the
-    shift-leak / fire / reset / pruning VPU stages; the fired vector feeds
+    walks it through a *static Python layer loop*; the fired vector feeds
     the next layer directly.  Inter-layer spikes are **never written to
     HBM**.
+  * ``streamed=True`` runs stacks that exceed the residency budget in one
+    launch anyway: the packed weight planes stay in HBM and a
+    **double-buffered DMA pipeline** copies one 128-row K-slab at a time
+    into a 2-slot VMEM scratch, with the next slab's copy overlapped
+    against the current slab's contraction (and the tile-skip predicates
+    still gating the compute).
   * the kernel is **resumable**: it accepts initial per-layer membrane and
     enable state, the PRNG lanes, the spike-count / first-spike registers
     and a per-lane step counter, and returns the advanced versions — so a
@@ -45,16 +62,18 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["fused_snn_stack_pallas", "stack_vmem_bytes", "block_b_for",
-           "VMEM_BUDGET_BYTES", "DEFAULT_BLOCK_B", "LANE"]
+__all__ = ["fused_snn_stack_pallas", "pack_weights", "stack_vmem_bytes",
+           "block_b_for", "VMEM_BUDGET_BYTES", "DEFAULT_BLOCK_B", "LANE"]
 
 DEFAULT_BLOCK_B = 8     # batch tile per program
 LANE = 128              # TPU lane width: every neuron axis pads to this
 
 # Conservative share of the ~16 MB/core VMEM the resident stack may claim
 # (weights + state + trace + temporaries).  ``core.snn.resolve_backend``
-# refuses/auto-falls-back when the estimate exceeds this.
+# streams the weights (``fused_streamed``) or falls back to staged when
+# the estimate exceeds this.
 VMEM_BUDGET_BYTES = 12 << 20
 
 
@@ -79,21 +98,51 @@ def block_b_for(batch: int | None) -> int:
     return min(DEFAULT_BLOCK_B, max(8, int(batch) + (-int(batch)) % 8))
 
 
+def pack_weights(w_q: jax.Array) -> jax.Array:
+    """Pack 9-bit signed weight codes into two int8 planes.
+
+    ``w = 2*hi + lo`` with ``hi = w >> 1`` (arithmetic) and ``lo = w & 1``
+    — exact for every code in the paper's signed 9-bit range [-256, 255]
+    (``core.snn.quantize_params``' output contract), which is what lets
+    the resident stack live at 2 bytes/weight instead of int16 + a
+    whole-matrix int32 cast.  Returns ``(2, n_in, n_out)`` int8 with
+    plane 0 = hi, plane 1 = lo; the kernel widens per 128×128 tile, per
+    use (:func:`_widen_tile`).
+    """
+    w32 = w_q.astype(jnp.int32)
+    hi = jnp.right_shift(w32, 1)
+    lo = w32 - 2 * hi                      # ∈ {0, 1}
+    return jnp.stack([hi.astype(jnp.int8), lo.astype(jnp.int8)])
+
+
+def _widen_tile(packed: jax.Array) -> jax.Array:
+    """(2, k, n) int8 planes → (k, n) int32 weight tile (w = 2*hi + lo)."""
+    return (packed[0].astype(jnp.int32) * 2 + packed[1].astype(jnp.int32))
+
+
 def stack_vmem_bytes(layer_sizes, block_b: int = DEFAULT_BLOCK_B,
-                     num_steps: int = 1) -> int:
+                     num_steps: int = 1, streamed: bool = False) -> int:
     """Estimate of the kernel's resident VMEM footprint for one program.
 
-    Counts the padded weight matrices (int16 storage + the int32 cast the
-    MXU path materialises), pixels + PRNG lanes, per-layer membrane/enable
-    state, the final-layer trace block and a working-set allowance for the
-    per-step spike/current temporaries.
+    Counts the padded int8-packed weight planes (2 bytes/weight resident;
+    replaced by the 2-slot DMA slab scratch when ``streamed``), pixels +
+    PRNG lanes, per-layer membrane/enable state, the final-layer trace
+    block, the single per-use widened int32 weight tile and a working-set
+    allowance for the per-step spike/current temporaries.  Kept in
+    lockstep with the launcher: same padding, same ``block_b_for`` block,
+    same scratch shapes as :func:`fused_snn_stack_pallas` allocates.
     """
     sizes = [_pad128(int(n)) for n in layer_sizes]
     bB = block_b
+    max_out = max(sizes[1:])
     total = sizes[0] * bB * (1 + 4)                      # pixels + PRNG
     for n_in, n_out in zip(sizes[:-1], sizes[1:]):
-        total += n_in * n_out * (2 + 4)                  # w int16 + i32 cast
+        if not streamed:
+            total += n_in * n_out * 2                    # packed int8 hi+lo
         total += bB * n_out * (4 + 1 + 4)                # v + en + current
+    if streamed:
+        total += 2 * 2 * LANE * max_out                  # 2-slot DMA slabs
+    total += LANE * max_out * 4                          # widened i32 tile
     total += num_steps * bB * sizes[-1] * 4              # v_trace block
     total += bB * max(sizes) * 8                         # spike temporaries
     return total
@@ -111,14 +160,59 @@ def _first_argmax(x: jax.Array, n_true: int) -> jax.Array:
     return jnp.min(jnp.where(x == m, col, n_true), axis=-1, keepdims=True)
 
 
+def _tiled_contraction(x, en, read_tile, n_out_pad: int, sparse_skip: bool,
+                       pre_k=None):
+    """Event-driven Σ W·S over 128×128 tiles (K-outer, N-inner).
+
+    ``x``: (bB, n_in_pad) bool spikes; ``en``: (bB, n_out_pad) bool enable;
+    ``read_tile(kt, nt)`` returns the packed (2, LANE, LANE) int8 weight
+    tile; ``pre_k(kt)`` (streamed mode) runs unconditionally at the top of
+    each K iteration — it advances the DMA double buffer, so the K-outer
+    order is what lets one 2-slot scratch cover arbitrarily wide layers.
+    With ``sparse_skip`` each (kt, nt) tile pair runs under a
+    ``lax.cond``: skipped when the K-tile carries no spike in any lane OR
+    the output tile is fully pruned across the block.  Both predicates
+    only ever skip tiles whose contribution is exactly zero (no spikes →
+    zero rows; fully pruned → the result is zeroed by the enable mask),
+    so dense and sparse execution are bit-identical — the skip saves the
+    widen + MXU pass, not correctness (integer addition is exact, so the
+    K-tiled accumulation order cannot change results either).
+    """
+    bB, n_in_pad = x.shape
+    nkt, nnt = n_in_pad // LANE, n_out_pad // LANE
+    zeros = jnp.zeros((bB, LANE), jnp.int32)
+    accs = [zeros] * nnt
+    for kt in range(nkt):
+        if pre_k is not None:
+            pre_k(kt)
+        x_t = x[:, kt * LANE:(kt + 1) * LANE]
+        for nt in range(nnt):
+            en_t = en[:, nt * LANE:(nt + 1) * LANE]
+
+            def tile(x_t=x_t, kt=kt, nt=nt):
+                w32 = _widen_tile(read_tile(kt, nt))
+                return jax.lax.dot_general(
+                    x_t.astype(jnp.int32), w32, (((1,), (0,)), ((), ())),
+                    preferred_element_type=jnp.int32)
+
+            if sparse_skip:
+                live = jnp.logical_and(jnp.any(x_t), jnp.any(en_t))
+                accs[nt] = accs[nt] + jax.lax.cond(live, tile,
+                                                   lambda: zeros)
+            else:
+                accs[nt] = accs[nt] + tile()
+    return accs[0] if nnt == 1 else jnp.concatenate(accs, axis=-1)
+
+
 def _stack_kernel(*refs, num_layers: int, chunk_steps: int, window_steps: int,
                   decay_shift: int, v_threshold: int, v_rest: int,
                   v_min: int, v_max: int, active_pruning: bool,
-                  gated: bool, patience: int, readout: str):
+                  gated: bool, patience: int, readout: str,
+                  sparse_skip: bool, streamed: bool):
     L = num_layers
     it = iter(refs)
     px_ref, st_ref = next(it), next(it)
-    w_refs = [next(it) for _ in range(L)]
+    w_refs = [next(it) for _ in range(L)]   # packed (2, K, N) int8 planes
     v_refs = [next(it) for _ in range(L)]
     en_refs = [next(it) for _ in range(L)]
     cnt_ref, first_ref, steps_ref = next(it), next(it), next(it)
@@ -133,125 +227,180 @@ def _stack_kernel(*refs, num_layers: int, chunk_steps: int, window_steps: int,
         act_out, gprev_out, gstreak_out = next(it), next(it), next(it)
 
     px = px_ref[...]                                   # (bB, n_in) uint8
-    ws = [w_refs[l][...].astype(jnp.int32) for l in range(L)]  # resident
+    n_pads = [w.shape[2] for w in w_refs]              # padded layer widths
     n_out = cnt_ref.shape[1]
+    # streamed mode: (layer, K-slab) pairs in execution order — the DMA
+    # pipeline walks them with a 2-slot double buffer each step.
+    slabs = [(l, kt) for l in range(L)
+             for kt in range(w_refs[l].shape[1] // LANE)]
 
-    carry0 = (
-        st_ref[...],
-        tuple(v_refs[l][...] for l in range(L)),
-        tuple(en_refs[l][...] != 0 for l in range(L)),
-        cnt_ref[...],
-        first_ref[...],
-        steps_ref[...],                                # (bB, 1) i32
-    )
-    if gated:
-        carry0 = carry0 + (act_ref[...] != 0, gprev_ref[...],
-                           gstreak_ref[...])
+    def run(w_scr=None, sems=None):
+        def slab_dma(i: int):
+            l, kt = slabs[i]
+            slot = i % 2
+            return pltpu.make_async_copy(
+                w_refs[l].at[:, pl.ds(kt * LANE, LANE), pl.ds(0, n_pads[l])],
+                w_scr.at[slot, :, :, pl.ds(0, n_pads[l])],
+                sems.at[slot])
 
-    def body(t, carry):
+        carry0 = (
+            st_ref[...],
+            tuple(v_refs[l][...] for l in range(L)),
+            tuple(en_refs[l][...] != 0 for l in range(L)),
+            cnt_ref[...],
+            first_ref[...],
+            steps_ref[...],                            # (bB, 1) i32
+        )
         if gated:
-            s, vs, ens, cnt, first, steps, act, gprev, gstreak = carry
+            carry0 = carry0 + (act_ref[...] != 0, gprev_ref[...],
+                               gstreak_ref[...])
+
+        def body(t, carry):
+            if gated:
+                s, vs, ens, cnt, first, steps, act, gprev, gstreak = carry
+            else:
+                s, vs, ens, cnt, first, steps = carry
+
+            # --- encoder: xorshift32 step + 8-bit comparator (Fig. 2) ----
+            s_new = s ^ (s << 13)
+            s_new = s_new ^ (s_new >> 17)
+            s_new = s_new ^ (s_new << 5)
+            r = (s_new >> 24).astype(jnp.uint8)
+            x = px > r                                 # (bB, n_in) on-chip
+            if streamed:
+                slab_dma(0).start()                    # warm the pipeline
+
+            # --- static layer loop: spikes stay in VMEM between layers ---
+            adds_t = jnp.zeros(steps.shape, jnp.int32)  # (bB, 1)
+            new_vs, new_ens = [], []
+            base = 0                                   # streamed slab cursor
+            for l in range(L):
+                en = ens[l]
+                if streamed:
+                    # Double-buffered HBM→VMEM slab pipeline: each K
+                    # iteration kicks off the NEXT slab's copy (into the
+                    # other scratch slot) before waiting on the current
+                    # one, so the copy of slab p+1 overlaps the
+                    # contraction against slab p.  ``base`` indexes this
+                    # layer's first entry in the step's (layer, K-slab)
+                    # order.
+                    def pre_k(kt, base=base):
+                        if base + kt + 1 < len(slabs):
+                            slab_dma(base + kt + 1).start()
+                        slab_dma(base + kt).wait()
+
+                    def read_tile(kt, nt, l=l, base=base):
+                        return w_scr[(base + kt) % 2, :, :,
+                                     nt * LANE:(nt + 1) * LANE]
+                    base += w_refs[l].shape[1] // LANE
+                else:
+                    pre_k = None
+
+                    def read_tile(kt, nt, l=l):
+                        return w_refs[l][:, kt * LANE:(kt + 1) * LANE,
+                                         nt * LANE:(nt + 1) * LANE]
+
+                cur = _tiled_contraction(x, en, read_tile, n_pads[l],
+                                         sparse_skip, pre_k)
+                cur = jnp.where(en, cur, 0)            # pruning clock-gate
+                v_int = jnp.clip(vs[l] + cur, v_min, v_max)
+                v_leak = v_int - (v_int >> decay_shift)
+                fired = jnp.logical_and(v_leak >= v_threshold, en)
+                v_new = jnp.where(fired, jnp.int32(v_rest), v_leak)
+                v_new = jnp.where(en, v_new, vs[l])    # frozen when gated
+                # energy: adds executed = input spikes × enabled outputs.
+                # Identical on the sparse path: a skipped tile pair has
+                # either zero spikes or zero enabled outputs, so its
+                # n_spk·n_en term of the Σ_{kt,nt} expansion is zero —
+                # the dense product below already counts only executed
+                # work.
+                n_spk = jnp.sum(x.astype(jnp.int32), axis=-1, keepdims=True)
+                n_en = jnp.sum(en.astype(jnp.int32), axis=-1, keepdims=True)
+                adds_t = adds_t + n_spk * n_en
+                if active_pruning:
+                    en = jnp.logical_and(en, jnp.logical_not(fired))
+                new_vs.append(v_new)
+                new_ens.append(en)
+                x = fired                              # next layer's input
+
+            # --- final-layer readout registers ---------------------------
+            cnt_new = cnt + x.astype(jnp.int32)
+            first_new = jnp.where(
+                jnp.logical_and(x, first == window_steps), steps, first)
+            v_last = new_vs[-1]
+
+            if gated:
+                # stability gate, mirroring serve.snn_engine.stream_chunk's
+                # jnp fallback bit-for-bit (same op order, tie-breaking).
+                has_spike = jnp.max(cnt_new, axis=-1, keepdims=True) > 0
+                if readout == "first_spike":
+                    large = jnp.int32(1 << 24)
+                    score = jnp.where(
+                        cnt_new > 0, large + (window_steps - first_new),
+                        jnp.clip(v_last, -large + 1, large - 1))
+                    pred = _first_argmax(score, n_out)
+                else:                                  # count
+                    pred = _first_argmax(cnt_new, n_out)
+                streak_raw = jnp.where(pred == gprev, gstreak + 1, 0)
+                done = streak_raw >= patience
+                gprev_new = jnp.where(has_spike, pred, -1)
+                gstreak_new = jnp.where(has_spike, streak_raw, 0)
+                done = jnp.logical_and(done, has_spike)
+                steps_new = steps + act.astype(jnp.int32)
+                still = jnp.logical_and(act, jnp.logical_not(done))
+                still = jnp.logical_and(still, steps_new < window_steps)
+
+                def keep(new, old):
+                    return jnp.where(act, new, old)
+
+                s_new = keep(s_new, s)
+                new_vs = [keep(nv, ov) for nv, ov in zip(new_vs, vs)]
+                new_ens = [jnp.where(act, ne, oe)
+                           for ne, oe in zip(new_ens, ens)]
+                cnt_new = keep(cnt_new, cnt)
+                first_new = keep(first_new, first)
+                gprev_new = keep(gprev_new, gprev)
+                gstreak_new = keep(gstreak_new, gstreak)
+                vtr_out[t, :, :] = new_vs[-1]
+                adds_out[t, :] = jnp.where(act, adds_t, 0)[:, 0]
+                return (s_new, tuple(new_vs), tuple(new_ens), cnt_new,
+                        first_new, steps_new, still, gprev_new, gstreak_new)
+
+            vtr_out[t, :, :] = v_last
+            adds_out[t, :] = adds_t[:, 0]
+            return (s_new, tuple(new_vs), tuple(new_ens), cnt_new, first_new,
+                    steps + 1)
+
+        carry_f = jax.lax.fori_loop(0, chunk_steps, body, carry0)
+        if gated:
+            (s_f, vs_f, ens_f, cnt_f, first_f, steps_f, act_f, gp_f,
+             gs_f) = carry_f
+            act_out[...] = act_f.astype(jnp.int32)
+            gprev_out[...] = gp_f
+            gstreak_out[...] = gs_f
         else:
-            s, vs, ens, cnt, first, steps = carry
+            s_f, vs_f, ens_f, cnt_f, first_f, steps_f = carry_f
+        cnt_out[...] = cnt_f
+        first_out[...] = first_f
+        st_out[...] = s_f
+        steps_out[...] = steps_f
+        for l in range(num_layers):
+            v_outs[l][...] = vs_f[l]
+            en_outs[l][...] = ens_f[l].astype(jnp.uint8)
 
-        # --- encoder: xorshift32 step + 8-bit comparator (Fig. 2) --------
-        s_new = s ^ (s << 13)
-        s_new = s_new ^ (s_new >> 17)
-        s_new = s_new ^ (s_new << 5)
-        r = (s_new >> 24).astype(jnp.uint8)
-        x = px > r                                     # (bB, n_in) on-chip
-
-        # --- static layer loop: spikes stay in VMEM between layers -------
-        adds_t = jnp.zeros(steps.shape, jnp.int32)     # (bB, 1)
-        new_vs, new_ens = [], []
-        for l in range(L):
-            en = ens[l]
-            cur = jax.lax.dot_general(
-                x.astype(jnp.int32), ws[l], (((1,), (0,)), ((), ())),
-                preferred_element_type=jnp.int32)
-            cur = jnp.where(en, cur, 0)                # pruning clock-gate
-            v_int = jnp.clip(vs[l] + cur, v_min, v_max)
-            v_leak = v_int - (v_int >> decay_shift)
-            fired = jnp.logical_and(v_leak >= v_threshold, en)
-            v_new = jnp.where(fired, jnp.int32(v_rest), v_leak)
-            v_new = jnp.where(en, v_new, vs[l])        # frozen when gated
-            # energy: adds executed = input spikes × enabled outputs
-            n_spk = jnp.sum(x.astype(jnp.int32), axis=-1, keepdims=True)
-            n_en = jnp.sum(en.astype(jnp.int32), axis=-1, keepdims=True)
-            adds_t = adds_t + n_spk * n_en
-            if active_pruning:
-                en = jnp.logical_and(en, jnp.logical_not(fired))
-            new_vs.append(v_new)
-            new_ens.append(en)
-            x = fired                                  # next layer's input
-
-        # --- final-layer readout registers -------------------------------
-        cnt_new = cnt + x.astype(jnp.int32)
-        first_new = jnp.where(
-            jnp.logical_and(x, first == window_steps), steps, first)
-        v_last = new_vs[-1]
-
-        if gated:
-            # stability gate, mirroring serve.snn_engine.stream_chunk's jnp
-            # fallback bit-for-bit (same op order, same tie-breaking).
-            has_spike = jnp.max(cnt_new, axis=-1, keepdims=True) > 0
-            if readout == "first_spike":
-                large = jnp.int32(1 << 24)
-                score = jnp.where(
-                    cnt_new > 0, large + (window_steps - first_new),
-                    jnp.clip(v_last, -large + 1, large - 1))
-                pred = _first_argmax(score, n_out)
-            else:                                      # count
-                pred = _first_argmax(cnt_new, n_out)
-            streak_raw = jnp.where(pred == gprev, gstreak + 1, 0)
-            done = streak_raw >= patience
-            gprev_new = jnp.where(has_spike, pred, -1)
-            gstreak_new = jnp.where(has_spike, streak_raw, 0)
-            done = jnp.logical_and(done, has_spike)
-            steps_new = steps + act.astype(jnp.int32)
-            still = jnp.logical_and(act, jnp.logical_not(done))
-            still = jnp.logical_and(still, steps_new < window_steps)
-
-            def keep(new, old):
-                return jnp.where(act, new, old)
-
-            s_new = keep(s_new, s)
-            new_vs = [keep(nv, ov) for nv, ov in zip(new_vs, vs)]
-            new_ens = [jnp.where(act, ne, oe)
-                       for ne, oe in zip(new_ens, ens)]
-            cnt_new = keep(cnt_new, cnt)
-            first_new = keep(first_new, first)
-            gprev_new = keep(gprev_new, gprev)
-            gstreak_new = keep(gstreak_new, gstreak)
-            vtr_out[t, :, :] = new_vs[-1]
-            adds_out[t, :] = jnp.where(act, adds_t, 0)[:, 0]
-            return (s_new, tuple(new_vs), tuple(new_ens), cnt_new,
-                    first_new, steps_new, still, gprev_new, gstreak_new)
-
-        vtr_out[t, :, :] = v_last
-        adds_out[t, :] = adds_t[:, 0]
-        return (s_new, tuple(new_vs), tuple(new_ens), cnt_new, first_new,
-                steps + 1)
-
-    carry_f = jax.lax.fori_loop(0, chunk_steps, body, carry0)
-    if gated:
-        s_f, vs_f, ens_f, cnt_f, first_f, steps_f, act_f, gp_f, gs_f = carry_f
-        act_out[...] = act_f.astype(jnp.int32)
-        gprev_out[...] = gp_f
-        gstreak_out[...] = gs_f
+    if streamed:
+        max_out = max(n_pads)
+        pl.run_scoped(
+            run,
+            w_scr=pltpu.VMEM((2, 2, LANE, max_out), jnp.int8),
+            sems=pltpu.SemaphoreType.DMA((2,)))
     else:
-        s_f, vs_f, ens_f, cnt_f, first_f, steps_f = carry_f
-    cnt_out[...] = cnt_f
-    first_out[...] = first_f
-    st_out[...] = s_f
-    steps_out[...] = steps_f
-    for l in range(num_layers):
-        v_outs[l][...] = vs_f[l]
-        en_outs[l][...] = ens_f[l].astype(jnp.uint8)
+        run()
 
 
 def fused_snn_stack_pallas(pixels_u8: jax.Array, state_u32: jax.Array,
-                           weights, v_init, en_init, counts_init: jax.Array,
+                           weights_packed, v_init, en_init,
+                           counts_init: jax.Array,
                            first_init: jax.Array, steps_init: jax.Array,
                            gate_init=None, *, chunk_steps: int,
                            window_steps: int, decay_shift: int,
@@ -260,27 +409,34 @@ def fused_snn_stack_pallas(pixels_u8: jax.Array, state_u32: jax.Array,
                            v_max: int = (1 << 20) - 1,
                            active_pruning: bool = False, patience: int = 0,
                            readout: str = "count",
+                           sparse_skip: bool = True, streamed: bool = False,
                            block_b: int = DEFAULT_BLOCK_B,
                            interpret: bool = False):
     """Run ``chunk_steps`` timesteps of the full encode→LIF stack.
 
     All arrays must already be padded: batch to ``block_b``, every neuron
     axis to 128 (use ``kernels.ops.fused_snn_stack_op``, which also masks
-    padded neurons out of the enable sets).
+    padded neurons out of the enable sets and packs the weights).
 
-      pixels_u8/state_u32: (B, n_in);  weights: [(n_l, n_{l+1}) int16/8]
+      pixels_u8/state_u32: (B, n_in)
+      weights_packed: [(2, n_l, n_{l+1}) int8] from :func:`pack_weights`
       v_init/en_init: per-layer (B, n_{l+1}) int32 / uint8
       counts_init/first_init: (B, n_out) int32 (first sentinel=window_steps)
       steps_init: (B, 1) int32 — per-lane absolute step counter
       gate_init: None, or (active u8, prev i32, streak i32) each (B, 1)
+
+    ``sparse_skip`` gates the event-driven tile skipping (bit-identical
+    either way); ``streamed`` keeps the packed weight planes in HBM and
+    double-buffers 128-row slabs through VMEM scratch — the path for
+    stacks whose resident footprint exceeds the VMEM budget.
 
     Returns (counts, v_trace (chunk,B,n_out), first, adds (chunk,B),
     state_u32', v_final tuple, en_final tuple (uint8), steps', and — when
     gated — (active', prev', streak')).
     """
     B, n_in = pixels_u8.shape
-    L = len(weights)
-    sizes = [n_in] + [w.shape[1] for w in weights]
+    L = len(weights_packed)
+    sizes = [n_in] + [w.shape[2] for w in weights_packed]
     n_out = sizes[-1]
     gated = gate_init is not None
     grid = (pl.cdiv(B, block_b),)
@@ -291,21 +447,26 @@ def fused_snn_stack_pallas(pixels_u8: jax.Array, state_u32: jax.Array,
         window_steps=window_steps, decay_shift=decay_shift,
         v_threshold=v_threshold, v_rest=v_rest, v_min=v_min, v_max=v_max,
         active_pruning=active_pruning, gated=gated, patience=patience,
-        readout=readout)
+        readout=readout, sparse_skip=sparse_skip, streamed=streamed)
 
     def row(shape):      # batch-tiled 2-D state block
         return pl.BlockSpec((bB,) + shape[1:], lambda i: (i,) + (0,) * (len(shape) - 1))
 
-    def whole(shape):    # fully resident (weights)
+    def whole(shape):    # fully VMEM-resident (packed weight planes)
         return pl.BlockSpec(shape, lambda i: (0,) * len(shape))
 
+    # Streamed weights never enter VMEM whole: the kernel DMAs 128-row
+    # slabs out of HBM/ANY on demand.
+    w_spec = ((lambda w: pl.BlockSpec(memory_space=pltpu.ANY)) if streamed
+              else (lambda w: whole(w.shape)))
+
     in_specs = [row(pixels_u8.shape), row(state_u32.shape)]
-    in_specs += [whole(w.shape) for w in weights]
+    in_specs += [w_spec(w) for w in weights_packed]
     in_specs += [row(v.shape) for v in v_init]
     in_specs += [row(e.shape) for e in en_init]
     in_specs += [row(counts_init.shape), row(first_init.shape),
                  row(steps_init.shape)]
-    inputs = ([pixels_u8, state_u32] + list(weights) + list(v_init)
+    inputs = ([pixels_u8, state_u32] + list(weights_packed) + list(v_init)
               + list(en_init) + [counts_init, first_init, steps_init])
     if gated:
         in_specs += [row(g.shape) for g in gate_init]

@@ -7,6 +7,7 @@ masked/MXU dispatch for the spike matmul, and unpadding of results.
 
 from __future__ import annotations
 
+import os
 from functools import partial
 
 import jax
@@ -15,11 +16,53 @@ import jax.numpy as jnp
 from . import fused_snn, lif_step, poisson_encode, spike_matmul
 
 __all__ = ["poisson_encode_op", "lif_forward_op", "spike_matmul_op",
-           "fused_snn_op", "fused_snn_stack_op"]
+           "fused_snn_op", "fused_snn_stack_op", "validate_weight_codes",
+           "SPIKE_DENSITY_THRESHOLD"]
+
+# Below this per-tile spike density the masked (event-driven) spike-matmul
+# kernel wins over the MXU dot; the ``mode="auto"`` runtime dispatch in
+# :func:`spike_matmul_op` branches on the *observed* density of the batch.
+SPIKE_DENSITY_THRESHOLD = 0.25
 
 
 def _use_interpret() -> bool:
     return jax.default_backend() != "tpu"
+
+
+def validate_weight_codes(weights) -> None:
+    """Raise if concrete weights fall outside the int8-packable range.
+
+    The fused kernels store weights as two int8 planes (``hi = w >> 1``,
+    ``lo = w & 1``), exact only for the paper's signed 9-bit codes
+    [-256, 255] (``core.snn.quantize_params``' output contract) — a wider
+    code would wrap the hi plane SILENTLY, where the pre-packing int16
+    kernel was exact.  Checked wherever the weights are concrete (engine
+    construction, un-jitted ``snn_apply_int``/``snn_window_chunk`` calls);
+    under a caller's jit the values are tracers and the contract is
+    trusted.
+    """
+    for i, w in enumerate(weights):
+        if isinstance(w, jax.core.Tracer):
+            continue
+        lo, hi = int(jnp.min(w)), int(jnp.max(w))
+        if lo < -256 or hi > 255:
+            raise ValueError(
+                f"layer {i} weight codes span [{lo}, {hi}] — outside the "
+                f"signed 9-bit range [-256, 255] the fused kernels' int8 "
+                f"packing represents exactly (quantize_params' contract); "
+                f"use the staged or reference backend for wider codes")
+
+
+def _resolve_sparse_skip(sparse_skip: bool | None) -> bool:
+    """None → the REPRO_SPARSE_SKIP env default (on unless set to "0").
+
+    Resolved at trace time (``sparse_skip`` is a static argument), which
+    is what lets CI force the dense and sparse tile paths across a whole
+    test run without touching call sites.
+    """
+    if sparse_skip is None:
+        return os.environ.get("REPRO_SPARSE_SKIP", "1") != "0"
+    return bool(sparse_skip)
 
 
 def _pad_to(x: jax.Array, axis: int, mult: int):
@@ -70,7 +113,8 @@ def lif_forward_op(spikes_t: jax.Array, w_q: jax.Array, *, decay_shift: int,
 
 @partial(jax.jit, static_argnames=(
     "num_steps", "chunk_steps", "decay_shift", "v_threshold", "v_rest",
-    "v_min", "v_max", "active_pruning", "patience", "readout", "interpret"))
+    "v_min", "v_max", "active_pruning", "patience", "readout",
+    "sparse_skip", "streamed", "interpret"))
 def fused_snn_stack_op(pixels_u8: jax.Array, state_u32: jax.Array,
                        weights, *, num_steps: int, chunk_steps: int | None = None,
                        decay_shift: int, v_threshold: int, v_rest: int = 0,
@@ -78,11 +122,16 @@ def fused_snn_stack_op(pixels_u8: jax.Array, state_u32: jax.Array,
                        active_pruning: bool = False, init: dict | None = None,
                        gate: dict | None = None, patience: int = 0,
                        readout: str = "count",
+                       sparse_skip: bool | None = None,
+                       streamed: bool = False,
                        interpret: bool | None = None):
     """Multi-layer encode→LIF stack in one resumable Pallas launch.
 
     Args:
-      weights: tuple of per-layer (n_l, n_{l+1}) int16/int8 matrices.
+      weights: tuple of per-layer (n_l, n_{l+1}) int16/int8 matrices
+        holding the paper's signed 9-bit codes (range [-256, 255] — the
+        ``core.snn.quantize_params`` contract; packing into the kernel's
+        resident int8 planes is exact only on that range).
       num_steps: the full window length T (first-spike sentinel and, when
         gated, the per-lane step bound).
       chunk_steps: how many steps THIS launch executes (default: the whole
@@ -94,6 +143,12 @@ def fused_snn_stack_op(pixels_u8: jax.Array, state_u32: jax.Array,
       gate: optional per-lane stability-gate state (``active`` bool (B,),
         ``prev``/``streak`` i32 (B,)) — when given, the kernel runs the
         serving early-exit gate each step and freezes retired lanes.
+      sparse_skip: event-driven tile skipping inside the kernel —
+        bit-identical to dense execution either way (None = the
+        REPRO_SPARSE_SKIP env default, on).
+      streamed: keep the packed weight planes in HBM and double-buffer
+        128-row slabs through VMEM scratch (the ``fused_streamed``
+        backend for stacks over the residency budget).
 
     Returns a dict with ``spike_counts``/``first_spike_t``/``v_final``
     ((B, n_out) i32), ``v_trace`` ((chunk, B, n_out) i32), ``active_adds``
@@ -102,6 +157,7 @@ def fused_snn_stack_op(pixels_u8: jax.Array, state_u32: jax.Array,
     The inter-layer spike tensors are never materialised.
     """
     interpret = _use_interpret() if interpret is None else interpret
+    sparse_skip = _resolve_sparse_skip(sparse_skip)
     if chunk_steps is None:
         chunk_steps = num_steps
     B, n_in = pixels_u8.shape
@@ -118,19 +174,20 @@ def fused_snn_stack_op(pixels_u8: jax.Array, state_u32: jax.Array,
     # they cannot fire and do not count toward the executed-add channel.
     px = _pad_to(_pad_to(pixels_u8, 0, bB), 1, lane)
     st = _pad_to(_pad_to(state_u32, 0, bB), 1, lane)
-    ws = tuple(_pad_to(_pad_to(w, 0, lane), 1, lane) for w in weights)
+    ws = tuple(fused_snn.pack_weights(_pad_to(_pad_to(w, 0, lane), 1, lane))
+               for w in weights)
 
     def valid_mask(n_true, n_pad):
         col = jnp.arange(n_pad, dtype=jnp.int32)[None, :]
         return jnp.broadcast_to(col < n_true, (Bp, n_pad))
 
     if init is None:
-        v_in = tuple(jnp.full((Bp, ws[l].shape[1]), v_rest, jnp.int32)
+        v_in = tuple(jnp.full((Bp, ws[l].shape[2]), v_rest, jnp.int32)
                      for l in range(L))
-        en_in = tuple(valid_mask(sizes[l + 1], ws[l].shape[1])
+        en_in = tuple(valid_mask(sizes[l + 1], ws[l].shape[2])
                       for l in range(L))
-        cnt_in = jnp.zeros((Bp, ws[-1].shape[1]), jnp.int32)
-        first_in = jnp.full((Bp, ws[-1].shape[1]), num_steps, jnp.int32)
+        cnt_in = jnp.zeros((Bp, ws[-1].shape[2]), jnp.int32)
+        first_in = jnp.full((Bp, ws[-1].shape[2]), num_steps, jnp.int32)
         steps_in = jnp.zeros((Bp, 1), jnp.int32)
     else:
         v_in = tuple(_pad_to(_pad_to(init["v"][l], 0, bB), 1, lane)
@@ -156,8 +213,8 @@ def fused_snn_stack_op(pixels_u8: jax.Array, state_u32: jax.Array,
         chunk_steps=chunk_steps, window_steps=num_steps,
         decay_shift=decay_shift, v_threshold=v_threshold, v_rest=v_rest,
         v_min=v_min, v_max=v_max, active_pruning=active_pruning,
-        patience=patience, readout=readout, block_b=bB,
-        interpret=interpret)
+        patience=patience, readout=readout, sparse_skip=sparse_skip,
+        streamed=streamed, block_b=bB, interpret=interpret)
     cnt, vtr, first, adds, st_out, v_fin, en_fin, steps_out = outs[:8]
     res = {
         "spike_counts": cnt[:B, :n_out],
@@ -180,11 +237,12 @@ def fused_snn_stack_op(pixels_u8: jax.Array, state_u32: jax.Array,
 
 @partial(jax.jit, static_argnames=(
     "num_steps", "decay_shift", "v_threshold", "v_rest", "v_min", "v_max",
-    "active_pruning", "interpret"))
+    "active_pruning", "sparse_skip", "streamed", "interpret"))
 def fused_snn_op(pixels_u8: jax.Array, state_u32: jax.Array, w_q: jax.Array,
                  *, num_steps: int, decay_shift: int, v_threshold: int,
                  v_rest: int = 0, v_min: int = -(1 << 20),
                  v_max: int = (1 << 20) - 1, active_pruning: bool = False,
+                 sparse_skip: bool | None = None, streamed: bool = False,
                  interpret: bool | None = None):
     """Single-layer whole-window convenience wrapper over the stack op.
 
@@ -197,7 +255,7 @@ def fused_snn_op(pixels_u8: jax.Array, state_u32: jax.Array, w_q: jax.Array,
         pixels_u8, state_u32, (w_q,), num_steps=num_steps,
         decay_shift=decay_shift, v_threshold=v_threshold, v_rest=v_rest,
         v_min=v_min, v_max=v_max, active_pruning=active_pruning,
-        interpret=interpret)
+        sparse_skip=sparse_skip, streamed=streamed, interpret=interpret)
 
 
 @partial(jax.jit, static_argnames=("mode", "interpret"))
@@ -205,20 +263,30 @@ def spike_matmul_op(spikes: jax.Array, w_q: jax.Array, *,
                     mode: str = "auto", interpret: bool | None = None):
     """Event-driven spike×weight contraction.
 
-    mode="auto" picks the masked (event-driven) path for small layers and
-    the MXU path otherwise; density is a compile-time proxy here (runtime
-    density dispatch would need a cond over both kernels — the serving stack
-    does that at the batch level instead).
+    ``mode="auto"`` dispatches at RUNTIME on the observed spike density of
+    the batch: a ``lax.cond`` picks the masked (event-driven) kernel below
+    ``SPIKE_DENSITY_THRESHOLD`` and the MXU dot above it.  Both kernels
+    compute the identical int32 contraction (S ∈ {0,1} makes the masked
+    add and the dot arithmetically the same), so the dispatch can never
+    change results — only which datapath executes.  ``mode="masked"`` /
+    ``mode="mxu"`` force one branch.
     """
     interpret = _use_interpret() if interpret is None else interpret
-    if mode == "auto":
-        n_in = spikes.shape[-1]
-        mode = "masked" if n_in <= 1024 else "mxu"
     B, n_in = spikes.shape
     n_out = w_q.shape[1]
     bB, bN, bK = spike_matmul.DEFAULT_BLOCK
     s = _pad_to(_pad_to(spikes, 0, bB), 1, bK)
     w = _pad_to(_pad_to(w_q, 0, bK), 1, bN)
-    out = spike_matmul.spike_matmul_pallas(s, w, mode=mode,
-                                           interpret=interpret)
+    if mode == "auto":
+        density = jnp.mean((spikes != 0).astype(jnp.float32))
+        out = jax.lax.cond(
+            density < SPIKE_DENSITY_THRESHOLD,
+            lambda s, w: spike_matmul.spike_matmul_pallas(
+                s, w, mode="masked", interpret=interpret),
+            lambda s, w: spike_matmul.spike_matmul_pallas(
+                s, w, mode="mxu", interpret=interpret),
+            s, w)
+    else:
+        out = spike_matmul.spike_matmul_pallas(s, w, mode=mode,
+                                               interpret=interpret)
     return out[:B, :n_out]

@@ -12,7 +12,28 @@ import jax
 import jax.numpy as jnp
 
 __all__ = ["poisson_encode_ref", "lif_forward_ref", "spike_matmul_ref",
-           "fused_snn_ref", "fused_snn_stack_ref"]
+           "fused_snn_ref", "fused_snn_stack_ref", "weight_pack_ref"]
+
+
+def weight_pack_ref(w_q):
+    """Oracle for ``kernels.fused_snn.pack_weights``.
+
+    The fused kernels keep weights resident as two int8 planes —
+    ``hi = w >> 1`` (arithmetic shift) and ``lo = w & 1`` — reconstructed
+    per tile as ``w = 2*hi + lo``.  That split is exact for every code in
+    the paper's signed 9-bit range [-256, 255] (``quantize_params``'
+    output contract) and for nothing wider: hi must fit int8.  Returns
+    ``(hi, lo)`` int8 numpy planes, derived independently of the kernel
+    module.
+    """
+    import numpy as np
+    w = np.asarray(w_q, np.int64)
+    if w.min() < -256 or w.max() > 255:
+        raise ValueError("weight codes outside the signed 9-bit range "
+                         "[-256, 255] cannot be int8-packed exactly")
+    hi = w >> 1
+    lo = w - 2 * hi                        # ∈ {0, 1}
+    return hi.astype(np.int8), lo.astype(np.int8)
 
 
 def poisson_encode_ref(pixels_u8: jax.Array, state_u32: jax.Array,

@@ -111,11 +111,12 @@ def _stream_chunk_impl(lanes: LaneState, weights: tuple, *, chunk_steps: int,
                        num_steps: int, lif_cfg: lif_mod.LIFConfig,
                        dot_impl: str, active_pruning: bool, patience: int,
                        readout: str = "count", backend: str = "reference",
+                       sparse_skip: bool | None = None,
                        interpret: bool | None = None) -> LaneState:
     """Un-jitted chunk body: every op is per-lane (no cross-batch contact),
     which is what lets the same code run whole-tile under ``jax.jit`` or
     per-device-slice under ``shard_map`` with bit-identical results."""
-    if backend == "fused":
+    if backend in ("fused", "fused_streamed"):
         from ..kernels import ops
         k = ops.fused_snn_stack_op(
             lanes.px, lanes.rng, weights, num_steps=num_steps,
@@ -127,7 +128,8 @@ def _stream_chunk_impl(lanes: LaneState, weights: tuple, *, chunk_steps: int,
                   "first": lanes.first, "steps": lanes.steps},
             gate={"active": lanes.active, "prev": lanes.gate_prev,
                   "streak": lanes.gate_streak},
-            patience=patience, readout=readout, interpret=interpret)
+            patience=patience, readout=readout, sparse_skip=sparse_skip,
+            streamed=(backend == "fused_streamed"), interpret=interpret)
         return LaneState(
             px=lanes.px, rng=k["prng_state"], v=k["v"], en=k["en"],
             counts=k["spike_counts"], first=k["first_spike_t"],
@@ -191,27 +193,32 @@ def _stream_chunk_impl(lanes: LaneState, weights: tuple, *, chunk_steps: int,
 
 @partial(jax.jit, static_argnames=(
     "chunk_steps", "num_steps", "lif_cfg", "dot_impl", "active_pruning",
-    "patience", "readout", "backend", "interpret"))
+    "patience", "readout", "backend", "sparse_skip", "interpret"))
 def stream_chunk(lanes: LaneState, weights: tuple, *, chunk_steps: int,
                  num_steps: int, lif_cfg: lif_mod.LIFConfig,
                  dot_impl: str, active_pruning: bool, patience: int,
                  readout: str = "count", backend: str = "reference",
+                 sparse_skip: bool | None = None,
                  interpret: bool | None = None) -> LaneState:
     """Advance every active lane by up to ``chunk_steps`` window steps.
 
     ``backend="fused"`` runs the whole chunk — every layer, every step,
     the stability gate included — inside one resumable Pallas launch
-    (kernels.fused_snn); ``backend="reference"`` scans the same datapath
-    in jnp via ``core.snn.snn_int_stack_step``.  The two are bit-identical
-    on shared lane state, including mid-chunk retirement: a retired or
-    inactive lane is completely frozen — PRNG, membranes, counters and the
-    add counter stop, which is what the compaction test measures.
+    (kernels.fused_snn); ``backend="fused_streamed"`` is the same launch
+    with the packed weights double-buffered out of HBM (stacks over the
+    VMEM residency budget); ``backend="reference"`` scans the same
+    datapath in jnp via ``core.snn.snn_int_stack_step``.  All are
+    bit-identical on shared lane state, including mid-chunk retirement: a
+    retired or inactive lane is completely frozen — PRNG, membranes,
+    counters and the add counter stop, which is what the compaction test
+    measures.  ``sparse_skip`` forwards the event-driven tile skipping
+    flag (value-neutral).
     """
     return _stream_chunk_impl(
         lanes, weights, chunk_steps=chunk_steps, num_steps=num_steps,
         lif_cfg=lif_cfg, dot_impl=dot_impl, active_pruning=active_pruning,
         patience=patience, readout=readout, backend=backend,
-        interpret=interpret)
+        sparse_skip=sparse_skip, interpret=interpret)
 
 
 def lane_partition_specs(n_layers: int,
@@ -238,6 +245,7 @@ def make_sharded_stream_chunk(mesh: Mesh, axis_name: str, n_layers: int, *,
                               active_pruning: bool, patience: int,
                               readout: str = "count",
                               backend: str = "reference",
+                              sparse_skip: bool | None = None,
                               interpret: bool | None = None):
     """Build the data-parallel chunk executor for ``mesh``.
 
@@ -255,7 +263,7 @@ def make_sharded_stream_chunk(mesh: Mesh, axis_name: str, n_layers: int, *,
         _stream_chunk_impl, chunk_steps=chunk_steps, num_steps=num_steps,
         lif_cfg=lif_cfg, dot_impl=dot_impl, active_pruning=active_pruning,
         patience=patience, readout=readout, backend=backend,
-        interpret=interpret)
+        sparse_skip=sparse_skip, interpret=interpret)
     mapped = shard_map_compat(body, mesh, in_specs=(specs, P()),
                               out_specs=specs)
     return jax.jit(mapped)
@@ -271,10 +279,13 @@ class SNNStreamEngine:
         results = eng.run()                            # {id: RequestResult}
 
     ``backend`` picks the chunk executor: ``"fused"`` (resumable Pallas
-    megakernel — interpret mode off-TPU, so slow but bit-exact there),
-    ``"reference"`` (jnp scan), or None/"auto" (fused on TPU, reference
+    megakernel, int8-packed weights resident — interpret mode off-TPU, so
+    slow but bit-exact there), ``"fused_streamed"`` (the same launch with
+    weights double-buffered out of HBM, for stacks over the VMEM
+    residency budget), ``"reference"`` (jnp scan), or None/"auto" (fused →
+    fused_streamed on TPU by per-device VMEM feasibility, reference
     elsewhere).  Arbitrary layer stacks are supported — hidden-layer spike
-    traffic stays on-chip on the fused path.
+    traffic stays on-chip on the fused paths.
     """
 
     def __init__(self, params_q: dict, cfg: SNNConfig, *, batch_size: int = 8,
@@ -286,31 +297,46 @@ class SNNStreamEngine:
                 f"streaming engine implements the 'count' and 'first_spike' "
                 f"readouts; got readout={cfg.readout!r} — run membrane "
                 f"configs through core.snn.snn_apply_int instead")
-        if backend in (None, "auto"):
-            backend = ("fused" if jax.default_backend() == "tpu"
-                       else "reference")
-        if backend not in ("fused", "reference"):
-            raise ValueError(
-                f"streaming chunk backend must be 'fused' or 'reference' "
-                f"(the staged kernels cannot resume mid-window); got "
-                f"{backend!r}")
-        self.backend = backend
+        from ..core.snn import fused_unsupported_reason
         self.weights = tuple(layer["w_q"] for layer in params_q["layers"])
         self.layer_sizes = tuple([self.weights[0].shape[0]]
                                  + [w.shape[1] for w in self.weights])
         # Per-device lane tile (the sharded subclass passes its slice;
         # single-device serving holds the whole tile) — scopes the fused
-        # VMEM feasibility check below to one device's launch.
+        # VMEM feasibility checks below to one device's launch.
         self.local_batch = batch_size if local_batch is None else local_batch
-        if backend == "fused":
-            from ..core.snn import fused_unsupported_reason
-            reason = fused_unsupported_reason(cfg, len(self.weights),
-                                              self.layer_sizes,
-                                              trace_steps=chunk_steps,
-                                              local_batch=self.local_batch)
+
+        def reason_for(streamed: bool) -> str | None:
+            return fused_unsupported_reason(
+                cfg, len(self.weights), self.layer_sizes,
+                trace_steps=chunk_steps, local_batch=self.local_batch,
+                streamed=streamed)
+
+        if backend in (None, "auto"):
+            # the resumable-backend mirror of core.snn.resolve_backend's
+            # fused → fused_streamed chain (staged cannot resume, so the
+            # last resort here is the jnp reference scan)
+            if jax.default_backend() != "tpu":
+                backend = "reference"
+            elif reason_for(False) is None:
+                backend = "fused"
+            elif reason_for(True) is None:
+                backend = "fused_streamed"
+            else:
+                backend = "reference"
+        if backend not in ("fused", "fused_streamed", "reference"):
+            raise ValueError(
+                f"streaming chunk backend must be 'fused', 'fused_streamed'"
+                f" or 'reference' (the staged kernels cannot resume "
+                f"mid-window); got {backend!r}")
+        self.backend = backend
+        if backend in ("fused", "fused_streamed"):
+            from ..kernels.ops import validate_weight_codes
+            validate_weight_codes(self.weights)  # int8-packing range
+            reason = reason_for(backend == "fused_streamed")
             if reason is not None:
-                raise ValueError(f"fused streaming backend unavailable: "
-                                 f"{reason} — use backend='reference'")
+                raise ValueError(f"{backend} streaming backend unavailable:"
+                                 f" {reason} — use backend='reference'")
         self.cfg = cfg
         self.batch_size = batch_size
         self.chunk_steps = chunk_steps
@@ -438,7 +464,8 @@ class SNNStreamEngine:
             num_steps=self.cfg.num_steps, lif_cfg=self.cfg.lif,
             dot_impl=self.cfg.dot_impl,
             active_pruning=self.cfg.active_pruning, patience=self.patience,
-            readout=self.cfg.readout, backend=self.backend)
+            readout=self.cfg.readout, backend=self.backend,
+            sparse_skip=self.cfg.sparse_skip)
 
     def step(self) -> list[int]:
         """Admit + run one chunk.  Returns request ids finished so far."""
@@ -540,7 +567,8 @@ class ShardedSNNStreamEngine(SNNStreamEngine):
             chunk_steps=chunk_steps, num_steps=cfg.num_steps,
             lif_cfg=cfg.lif, dot_impl=cfg.dot_impl,
             active_pruning=cfg.active_pruning, patience=patience,
-            readout=cfg.readout, backend=self.backend)
+            readout=cfg.readout, backend=self.backend,
+            sparse_skip=cfg.sparse_skip)
         self.weights = jax.device_put(self.weights,
                                       NamedSharding(mesh, P()))
         self.lanes = jax.device_put(self.lanes, self._shardings)

@@ -138,15 +138,15 @@ def test_backend_auto_resolution():
 def test_backend_fused_rejects_oversized_stack():
     """An explicit backend='fused' request for a stack whose resident
     weights cannot fit VMEM must raise a clear error, not silently fall
-    back to the staged kernels; auto quietly picks staged/reference."""
-    huge = (784, 4096, 4096, 10)   # ~64 MB of resident weight codes
+    back; auto quietly streams the weights (TPU) or picks reference."""
+    huge = (784, 4096, 4096, 10)   # ~42 MB of packed resident weight codes
     with pytest.raises(ValueError, match="VMEM"):
         snn.resolve_backend(SNN_CONFIG, "fused", len(huge) - 1,
                             layer_sizes=huge)
     on_tpu = jax.default_backend() == "tpu"
     assert snn.resolve_backend(SNN_CONFIG, "auto", len(huge) - 1,
                                layer_sizes=huge) == (
-        "staged" if on_tpu else "reference")
+        "fused_streamed" if on_tpu else "reference")
 
 
 # ---------------------------------------------------------------------------
