@@ -143,6 +143,7 @@ def run():
 
     run_multilayer()
     run_streamed()
+    run_telemetry()
     return times
 
 
@@ -376,6 +377,151 @@ def run_streamed():
         "backend_platform": jax.default_backend(),
     }, "bench", "BENCH_fused_streamed.json")
     return times
+
+
+def _sizes_telemetry():
+    if os.environ.get("REPRO_BENCH_TINY"):
+        return dict(batch=4, T=8, n_imgs=8, chunk=3)
+    return dict(batch=8, T=20, n_imgs=24, chunk=4)
+
+
+def run_telemetry():
+    """Telemetry side channel + adaptive dispatch controller (§ROADMAP
+    "runtime density telemetry for dispatch thresholds").
+
+    Three contract claims, all run-invariant and diffed by
+    check_tracked / the CI gate:
+
+      * ``telemetry_bit_identical`` — the ChunkTelemetry record
+        (per-step/layer spike counts, prune occupancy, skipped MXU tile
+        pairs) is bit-identical across the reference / staged / fused
+        backends, and its adds equal the frozen energy counters
+        (``adds_match``);
+      * ``density_estimate_ok`` — driving the streaming engine on
+        constant-level traffic, the controller's EWMA density estimate
+        lands on the analytic px/256 Poisson rate for every level;
+      * ``adaptive_matches_frozen`` — the same request stream served with
+        the controller adaptive (live chunk lengths + threshold) returns
+        bit-identical results to frozen mode: adaptivity only moves
+        wall-clock.  The threshold/chunk trajectories are recorded so the
+        tuning behavior itself is reviewable across PRs.
+    """
+    from repro.serve import AdaptiveDispatchConfig, SNNStreamEngine
+
+    s = _sizes_telemetry()
+    batch, T = s["batch"], s["T"]
+    rng = np.random.default_rng(7)
+    cfg = dataclasses.replace(SNN_CONFIG, num_steps=T, sparse_skip=True)
+    n_in, n_out = cfg.layer_sizes[0], cfg.layer_sizes[-1]
+    w = jnp.asarray(rng.integers(-256, 256, (n_in, n_out)), jnp.int16)
+    params_q = {"layers": [{"w_q": w, "scale": jnp.float32(1.0)}]}
+
+    # --- cross-backend bit-identity of the side channel ------------------
+    px = jnp.asarray(np.minimum(rng.integers(0, 256, (batch, n_in)), 5)
+                     .astype(np.uint8))                # sparse → tiles skip
+    st = prng.seed_state(19, px.shape)
+    outs = {b: snn.snn_apply_int(params_q, px, st, cfg, backend=b)
+            for b in ("reference", "staged", "fused")}
+    tel_identical = all(
+        np.array_equal(np.asarray(getattr(outs["reference"]["telemetry"], f)),
+                       np.asarray(getattr(outs[b]["telemetry"], f)))
+        for b in ("staged", "fused") for f in ("n_spk", "n_en",
+                                               "tiles_skipped"))
+    adds_match = all(
+        np.array_equal(np.asarray(outs[b]["telemetry"].adds).sum(axis=1),
+                       np.asarray(outs[b]["active_adds"]))
+        for b in outs)
+    skipped = int(np.asarray(outs["fused"]["telemetry"].tiles_skipped).sum())
+    obs_density = float(np.asarray(
+        outs["fused"]["telemetry"].densities(cfg.layer_sizes))[:, 0].mean())
+    emit("telemetry.bit_identical", None,
+         f"staged==fused==reference={tel_identical} adds_match={adds_match} "
+         f"tiles_skipped={skipped} layer0_density={obs_density:.4f}")
+    assert tel_identical, "telemetry diverges across backends"
+    assert adds_match, "telemetry adds != energy counters"
+    assert skipped > 0, "sparse input must skip tiles"
+
+    # --- controller: density estimate vs analytic ground truth -----------
+    levels = [16, 64, 128]
+    estimates, truths = [], []
+    for level in levels:
+        eng = SNNStreamEngine(
+            params_q, cfg, batch_size=batch, chunk_steps=s["chunk"],
+            patience=10_000, seed=level, backend="reference",
+            adaptive=AdaptiveDispatchConfig(adaptive=True, ewma_alpha=0.5))
+        for _ in range(s["n_imgs"]):
+            eng.submit(np.full(n_in, level, np.uint8))
+        eng.run()
+        est = eng.controller.density_ewma
+        estimates.append(float(est))
+        truths.append(level / 256)
+        emit(f"telemetry.density@{level}", None,
+             f"truth={level / 256:.3f} ewma_estimate={est:.3f} "
+             f"threshold={eng.dispatch_threshold:.3f}")
+    density_ok = all(abs(e - t) < 0.05 for e, t in zip(estimates, truths))
+    assert density_ok, f"density estimates off: {estimates} vs {truths}"
+
+    # --- adaptivity is value-neutral + trajectory record -----------------
+    imgs = rng.integers(0, 256, (s["n_imgs"], n_in), dtype=np.uint8)
+
+    def serve(adaptive):
+        eng = SNNStreamEngine(params_q, cfg, batch_size=batch,
+                              chunk_steps=s["chunk"], patience=2, seed=3,
+                              backend="reference", adaptive=adaptive)
+        ids = [eng.submit(im) for im in imgs]
+        res = eng.run()
+        return {i: (res[i].pred, res[i].steps, res[i].adds,
+                    tuple(res[i].spike_counts.tolist())) for i in ids}, eng
+
+    frozen_res, frozen_eng = serve(AdaptiveDispatchConfig(adaptive=False))
+    adaptive_res, adaptive_eng = serve(AdaptiveDispatchConfig(
+        adaptive=True, min_chunk_steps=2, max_chunk_steps=8))
+    matches = frozen_res == adaptive_res
+    thr_traj = [round(h["dispatch_threshold"], 4)
+                for h in adaptive_eng.controller.history]
+    chunk_traj = [h["chunk_steps"] for h in adaptive_eng.controller.history]
+    emit("telemetry.adaptive_matches_frozen", None,
+         f"{matches} threshold_trajectory={thr_traj[:8]}... "
+         f"chunk_trajectory={chunk_traj[:8]}...")
+    assert matches, "adaptive mode changed predictions"
+    assert frozen_eng.controller.history == [], \
+        "frozen controller must record nothing (no readbacks)"
+
+    # close the dispatch loop: route a batch through spike_matmul_op on
+    # the engine's RETUNED boundary and record which datapath it picked —
+    # the traced-operand threshold means this never recompiles as the
+    # controller walks it
+    spikes = jnp.asarray(
+        (np.random.default_rng(1).random((batch, n_in)) < 0.1)
+        .astype(np.uint8))
+    routed, mm_tel = ops.spike_matmul_op(
+        spikes, w, mode="auto",
+        density_threshold=adaptive_eng.dispatch_threshold,
+        with_telemetry=True)
+    forced = np.asarray(ops.spike_matmul_op(spikes, w, mode="mxu"))
+    dispatch_neutral = np.array_equal(np.asarray(routed), forced)
+    emit("telemetry.retuned_dispatch", None,
+         f"threshold={adaptive_eng.dispatch_threshold:.3f} "
+         f"density={float(mm_tel.density):.3f} "
+         f"used_masked={bool(mm_tel.used_masked)} "
+         f"value_neutral={dispatch_neutral}")
+    assert dispatch_neutral, "dispatch boundary changed results"
+
+    save_json({
+        "sizes": {"batch": batch, "T": T, "n_imgs": s["n_imgs"]},
+        "telemetry_bit_identical": bool(tel_identical),
+        "adds_match": bool(adds_match),
+        "tiles_skipped": skipped,
+        "density_estimate_ok": bool(density_ok),
+        "density": {"levels": levels, "truth": truths,
+                    "ewma_estimate": estimates},
+        "adaptive_matches_frozen": bool(matches),
+        "retuned_dispatch_value_neutral": bool(dispatch_neutral),
+        "static_threshold": float(frozen_eng.dispatch_threshold),
+        "threshold_trajectory": thr_traj,
+        "chunk_trajectory": chunk_traj,
+        "backend_platform": jax.default_backend(),
+    }, "bench", "BENCH_telemetry.json")
 
 
 if __name__ == "__main__":

@@ -60,6 +60,11 @@ class SNNStreamMeshConfig:
     lanes_per_device: int = 8          # device-local batch-tile slots
     chunk_steps: int = 4               # window steps per device dispatch
     overlap: bool = True               # speculative chunk k+1 dispatch
+    # Telemetry-driven dispatch tuning (serve.telemetry): None reads the
+    # REPRO_ADAPTIVE_DISPATCH env default — frozen (static threshold +
+    # chunk length, zero readbacks) unless the env flips it on.  Adaptive
+    # mode is value-neutral: it only moves performance-facing knobs.
+    adaptive: "AdaptiveDispatchConfig | None" = None
 
 
 SNN_STREAM_MESH = SNNStreamMeshConfig()
@@ -87,7 +92,8 @@ def make_stream_engine(params_q: dict, snn_cfg: SNNConfig = SNN_CONFIG,
         params_q, snn_cfg, mesh=make_stream_mesh(knobs),
         axis_name=knobs.axis_name,
         lanes_per_device=knobs.lanes_per_device,
-        chunk_steps=knobs.chunk_steps, overlap=knobs.overlap, **engine_kw)
+        chunk_steps=knobs.chunk_steps, overlap=knobs.overlap,
+        adaptive=knobs.adaptive, **engine_kw)
 
 
 # Hidden-layer stack (beyond the paper's topology): exercises the

@@ -9,11 +9,13 @@ Layout:
   conversion   — ANN→SNN weight conversion (Diehl-style normalisation)
   fixed_point  — quantisation utilities (incl. stochastic rounding, QAT)
   energy       — op counting + Horowitz energy model (paper Table II)
+  telemetry    — structured kernel↔host activity side channel
 """
 
-from . import conversion, encoding, energy, fixed_point, lif, pruning, prng, snn
+from . import (conversion, encoding, energy, fixed_point, lif, pruning, prng,
+               snn, telemetry)
 
 __all__ = [
     "conversion", "encoding", "energy", "fixed_point", "lif", "pruning",
-    "prng", "snn",
+    "prng", "snn", "telemetry",
 ]

@@ -33,6 +33,7 @@ __all__ = [
     "first_spike_readout",
     "count_readout",
     "membrane_readout",
+    "peak_membrane_readout",
     "stability_early_exit",
 ]
 
@@ -93,6 +94,19 @@ def count_readout(out_spikes_t: jax.Array) -> jax.Array:
 def membrane_readout(v_trace_t: jax.Array) -> jax.Array:
     """Argmax of time-integrated membrane potential (ANN-conversion readout)."""
     return jnp.argmax(jnp.sum(v_trace_t.astype(jnp.int64), axis=0), axis=-1)
+
+
+def peak_membrane_readout(v_trace_t: jax.Array) -> jax.Array:
+    """Argmax of peak membrane potential over the window.
+
+    The ``membrane`` readout of the integer engine (core.snn.readout_pred):
+    the max-fold is associative, so a per-layer running-peak accumulator
+    carried across window chunks reproduces it exactly without a trace
+    buffer — which is what lets this readout stream through the serving
+    engines (the streamed twin of the v_peak state in
+    kernels.fused_snn / serve.snn_engine.LaneState).
+    """
+    return jnp.argmax(jnp.max(v_trace_t, axis=0), axis=-1)
 
 
 def stability_early_exit(pred_t: jax.Array, patience: int) -> jax.Array:

@@ -27,6 +27,7 @@ import jax
 import jax.numpy as jnp
 
 from . import encoding, fixed_point, lif, pruning
+from .telemetry import (ChunkTelemetry, layer_tile_skips, resolve_sparse_skip)
 
 __all__ = [
     "SNNConfig",
@@ -82,6 +83,13 @@ class SNNConfig:
     # (bit-identical either way — skipped tiles contribute exactly zero).
     # None defers to the REPRO_SPARSE_SKIP env default (on).
     sparse_skip: bool | None = None
+    # Masked-vs-MXU dispatch boundary for the runtime density dispatch
+    # (kernels.ops.spike_matmul_op mode="auto") and the baseline the
+    # serving controller (serve.telemetry) retunes from live traffic.
+    # None resolves REPRO_SPIKE_DENSITY_THRESHOLD → the historical
+    # kernels.ops.SPIKE_DENSITY_THRESHOLD default (0.25).  Value-neutral
+    # by construction: both datapaths compute the identical contraction.
+    spike_density_threshold: float | None = None
     emit_trace: bool = True                    # False: no v/spike-train outputs
                                                # (prediction-only serving)
     # Float-threshold used during training; the int path scales it (below).
@@ -263,19 +271,25 @@ def resolve_backend(cfg: SNNConfig, backend: str | None = None,
 
 def readout_pred(counts: jax.Array, first_t: jax.Array, v_final: jax.Array,
                  readout: str, num_steps: int,
-                 v_trace: jax.Array | None = None) -> jax.Array:
+                 v_trace: jax.Array | None = None,
+                 v_peak: jax.Array | None = None) -> jax.Array:
     """Per-lane prediction under the configured readout.
 
     The single source of truth shared by ``snn_apply_int``, the streaming
     engine's stability gate / harvest path, and (mirrored op-for-op) the
     gated fused kernel.  ``count``: spike-register argmax.  ``first_spike``:
     earliest-spiking class, membrane potential as the no-spike tiebreak.
-    ``membrane``: peak-membrane readout over the trace.
+    ``membrane``: peak-membrane readout — from the carried per-lane peak
+    accumulator ``v_peak`` (the streaming form: max is associative, so the
+    chunked running peak is bit-identical to the one-shot maximum) or,
+    when only a trace is at hand, from ``max(v_trace)`` over time.
     """
     if readout == "count":
         return jnp.argmax(counts, axis=-1)
     if readout == "membrane":
-        return pruning.membrane_readout(v_trace)
+        if v_peak is not None:
+            return jnp.argmax(v_peak, axis=-1)
+        return pruning.peak_membrane_readout(v_trace)
     # Two score tiers: any class that spiked outranks every membrane-only
     # class (spiked tier is additive, large + (T - first), so it cannot
     # overflow int32 for any realistic window — (T - first)·large would
@@ -300,9 +314,15 @@ def snn_apply_int(params_q: dict, pixels_u8: jax.Array, prng_state: jax.Array,
       prng_state: (batch, n_in) uint32 xorshift lanes.
 
     Returns dict(pred, spike_counts, v_trace, v_final, active_adds,
-                 input_spikes, first_spike_t, prng_state).  ``input_spikes``
-    is None on the fused backend — the spike train intentionally never
-    exists as a tensor there.
+                 input_spikes, first_spike_t, prng_state, v_peak,
+                 telemetry).  ``input_spikes`` is None on the fused
+    backend — the spike train intentionally never exists as a tensor
+    there.  ``v_peak`` is the per-layer peak-membrane tuple;
+    ``telemetry`` a ``core.telemetry.ChunkTelemetry`` — both produced
+    bit-identically by every backend (the fused kernels emit them as
+    kernel outputs, the jnp paths re-derive them), so the activity side
+    channel is cross-checkable exactly like the datapath.  Both are None
+    when ``cfg.emit_trace`` is off.
     """
     b = resolve_backend(cfg, backend, len(params_q["layers"]),
                         layer_sizes=_param_sizes(params_q))
@@ -315,9 +335,11 @@ def snn_apply_int(params_q: dict, pixels_u8: jax.Array, prng_state: jax.Array,
         res = _apply_int_reference(params_q, pixels_u8, prng_state, cfg)
 
     # NB: no non-array metadata in the result — callers jit this function.
+    vp = res.get("v_peak")
     res["pred"] = readout_pred(res["spike_counts"], res["first_spike_t"],
                                res["v_final"], cfg.readout, cfg.num_steps,
-                               v_trace=res["v_trace"])
+                               v_trace=res["v_trace"],
+                               v_peak=None if vp is None else vp[-1])
     return res
 
 
@@ -349,7 +371,41 @@ def _apply_int_fused(params_q, pixels_u8, prng_state, cfg: SNNConfig, *,
         "input_spikes": None,
         "first_spike_t": k["first_spike_t"],
         "prng_state": k["prng_state"],
+        "v_peak": k["v_peak"],
+        "telemetry": k["telemetry"],
     }
+
+
+def _derive_stack_telemetry(layer_ins, layer_outs, layer_vtr,
+                            cfg: SNNConfig):
+    """Telemetry + peaks re-derived from the staged/reference spike trains.
+
+    The jnp mirror of the fused kernel's side channel: per layer, a
+    neuron is enabled at step t iff it has not fired before t (or pruning
+    is off), the input-spike count is the layer's consumed activity, and
+    the tile counter replays the launch-geometry skip predicates via
+    ``core.telemetry.layer_tile_skips`` on the same spike/enable state —
+    which is what makes telemetry bit-checkable across all four backends.
+    Returns ``(ChunkTelemetry, v_peak tuple)``.
+    """
+    ss = resolve_sparse_skip(cfg.sparse_skip)
+    n_spk_l, n_en_l, tiles_l, peaks = [], [], [], []
+    for x, out, vtr in zip(layer_ins, layer_outs, layer_vtr):
+        xb = x.astype(bool)
+        if cfg.active_pruning:
+            out_i = out.astype(jnp.int32)
+            en = (jnp.cumsum(out_i, axis=0) - out_i) == 0   # (T, B, n_out)
+        else:
+            en = jnp.ones(out.shape, bool)
+        n_spk_l.append(jnp.sum(xb.astype(jnp.int32), axis=-1))   # (T, B)
+        n_en_l.append(jnp.sum(en.astype(jnp.int32), axis=-1))
+        tiles_l.append(jax.vmap(
+            lambda xt, et: layer_tile_skips(xt, et, sparse_skip=ss))(xb, en))
+        peaks.append(jnp.max(vtr, axis=0))
+    tel = ChunkTelemetry(n_spk=jnp.stack(n_spk_l, axis=1),
+                         n_en=jnp.stack(n_en_l, axis=1),
+                         tiles_skipped=jnp.stack(tiles_l, axis=1))
+    return tel, tuple(peaks)
 
 
 def _apply_int_staged(params_q, pixels_u8, prng_state, cfg: SNNConfig):
@@ -358,25 +414,22 @@ def _apply_int_staged(params_q, pixels_u8, prng_state, cfg: SNNConfig):
     spikes, prng_next = ops.poisson_encode_op(
         pixels_u8, prng_state, cfg.num_steps)
     x = spikes
-    adds = jnp.zeros(spikes.shape[:2], jnp.int32)              # (T, B)
+    layer_ins, layer_outs, layer_vtr = [], [], []
     for layer in params_q["layers"]:
-        layer_in = x
+        layer_ins.append(x)
         x, v_trace, v_final = ops.lif_forward_op(
             x, layer["w_q"], decay_shift=cfg.lif.decay_shift,
             v_threshold=cfg.lif.v_threshold, v_rest=cfg.lif.v_rest,
             v_min=cfg.lif.v_min, v_max=cfg.lif.v_max,
             active_pruning=cfg.active_pruning)
-        # Energy side channel, re-derived from the spike streams: a neuron
-        # is enabled at step t iff it has not fired before t (or pruning is
-        # off); summed over layers, like the fused kernel's counter.
-        n_spk = jnp.sum(layer_in.astype(jnp.int32), axis=-1)   # (T, B)
-        if cfg.active_pruning:
-            fired_before = jnp.cumsum(x.astype(jnp.int32), axis=0) \
-                - x.astype(jnp.int32)
-            n_en = jnp.sum((fired_before == 0).astype(jnp.int32), axis=-1)
-        else:
-            n_en = jnp.full_like(n_spk, x.shape[-1])
-        adds = adds + n_spk * n_en
+        layer_outs.append(x)
+        layer_vtr.append(v_trace)
+    # Energy + activity side channels, re-derived from the spike streams
+    # (the fused kernel's counters, double-entry style): telemetry adds
+    # summed over layers ARE the executed-add channel.
+    telemetry, v_peak = _derive_stack_telemetry(layer_ins, layer_outs,
+                                                layer_vtr, cfg)
+    adds = jnp.sum(telemetry.adds, axis=1)                     # (T, B)
     out_spikes = x
     counts = jnp.sum(out_spikes.astype(jnp.int32), axis=0)
     t_idx = jnp.arange(cfg.num_steps, dtype=jnp.int32)[:, None, None]
@@ -389,6 +442,8 @@ def _apply_int_staged(params_q, pixels_u8, prng_state, cfg: SNNConfig):
         "input_spikes": spikes,
         "first_spike_t": first_t,
         "prng_state": prng_next,
+        "v_peak": v_peak,
+        "telemetry": telemetry,
     }
 
 
@@ -402,20 +457,32 @@ def _apply_int_reference(params_q, pixels_u8, prng_state, cfg: SNNConfig):
             params_q["layers"][0]["w_q"], pixels_u8, prng_state, cfg)
         spikes = res["input_spikes"]
         adds = res["active_adds"]
+        layer_ins = [spikes]
+        layer_outs = [res["spikes"]]
+        layer_vtr = [res["v_trace"]]
     else:
         spikes, prng_next = encoding.poisson_encode_hw(
             pixels_u8, prng_state, cfg.num_steps)
         res = None
         adds = 0
         x = spikes
+        layer_ins, layer_outs, layer_vtr = [], [], []
         for layer in params_q["layers"]:
+            layer_ins.append(x)
             res = lif.run_lif_int(x, layer["w_q"], cfg.lif,
                                   active_pruning=cfg.active_pruning,
                                   dot_impl=cfg.dot_impl)
             # executed adds summed over layers (fused-kernel counter parity)
             adds = adds + res["active_adds"]
             x = res["spikes"]
+            layer_outs.append(x)
+            layer_vtr.append(res["v_trace"])
 
+    if layer_vtr[0] is not None:
+        telemetry, v_peak = _derive_stack_telemetry(layer_ins, layer_outs,
+                                                    layer_vtr, cfg)
+    else:                                  # emit_trace=False serving mode
+        telemetry, v_peak = None, None
     out_spikes = res["spikes"]                       # (T, batch, n_out)
     counts = jnp.sum(out_spikes.astype(jnp.int32), axis=0)
     T = cfg.num_steps
@@ -429,6 +496,8 @@ def _apply_int_reference(params_q, pixels_u8, prng_state, cfg: SNNConfig):
         "input_spikes": spikes,
         "first_spike_t": first_t,
         "prng_state": prng_next,
+        "v_peak": v_peak,
+        "telemetry": telemetry,
     }
 
 
@@ -490,35 +559,48 @@ def _fused_encode_lif(w_q: jax.Array, pixels_u8: jax.Array,
 def snn_int_stack_step(rng: jax.Array, pixels_u8: jax.Array,
                        states: tuple, weights: tuple,
                        lif_cfg: lif.LIFConfig, *, dot_impl: str = "int32",
-                       active_pruning: bool = False):
+                       active_pruning: bool = False,
+                       sparse_skip: bool | None = None):
     """One fused timestep through the WHOLE layer stack.
 
     Layer 0 runs :func:`encode_lif_timestep` (the encoder+LIF single source
     of truth); deeper layers feed each fired vector straight into the next
     Σ W·S — the jnp mirror of the multi-layer megakernel's static layer
-    loop.  Returns ``(rng, new_states, fired_out, adds)`` where ``adds`` is
-    the executed-add count summed over layers (energy side channel).
+    loop.  Returns ``(rng, new_states, fired_out, adds, tel)`` where
+    ``adds`` is the executed-add count summed over layers (energy side
+    channel) and ``tel`` is this step's telemetry row — ``n_spk``/``n_en``
+    (L, B) i32 and ``tiles`` (L, n_blocks) i32, the jnp mirror of the
+    megakernel's side channel (``sparse_skip`` resolves the same
+    REPRO_SPARSE_SKIP env rule, so the tile counter matches the kernel's
+    under the CI forcing).
     """
+    ss = resolve_sparse_skip(sparse_skip)
     rng, st0, fired, s_t = encode_lif_timestep(
         rng, pixels_u8, states[0], weights[0], lif_cfg, dot_impl=dot_impl,
         active_pruning=active_pruning)
-    adds = (jnp.sum(s_t.astype(jnp.int32), axis=-1)
-            * jnp.sum(states[0].enable.astype(jnp.int32), axis=-1))
+    n_spk = [jnp.sum(s_t.astype(jnp.int32), axis=-1)]
+    n_en = [jnp.sum(states[0].enable.astype(jnp.int32), axis=-1)]
+    tiles = [layer_tile_skips(s_t, states[0].enable, sparse_skip=ss)]
+    adds = n_spk[0] * n_en[0]
     new_states = [st0]
     x = fired
     for st, layer_w in zip(states[1:], weights[1:]):
+        n_spk.append(jnp.sum(x.astype(jnp.int32), axis=-1))
+        n_en.append(jnp.sum(st.enable.astype(jnp.int32), axis=-1))
+        tiles.append(layer_tile_skips(x, st.enable, sparse_skip=ss))
         current = lif.synaptic_current_int(x, layer_w, dot_impl)
         current = jnp.where(st.enable, current, 0)
         new_st, fired = lif.lif_step_int(st, current, lif_cfg)
-        adds = adds + (jnp.sum(x.astype(jnp.int32), axis=-1)
-                       * jnp.sum(st.enable.astype(jnp.int32), axis=-1))
+        adds = adds + n_spk[-1] * n_en[-1]
         if active_pruning:
             new_st = new_st._replace(
                 enable=jnp.logical_and(new_st.enable,
                                        jnp.logical_not(fired)))
         new_states.append(new_st)
         x = fired
-    return rng, tuple(new_states), x, adds
+    tel = {"n_spk": jnp.stack(n_spk), "n_en": jnp.stack(n_en),
+           "tiles": jnp.stack(tiles)}
+    return rng, tuple(new_states), x, adds, tel
 
 
 class SNNWindowState(NamedTuple):
@@ -532,6 +614,7 @@ class SNNWindowState(NamedTuple):
     rng: jax.Array          # (B, n_in) uint32 xorshift lanes
     v: tuple                # per-layer (B, n_l) int32 membranes
     en: tuple               # per-layer (B, n_l) bool clock-gates
+    v_peak: tuple           # per-layer (B, n_l) int32 running peak membranes
     counts: jax.Array       # (B, n_out) int32 final-layer spike registers
     first: jax.Array        # (B, n_out) int32, sentinel = cfg.num_steps
     steps: jax.Array        # (B,) int32 window steps executed
@@ -547,6 +630,8 @@ def snn_window_init(params_q: dict, prng_state: jax.Array,
         v=tuple(jnp.full((batch, n), cfg.lif.v_rest, jnp.int32)
                 for n in sizes[1:]),
         en=tuple(jnp.ones((batch, n), bool) for n in sizes[1:]),
+        v_peak=tuple(jnp.full((batch, n), jnp.iinfo(jnp.int32).min,
+                              jnp.int32) for n in sizes[1:]),
         counts=jnp.zeros((batch, sizes[-1]), jnp.int32),
         first=jnp.full((batch, sizes[-1]), cfg.num_steps, jnp.int32),
         steps=jnp.zeros((batch,), jnp.int32),
@@ -564,8 +649,11 @@ def snn_window_chunk(params_q: dict, pixels_u8: jax.Array,
     explicitly raises, and an ``auto`` resolution that lands on staged —
     a stack too large even for weight streaming on TPU — falls back to
     the chunk-capable reference scan).  Returns ``(new_state, chunk)``
-    where ``chunk`` holds the per-step ``v_trace`` (chunk, B, n_out) and
-    ``active_adds`` (chunk, B) for this segment.
+    where ``chunk`` holds the per-step ``v_trace`` (chunk, B, n_out),
+    ``active_adds`` (chunk, B) and ``telemetry``
+    (``core.telemetry.ChunkTelemetry``) for this segment — concatenated
+    over any split of the window, all three are bit-identical to the
+    one-shot record, on every chunk-capable backend.
     """
     weights = tuple(layer["w_q"] for layer in params_q["layers"])
     requested = backend if backend is not None else cfg.backend
@@ -589,21 +677,25 @@ def snn_window_chunk(params_q: dict, pixels_u8: jax.Array,
             active_pruning=cfg.active_pruning,
             sparse_skip=cfg.sparse_skip,
             streamed=(b == "fused_streamed"),
-            init={"v": state.v, "en": state.en, "counts": state.counts,
-                  "first": state.first, "steps": state.steps})
+            init={"v": state.v, "en": state.en, "v_peak": state.v_peak,
+                  "counts": state.counts, "first": state.first,
+                  "steps": state.steps})
         new_state = SNNWindowState(
-            rng=k["prng_state"], v=k["v"], en=k["en"], counts=k["spike_counts"],
-            first=k["first_spike_t"], steps=k["steps"])
+            rng=k["prng_state"], v=k["v"], en=k["en"], v_peak=k["v_peak"],
+            counts=k["spike_counts"], first=k["first_spike_t"],
+            steps=k["steps"])
         return new_state, {"v_trace": k["v_trace"],
-                           "active_adds": k["active_adds"]}
+                           "active_adds": k["active_adds"],
+                           "telemetry": k["telemetry"]}
 
     def body(carry, _):
         st = carry
         layer_states = tuple(lif.LIFStateInt(v=v, enable=e)
                              for v, e in zip(st.v, st.en))
-        rng, new_states, fired, adds = snn_int_stack_step(
+        rng, new_states, fired, adds, tel = snn_int_stack_step(
             st.rng, pixels_u8, layer_states, weights, cfg.lif,
-            dot_impl=cfg.dot_impl, active_pruning=cfg.active_pruning)
+            dot_impl=cfg.dot_impl, active_pruning=cfg.active_pruning,
+            sparse_skip=cfg.sparse_skip)
         counts = st.counts + fired.astype(jnp.int32)
         first = jnp.where(
             jnp.logical_and(fired, st.first == cfg.num_steps),
@@ -612,12 +704,17 @@ def snn_window_chunk(params_q: dict, pixels_u8: jax.Array,
             rng=rng,
             v=tuple(s.v for s in new_states),
             en=tuple(s.enable for s in new_states),
+            v_peak=tuple(jnp.maximum(p, s.v)
+                         for p, s in zip(st.v_peak, new_states)),
             counts=counts, first=first, steps=st.steps + 1)
-        return new, (new_states[-1].v, adds)
+        return new, (new_states[-1].v, adds, tel["n_spk"], tel["n_en"],
+                     tel["tiles"])
 
-    new_state, (vtr, adds) = jax.lax.scan(
+    new_state, (vtr, adds, tspk, ten, ttile) = jax.lax.scan(
         body, state, None, length=chunk_steps)
-    return new_state, {"v_trace": vtr, "active_adds": adds}
+    return new_state, {"v_trace": vtr, "active_adds": adds,
+                       "telemetry": ChunkTelemetry(
+                           n_spk=tspk, n_en=ten, tiles_skipped=ttile)}
 
 
 def snn_loss(params: dict, pixels01: jax.Array, labels: jax.Array,

@@ -1,0 +1,214 @@
+"""Structured kernel↔host telemetry: the runtime's activity side channel.
+
+The paper's efficiency story is *event-driven* — work should track the
+spike activity the hardware actually observes (Bouvier et al. 2020 call
+activity monitoring the standard control plane of neuromorphic runtimes;
+SparrowSNN feeds measured spike statistics back into scheduling).  Until
+this module existed, the runtime steered itself with compile-time guesses:
+the masked-vs-MXU dispatch threshold was a hard-coded constant and the
+fused kernel's tile-skip decisions were invisible to the host even though
+the kernel computes every ingredient per step.
+
+:class:`ChunkTelemetry` is the structured record every integer-engine
+backend emits for a window chunk — per-step, per-layer spike counts,
+prune-enable occupancy and (derived) executed adds per lane, plus the
+per-block MXU tile pairs the event-driven contraction skipped.  The
+contract that makes it trustworthy is that telemetry is **bit-checkable
+cross-backend**: the fused megakernel emits it as extra kernel outputs,
+and the staged / reference / jnp-scan paths re-derive the identical
+numbers from their own state (``kernels.ref`` re-derives the tile
+geometry independently, double-entry-bookkeeping style), so a telemetry
+regression is caught exactly like a datapath regression.
+
+On top of the record, ``serve.telemetry`` builds the adaptive controller
+that retunes the dispatch threshold and picks chunk lengths from live
+traffic; this module only defines the channel and the pure helpers shared
+by every producer.
+"""
+
+from __future__ import annotations
+
+import os
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "ChunkTelemetry",
+    "MatmulTelemetry",
+    "DEFAULT_SPIKE_DENSITY_THRESHOLD",
+    "resolve_density_threshold",
+    "resolve_sparse_skip",
+    "layer_tile_skips",
+    "tiles_total",
+    "telemetry_partition_specs",
+    "concat_telemetry",
+]
+
+# The compile-time guess this subsystem exists to replace: below this
+# per-batch spike density the masked (event-driven) spike-matmul kernel
+# wins over the MXU dot.  Kept under its historical home as
+# ``kernels.ops.SPIKE_DENSITY_THRESHOLD`` too — it is now only the
+# *default* for ``SNNConfig.spike_density_threshold`` / the env override,
+# and the serving controller may retune the live value.
+DEFAULT_SPIKE_DENSITY_THRESHOLD = 0.25
+
+
+def resolve_density_threshold(threshold: float | None = None) -> float:
+    """Explicit value → env ``REPRO_SPIKE_DENSITY_THRESHOLD`` → default.
+
+    The resolution order mirrors ``REPRO_SPARSE_SKIP``: an explicit config
+    value always wins, the env var lets CI sweep the dispatch boundary
+    across a whole run without touching call sites, and the exported
+    module constant keeps its historical meaning as the default.
+    """
+    if threshold is not None:
+        return float(threshold)
+    env = os.environ.get("REPRO_SPIKE_DENSITY_THRESHOLD")
+    if env:
+        return float(env)
+    return DEFAULT_SPIKE_DENSITY_THRESHOLD
+
+
+def resolve_sparse_skip(sparse_skip: bool | None) -> bool:
+    """None → the REPRO_SPARSE_SKIP env default (on unless set to "0").
+
+    Resolved at trace time (``sparse_skip`` is a static argument
+    everywhere), which is what lets CI force the dense and sparse tile
+    paths across a whole test run without touching call sites.  The
+    single source of truth shared by the kernel launcher
+    (``kernels.ops``) and the jnp telemetry mirrors below.
+    """
+    if sparse_skip is None:
+        return os.environ.get("REPRO_SPARSE_SKIP", "1") != "0"
+    return bool(sparse_skip)
+
+
+class ChunkTelemetry(NamedTuple):
+    """Per-chunk activity record, identical across all four backends.
+
+    Shapes (``chunk`` = steps this launch executed, ``L`` = layers,
+    ``B`` = lanes, ``n_blocks`` = batch-block programs of the fused
+    launch geometry):
+
+      n_spk          (chunk, L, B) int32 — input spikes layer ``l``
+                     consumed at step ``t`` for each lane (layer 0 =
+                     encoder output).  Zeroed for lanes the stability
+                     gate had already frozen, matching the executed-add
+                     channel.
+      n_en           (chunk, L, B) int32 — prune-enable occupancy: how
+                     many of layer ``l``'s neurons were still enabled.
+                     Zeroed for frozen lanes.
+      tiles_skipped  (chunk, L, n_blocks) int32 — 128×128 MXU tile pairs
+                     the event-driven contraction skipped per batch
+                     block (0 everywhere when ``sparse_skip`` is off).
+                     Block-level by construction: the skip predicate
+                     spans all lanes of a block, so this leaf tracks the
+                     launch geometry, not individual lanes.
+
+    ``adds`` is derived, not stored: per lane the executed synaptic adds
+    of layer ``l`` are exactly ``n_spk · n_en`` (a skipped tile pair has
+    zero of one factor), so the record stays minimal and the invariant
+    "telemetry adds == the frozen energy counters" is checkable rather
+    than tautological.
+    """
+
+    n_spk: jax.Array
+    n_en: jax.Array
+    tiles_skipped: jax.Array
+
+    @property
+    def adds(self) -> jax.Array:
+        """Executed synaptic adds per (step, layer, lane) — n_spk · n_en."""
+        return self.n_spk * self.n_en
+
+    def densities(self, layer_sizes) -> jax.Array:
+        """Observed input-spike density per (step, layer, lane) in [0, 1].
+
+        Layer ``l``'s fan-in is ``layer_sizes[l]`` — the quantity the
+        masked-vs-MXU dispatch threshold is compared against.
+        """
+        fan_in = jnp.asarray(layer_sizes[:-1], jnp.float32)
+        return self.n_spk.astype(jnp.float32) / fan_in[None, :, None]
+
+
+class MatmulTelemetry(NamedTuple):
+    """Side channel of one ``spike_matmul_op(mode="auto")`` dispatch."""
+
+    density: jax.Array     # f32 scalar — observed batch spike density
+    used_masked: jax.Array  # bool scalar — which datapath the cond took
+
+
+def _pad_axis(x: jax.Array, axis: int, mult: int) -> jax.Array:
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def tiles_total(layer_sizes) -> tuple[int, ...]:
+    """Total 128×128 tile pairs per layer, per batch block, per step."""
+    from ..kernels.fused_snn import LANE, _pad128
+    sizes = [_pad128(int(n)) for n in layer_sizes]
+    return tuple((k // LANE) * (n // LANE)
+                 for k, n in zip(sizes[:-1], sizes[1:]))
+
+
+def layer_tile_skips(x: jax.Array, en: jax.Array, *,
+                     sparse_skip: bool) -> jax.Array:
+    """jnp mirror of the fused kernel's per-layer tile-skip predicates.
+
+    ``x``: (B, n_in) bool input spikes; ``en``: (B, n_out) bool enables.
+    Returns (n_blocks,) int32 — skipped (K-tile, N-tile) pairs per batch
+    block, with exactly the launch geometry ``kernels.ops`` pads to:
+    neuron axes to 128 (padded pixels never spike, padded neurons are
+    disabled), lanes to the ``block_b_for`` batch block.  A pair is
+    skipped when its K-tile carries no spike in any lane of the block OR
+    its output tile is fully pruned across the block — the
+    ``lax.cond`` predicate of ``fused_snn._tiled_contraction``, which is
+    why this pure function is bit-checkable against the kernel's own
+    counter.  All-jnp, so it runs inside scan/jit/shard_map bodies.
+    """
+    from ..kernels.fused_snn import LANE, block_b_for
+    B = x.shape[0]
+    bB = block_b_for(B)
+    xp = _pad_axis(_pad_axis(x.astype(bool), 0, bB), 1, LANE)
+    ep = _pad_axis(_pad_axis(en.astype(bool), 0, bB), 1, LANE)
+    nb = xp.shape[0] // bB
+    nkt, nnt = xp.shape[1] // LANE, ep.shape[1] // LANE
+    any_x = jnp.any(xp.reshape(nb, bB, nkt, LANE), axis=(1, 3))  # (nb, nkt)
+    any_e = jnp.any(ep.reshape(nb, bB, nnt, LANE), axis=(1, 3))  # (nb, nnt)
+    live = jnp.logical_and(any_x[:, :, None], any_e[:, None, :])
+    if not sparse_skip:
+        return jnp.zeros((nb,), jnp.int32)
+    return jnp.sum(jnp.logical_not(live), axis=(1, 2)).astype(jnp.int32)
+
+
+def telemetry_partition_specs(axis_name: str | None = "data"):
+    """PartitionSpecs of a ChunkTelemetry on a data-parallel lane mesh.
+
+    The per-lane leaves shard on the lane axis (last); the tile leaf
+    shards on its batch-*block* axis, which nests inside the lane axis
+    (device-local blocks concatenate to the global block list).  No leaf
+    looks across devices, so the record composes with the engines'
+    collective-free ``shard_map`` chunk.
+    """
+    from jax.sharding import PartitionSpec as P
+    p = P(None, None, axis_name)
+    return ChunkTelemetry(n_spk=p, n_en=p, tiles_skipped=p)
+
+
+def concat_telemetry(chunks) -> ChunkTelemetry:
+    """Concatenate per-chunk records along the step axis.
+
+    Telemetry is per-step, so the concatenation over any split of a
+    window is bit-identical to the one-shot record — the same invariant
+    the carried lane state satisfies.
+    """
+    chunks = list(chunks)
+    return ChunkTelemetry(*[jnp.concatenate([getattr(c, f) for c in chunks],
+                                            axis=0)
+                            for f in ChunkTelemetry._fields])

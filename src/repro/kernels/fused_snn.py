@@ -39,10 +39,19 @@ al. 2019).  This kernel restores the RTL's event-stream locality for an
     against the current slab's contraction (and the tile-skip predicates
     still gating the compute).
   * the kernel is **resumable**: it accepts initial per-layer membrane and
-    enable state, the PRNG lanes, the spike-count / first-spike registers
-    and a per-lane step counter, and returns the advanced versions — so a
-    T-step window split into chunks is bit-identical to one launch
-    (serve.snn_engine streams through this).
+    enable state, per-layer peak-membrane accumulators, the PRNG lanes,
+    the spike-count / first-spike registers and a per-lane step counter,
+    and returns the advanced versions — so a T-step window split into
+    chunks is bit-identical to one launch (serve.snn_engine streams
+    through this).  The carried peak accumulator is what lets the
+    ``membrane`` readout stream without a per-step trace buffer.
+  * every launch also emits the **telemetry side channel**
+    (``core.telemetry.ChunkTelemetry``): per-step, per-layer input-spike
+    counts and prune-enable occupancy per lane, plus the per-block MXU
+    tile pairs the event-driven contraction skipped — the measured
+    activity the serving layer's adaptive dispatch controller consumes.
+    The jnp backends re-derive the identical record, so telemetry is
+    bit-checkable exactly like the datapath.
   * optionally the kernel also runs the serving-layer **stability gate**
     per step (``gated=True``): a lane whose running prediction has been
     stable for ``patience`` steps freezes in place (PRNG, membranes,
@@ -134,16 +143,18 @@ def stack_vmem_bytes(layer_sizes, block_b: int = DEFAULT_BLOCK_B,
     """
     sizes = [_pad128(int(n)) for n in layer_sizes]
     bB = block_b
+    L = len(sizes) - 1
     max_out = max(sizes[1:])
     total = sizes[0] * bB * (1 + 4)                      # pixels + PRNG
     for n_in, n_out in zip(sizes[:-1], sizes[1:]):
         if not streamed:
             total += n_in * n_out * 2                    # packed int8 hi+lo
-        total += bB * n_out * (4 + 1 + 4)                # v + en + current
+        total += bB * n_out * (4 + 4 + 1 + 4)            # v + v_peak + en + current
     if streamed:
         total += 2 * 2 * LANE * max_out                  # 2-slot DMA slabs
     total += LANE * max_out * 4                          # widened i32 tile
     total += num_steps * bB * sizes[-1] * 4              # v_trace block
+    total += num_steps * L * (2 * bB + 1) * 4            # telemetry blocks
     total += bB * max(sizes) * 8                         # spike temporaries
     return total
 
@@ -177,11 +188,17 @@ def _tiled_contraction(x, en, read_tile, n_out_pad: int, sparse_skip: bool,
     so dense and sparse execution are bit-identical — the skip saves the
     widen + MXU pass, not correctness (integer addition is exact, so the
     K-tiled accumulation order cannot change results either).
+
+    Returns ``(result, skipped)`` where ``skipped`` is the scalar i32
+    count of tile pairs the predicates skipped this call (0 when
+    ``sparse_skip`` is off) — the telemetry side channel's per-block
+    tile counter, emitted instead of staying a kernel-private decision.
     """
     bB, n_in_pad = x.shape
     nkt, nnt = n_in_pad // LANE, n_out_pad // LANE
     zeros = jnp.zeros((bB, LANE), jnp.int32)
     accs = [zeros] * nnt
+    skipped = jnp.int32(0)
     for kt in range(nkt):
         if pre_k is not None:
             pre_k(kt)
@@ -197,11 +214,13 @@ def _tiled_contraction(x, en, read_tile, n_out_pad: int, sparse_skip: bool,
 
             if sparse_skip:
                 live = jnp.logical_and(jnp.any(x_t), jnp.any(en_t))
+                skipped = skipped + (1 - live.astype(jnp.int32))
                 accs[nt] = accs[nt] + jax.lax.cond(live, tile,
                                                    lambda: zeros)
             else:
                 accs[nt] = accs[nt] + tile()
-    return accs[0] if nnt == 1 else jnp.concatenate(accs, axis=-1)
+    out = accs[0] if nnt == 1 else jnp.concatenate(accs, axis=-1)
+    return out, skipped
 
 
 def _stack_kernel(*refs, num_layers: int, chunk_steps: int, window_steps: int,
@@ -215,6 +234,7 @@ def _stack_kernel(*refs, num_layers: int, chunk_steps: int, window_steps: int,
     w_refs = [next(it) for _ in range(L)]   # packed (2, K, N) int8 planes
     v_refs = [next(it) for _ in range(L)]
     en_refs = [next(it) for _ in range(L)]
+    vp_refs = [next(it) for _ in range(L)]  # per-layer peak membranes
     cnt_ref, first_ref, steps_ref = next(it), next(it), next(it)
     if gated:
         act_ref, gprev_ref, gstreak_ref = next(it), next(it), next(it)
@@ -222,6 +242,8 @@ def _stack_kernel(*refs, num_layers: int, chunk_steps: int, window_steps: int,
         next(it), next(it), next(it), next(it), next(it))
     v_outs = [next(it) for _ in range(L)]
     en_outs = [next(it) for _ in range(L)]
+    vp_outs = [next(it) for _ in range(L)]
+    tspk_out, ten_out, ttile_out = next(it), next(it), next(it)
     steps_out = next(it)
     if gated:
         act_out, gprev_out, gstreak_out = next(it), next(it), next(it)
@@ -247,6 +269,7 @@ def _stack_kernel(*refs, num_layers: int, chunk_steps: int, window_steps: int,
             st_ref[...],
             tuple(v_refs[l][...] for l in range(L)),
             tuple(en_refs[l][...] != 0 for l in range(L)),
+            tuple(vp_refs[l][...] for l in range(L)),
             cnt_ref[...],
             first_ref[...],
             steps_ref[...],                            # (bB, 1) i32
@@ -257,9 +280,10 @@ def _stack_kernel(*refs, num_layers: int, chunk_steps: int, window_steps: int,
 
         def body(t, carry):
             if gated:
-                s, vs, ens, cnt, first, steps, act, gprev, gstreak = carry
+                (s, vs, ens, vps, cnt, first, steps, act, gprev,
+                 gstreak) = carry
             else:
-                s, vs, ens, cnt, first, steps = carry
+                s, vs, ens, vps, cnt, first, steps = carry
 
             # --- encoder: xorshift32 step + 8-bit comparator (Fig. 2) ----
             s_new = s ^ (s << 13)
@@ -272,7 +296,8 @@ def _stack_kernel(*refs, num_layers: int, chunk_steps: int, window_steps: int,
 
             # --- static layer loop: spikes stay in VMEM between layers ---
             adds_t = jnp.zeros(steps.shape, jnp.int32)  # (bB, 1)
-            new_vs, new_ens = [], []
+            new_vs, new_ens, new_vps = [], [], []
+            spk_t, en_t_tel, skip_t = [], [], []       # telemetry rows
             base = 0                                   # streamed slab cursor
             for l in range(L):
                 en = ens[l]
@@ -300,8 +325,9 @@ def _stack_kernel(*refs, num_layers: int, chunk_steps: int, window_steps: int,
                         return w_refs[l][:, kt * LANE:(kt + 1) * LANE,
                                          nt * LANE:(nt + 1) * LANE]
 
-                cur = _tiled_contraction(x, en, read_tile, n_pads[l],
-                                         sparse_skip, pre_k)
+                cur, skipped = _tiled_contraction(x, en, read_tile,
+                                                  n_pads[l], sparse_skip,
+                                                  pre_k)
                 cur = jnp.where(en, cur, 0)            # pruning clock-gate
                 v_int = jnp.clip(vs[l] + cur, v_min, v_max)
                 v_leak = v_int - (v_int >> decay_shift)
@@ -317,10 +343,14 @@ def _stack_kernel(*refs, num_layers: int, chunk_steps: int, window_steps: int,
                 n_spk = jnp.sum(x.astype(jnp.int32), axis=-1, keepdims=True)
                 n_en = jnp.sum(en.astype(jnp.int32), axis=-1, keepdims=True)
                 adds_t = adds_t + n_spk * n_en
+                spk_t.append(n_spk[:, 0])
+                en_t_tel.append(n_en[:, 0])
+                skip_t.append(skipped)
                 if active_pruning:
                     en = jnp.logical_and(en, jnp.logical_not(fired))
                 new_vs.append(v_new)
                 new_ens.append(en)
+                new_vps.append(jnp.maximum(vps[l], v_new))
                 x = fired                              # next layer's input
 
             # --- final-layer readout registers ---------------------------
@@ -328,6 +358,14 @@ def _stack_kernel(*refs, num_layers: int, chunk_steps: int, window_steps: int,
             first_new = jnp.where(
                 jnp.logical_and(x, first == window_steps), steps, first)
             v_last = new_vs[-1]
+
+            # telemetry rows for this step: (L, bB) spike/enable counts and
+            # (L,) per-block skipped tiles.  The tile row stays unmasked in
+            # gated mode — it records what the block's contraction actually
+            # executed/skipped, and frozen lanes still sit in the block.
+            tel_spk = jnp.stack(spk_t)
+            tel_en = jnp.stack(en_t_tel)
+            ttile_out[t, :, 0] = jnp.stack(skip_t)
 
             if gated:
                 # stability gate, mirroring serve.snn_engine.stream_chunk's
@@ -339,6 +377,10 @@ def _stack_kernel(*refs, num_layers: int, chunk_steps: int, window_steps: int,
                         cnt_new > 0, large + (window_steps - first_new),
                         jnp.clip(v_last, -large + 1, large - 1))
                     pred = _first_argmax(score, n_out)
+                elif readout == "membrane":
+                    # streamed peak-membrane readout off the carried
+                    # accumulator — no trace buffer needed
+                    pred = _first_argmax(new_vps[-1], n_out)
                 else:                                  # count
                     pred = _first_argmax(cnt_new, n_out)
                 streak_raw = jnp.where(pred == gprev, gstreak + 1, 0)
@@ -357,29 +399,38 @@ def _stack_kernel(*refs, num_layers: int, chunk_steps: int, window_steps: int,
                 new_vs = [keep(nv, ov) for nv, ov in zip(new_vs, vs)]
                 new_ens = [jnp.where(act, ne, oe)
                            for ne, oe in zip(new_ens, ens)]
+                new_vps = [keep(nv, ov) for nv, ov in zip(new_vps, vps)]
                 cnt_new = keep(cnt_new, cnt)
                 first_new = keep(first_new, first)
                 gprev_new = keep(gprev_new, gprev)
                 gstreak_new = keep(gstreak_new, gstreak)
                 vtr_out[t, :, :] = new_vs[-1]
                 adds_out[t, :] = jnp.where(act, adds_t, 0)[:, 0]
-                return (s_new, tuple(new_vs), tuple(new_ens), cnt_new,
-                        first_new, steps_new, still, gprev_new, gstreak_new)
+                # frozen lanes execute nothing, so their telemetry rows are
+                # zero — matching the frozen executed-add channel above
+                lane_act = act[:, 0][None, :]          # (1, bB)
+                tspk_out[t, :, :] = jnp.where(lane_act, tel_spk, 0)
+                ten_out[t, :, :] = jnp.where(lane_act, tel_en, 0)
+                return (s_new, tuple(new_vs), tuple(new_ens),
+                        tuple(new_vps), cnt_new, first_new, steps_new,
+                        still, gprev_new, gstreak_new)
 
             vtr_out[t, :, :] = v_last
             adds_out[t, :] = adds_t[:, 0]
-            return (s_new, tuple(new_vs), tuple(new_ens), cnt_new, first_new,
-                    steps + 1)
+            tspk_out[t, :, :] = tel_spk
+            ten_out[t, :, :] = tel_en
+            return (s_new, tuple(new_vs), tuple(new_ens), tuple(new_vps),
+                    cnt_new, first_new, steps + 1)
 
         carry_f = jax.lax.fori_loop(0, chunk_steps, body, carry0)
         if gated:
-            (s_f, vs_f, ens_f, cnt_f, first_f, steps_f, act_f, gp_f,
+            (s_f, vs_f, ens_f, vps_f, cnt_f, first_f, steps_f, act_f, gp_f,
              gs_f) = carry_f
             act_out[...] = act_f.astype(jnp.int32)
             gprev_out[...] = gp_f
             gstreak_out[...] = gs_f
         else:
-            s_f, vs_f, ens_f, cnt_f, first_f, steps_f = carry_f
+            s_f, vs_f, ens_f, vps_f, cnt_f, first_f, steps_f = carry_f
         cnt_out[...] = cnt_f
         first_out[...] = first_f
         st_out[...] = s_f
@@ -387,6 +438,7 @@ def _stack_kernel(*refs, num_layers: int, chunk_steps: int, window_steps: int,
         for l in range(num_layers):
             v_outs[l][...] = vs_f[l]
             en_outs[l][...] = ens_f[l].astype(jnp.uint8)
+            vp_outs[l][...] = vps_f[l]
 
     if streamed:
         max_out = max(n_pads)
@@ -399,7 +451,7 @@ def _stack_kernel(*refs, num_layers: int, chunk_steps: int, window_steps: int,
 
 
 def fused_snn_stack_pallas(pixels_u8: jax.Array, state_u32: jax.Array,
-                           weights_packed, v_init, en_init,
+                           weights_packed, v_init, en_init, vp_init,
                            counts_init: jax.Array,
                            first_init: jax.Array, steps_init: jax.Array,
                            gate_init=None, *, chunk_steps: int,
@@ -421,6 +473,9 @@ def fused_snn_stack_pallas(pixels_u8: jax.Array, state_u32: jax.Array,
       pixels_u8/state_u32: (B, n_in)
       weights_packed: [(2, n_l, n_{l+1}) int8] from :func:`pack_weights`
       v_init/en_init: per-layer (B, n_{l+1}) int32 / uint8
+      vp_init: per-layer (B, n_{l+1}) int32 carried peak membranes
+        (INT32_MIN at window start — max-folded per step, so a chunked
+        window's running peak is bit-identical to the one-shot maximum)
       counts_init/first_init: (B, n_out) int32 (first sentinel=window_steps)
       steps_init: (B, 1) int32 — per-lane absolute step counter
       gate_init: None, or (active u8, prev i32, streak i32) each (B, 1)
@@ -431,8 +486,10 @@ def fused_snn_stack_pallas(pixels_u8: jax.Array, state_u32: jax.Array,
     stacks whose resident footprint exceeds the VMEM budget.
 
     Returns (counts, v_trace (chunk,B,n_out), first, adds (chunk,B),
-    state_u32', v_final tuple, en_final tuple (uint8), steps', and — when
-    gated — (active', prev', streak')).
+    state_u32', v_final tuple, en_final tuple (uint8), v_peak tuple,
+    (tel_spk (chunk,L,B), tel_en (chunk,L,B),
+    tel_tiles (chunk,L,n_blocks)), steps', and — when gated —
+    (active', prev', streak')).
     """
     B, n_in = pixels_u8.shape
     L = len(weights_packed)
@@ -464,10 +521,12 @@ def fused_snn_stack_pallas(pixels_u8: jax.Array, state_u32: jax.Array,
     in_specs += [w_spec(w) for w in weights_packed]
     in_specs += [row(v.shape) for v in v_init]
     in_specs += [row(e.shape) for e in en_init]
+    in_specs += [row(v.shape) for v in vp_init]
     in_specs += [row(counts_init.shape), row(first_init.shape),
                  row(steps_init.shape)]
     inputs = ([pixels_u8, state_u32] + list(weights_packed) + list(v_init)
-              + list(en_init) + [counts_init, first_init, steps_init])
+              + list(en_init) + list(vp_init)
+              + [counts_init, first_init, steps_init])
     if gated:
         in_specs += [row(g.shape) for g in gate_init]
         inputs += list(gate_init)
@@ -492,6 +551,22 @@ def fused_snn_stack_pallas(pixels_u8: jax.Array, state_u32: jax.Array,
     for l in range(L):
         out_specs.append(row((B, sizes[l + 1])))
         out_shape.append(jax.ShapeDtypeStruct((B, sizes[l + 1]), jnp.uint8))
+    for l in range(L):                     # per-layer peak membranes
+        out_specs.append(row((B, sizes[l + 1])))
+        out_shape.append(jax.ShapeDtypeStruct((B, sizes[l + 1]), jnp.int32))
+    # telemetry side channel: per-step/layer spike + enable counts per
+    # lane, skipped tile pairs per batch block
+    n_blocks = grid[0]
+    out_specs += [
+        pl.BlockSpec((chunk_steps, L, bB), lambda i: (0, 0, i)),
+        pl.BlockSpec((chunk_steps, L, bB), lambda i: (0, 0, i)),
+        pl.BlockSpec((chunk_steps, L, 1), lambda i: (0, 0, i)),
+    ]
+    out_shape += [
+        jax.ShapeDtypeStruct((chunk_steps, L, B), jnp.int32),
+        jax.ShapeDtypeStruct((chunk_steps, L, B), jnp.int32),
+        jax.ShapeDtypeStruct((chunk_steps, L, n_blocks), jnp.int32),
+    ]
     out_specs.append(row((B, 1)))
     out_shape.append(jax.ShapeDtypeStruct((B, 1), jnp.int32))
     if gated:
@@ -506,8 +581,11 @@ def fused_snn_stack_pallas(pixels_u8: jax.Array, state_u32: jax.Array,
     cnt, vtr, first, adds, st_out = outs[:5]
     v_fin = tuple(outs[5:5 + L])
     en_fin = tuple(outs[5 + L:5 + 2 * L])
-    steps_out = outs[5 + 2 * L]
+    vp_fin = tuple(outs[5 + 2 * L:5 + 3 * L])
+    tel = tuple(outs[5 + 3 * L:8 + 3 * L])
+    steps_out = outs[8 + 3 * L]
     if gated:
-        return (cnt, vtr, first, adds, st_out, v_fin, en_fin, steps_out,
-                tuple(outs[6 + 2 * L:9 + 2 * L]))
-    return cnt, vtr, first, adds, st_out, v_fin, en_fin, steps_out
+        return (cnt, vtr, first, adds, st_out, v_fin, en_fin, vp_fin, tel,
+                steps_out, tuple(outs[9 + 3 * L:12 + 3 * L]))
+    return (cnt, vtr, first, adds, st_out, v_fin, en_fin, vp_fin, tel,
+            steps_out)

@@ -7,22 +7,33 @@ masked/MXU dispatch for the spike matmul, and unpadding of results.
 
 from __future__ import annotations
 
-import os
 from functools import partial
 
 import jax
 import jax.numpy as jnp
 
+from ..core.telemetry import (ChunkTelemetry, MatmulTelemetry,
+                              DEFAULT_SPIKE_DENSITY_THRESHOLD,
+                              resolve_density_threshold, resolve_sparse_skip)
 from . import fused_snn, lif_step, poisson_encode, spike_matmul
 
 __all__ = ["poisson_encode_op", "lif_forward_op", "spike_matmul_op",
            "fused_snn_op", "fused_snn_stack_op", "validate_weight_codes",
-           "SPIKE_DENSITY_THRESHOLD"]
+           "SPIKE_DENSITY_THRESHOLD", "resolve_density_threshold"]
 
 # Below this per-tile spike density the masked (event-driven) spike-matmul
 # kernel wins over the MXU dot; the ``mode="auto"`` runtime dispatch in
 # :func:`spike_matmul_op` branches on the *observed* density of the batch.
-SPIKE_DENSITY_THRESHOLD = 0.25
+# Kept under its historical name for backward compatibility — it is now
+# only the DEFAULT: the live value comes from ``SNNConfig``'s
+# ``spike_density_threshold`` / the ``REPRO_SPIKE_DENSITY_THRESHOLD`` env
+# override (``core.telemetry.resolve_density_threshold``), and the serving
+# controller may retune it from observed traffic.
+SPIKE_DENSITY_THRESHOLD = DEFAULT_SPIKE_DENSITY_THRESHOLD
+
+# window-start sentinel for the carried peak-membrane accumulator: the
+# first real membrane value always wins the max-fold
+V_PEAK_INIT = jnp.iinfo(jnp.int32).min
 
 
 def _use_interpret() -> bool:
@@ -53,16 +64,9 @@ def validate_weight_codes(weights) -> None:
                 f"use the staged or reference backend for wider codes")
 
 
-def _resolve_sparse_skip(sparse_skip: bool | None) -> bool:
-    """None → the REPRO_SPARSE_SKIP env default (on unless set to "0").
-
-    Resolved at trace time (``sparse_skip`` is a static argument), which
-    is what lets CI force the dense and sparse tile paths across a whole
-    test run without touching call sites.
-    """
-    if sparse_skip is None:
-        return os.environ.get("REPRO_SPARSE_SKIP", "1") != "0"
-    return bool(sparse_skip)
+# Trace-time env resolution of the tile-skip flag — the canonical rule
+# lives in core.telemetry so the jnp telemetry mirrors resolve identically.
+_resolve_sparse_skip = resolve_sparse_skip
 
 
 def _pad_to(x: jax.Array, axis: int, mult: int):
@@ -139,7 +143,9 @@ def fused_snn_stack_op(pixels_u8: jax.Array, state_u32: jax.Array,
         chunked execution.
       init: optional carried state dict with ``v``/``en`` (per-layer tuples,
         (B, n_l) i32 / bool), ``counts``/``first`` ((B, n_out) i32, first
-        sentinel = num_steps) and ``steps`` ((B,) i32).
+        sentinel = num_steps) and ``steps`` ((B,) i32).  May also carry
+        ``v_peak`` (per-layer (B, n_l) i32 running peak membranes);
+        omitted, the peaks restart from the INT32_MIN sentinel.
       gate: optional per-lane stability-gate state (``active`` bool (B,),
         ``prev``/``streak`` i32 (B,)) — when given, the kernel runs the
         serving early-exit gate each step and freezes retired lanes.
@@ -153,8 +159,10 @@ def fused_snn_stack_op(pixels_u8: jax.Array, state_u32: jax.Array,
     Returns a dict with ``spike_counts``/``first_spike_t``/``v_final``
     ((B, n_out) i32), ``v_trace`` ((chunk, B, n_out) i32), ``active_adds``
     ((chunk, B) i32, summed over layers), ``prng_state`` ((B, n_in) u32),
-    the carried ``v``/``en``/``steps`` state and (if gated) ``gate``.
-    The inter-layer spike tensors are never materialised.
+    the carried ``v``/``en``/``v_peak``/``steps`` state, ``telemetry``
+    (a ``core.telemetry.ChunkTelemetry`` — the kernel's activity side
+    channel) and (if gated) ``gate``.  The inter-layer spike tensors are
+    never materialised.
     """
     interpret = _use_interpret() if interpret is None else interpret
     sparse_skip = _resolve_sparse_skip(sparse_skip)
@@ -178,14 +186,24 @@ def fused_snn_stack_op(pixels_u8: jax.Array, state_u32: jax.Array,
                for w in weights)
 
     def valid_mask(n_true, n_pad):
+        # padded neurons AND padded batch rows are disabled — the rows so
+        # the tile-skip predicates (and their telemetry mirror) see the
+        # identical enable geometry whether the state is fresh or carried
+        # (_pad_to pads carried enables with False rows)
         col = jnp.arange(n_pad, dtype=jnp.int32)[None, :]
-        return jnp.broadcast_to(col < n_true, (Bp, n_pad))
+        row = jnp.arange(Bp, dtype=jnp.int32)[:, None]
+        return jnp.logical_and(col < n_true, row < B)
+
+    def vp_fresh():
+        return tuple(jnp.full((Bp, ws[l].shape[2]), V_PEAK_INIT, jnp.int32)
+                     for l in range(L))
 
     if init is None:
         v_in = tuple(jnp.full((Bp, ws[l].shape[2]), v_rest, jnp.int32)
                      for l in range(L))
         en_in = tuple(valid_mask(sizes[l + 1], ws[l].shape[2])
                       for l in range(L))
+        vp_in = vp_fresh()
         cnt_in = jnp.zeros((Bp, ws[-1].shape[2]), jnp.int32)
         first_in = jnp.full((Bp, ws[-1].shape[2]), num_steps, jnp.int32)
         steps_in = jnp.zeros((Bp, 1), jnp.int32)
@@ -195,6 +213,9 @@ def fused_snn_stack_op(pixels_u8: jax.Array, state_u32: jax.Array,
         en_in = tuple(
             _pad_to(_pad_to(init["en"][l].astype(bool), 0, bB), 1, lane)
             for l in range(L))
+        vp_in = (vp_fresh() if init.get("v_peak") is None else
+                 tuple(_pad_to(_pad_to(init["v_peak"][l], 0, bB), 1, lane)
+                       for l in range(L)))
         cnt_in = _pad_to(_pad_to(init["counts"], 0, bB), 1, lane)
         first_in = _pad_to(_pad_to(init["first"], 0, bB), 1, lane)
         steps_in = _pad_to(init["steps"].astype(jnp.int32)[:, None], 0, bB)
@@ -209,13 +230,15 @@ def fused_snn_stack_op(pixels_u8: jax.Array, state_u32: jax.Array,
         )
 
     outs = fused_snn.fused_snn_stack_pallas(
-        px, st, ws, v_in, en_in, cnt_in, first_in, steps_in, gate_in,
+        px, st, ws, v_in, en_in, vp_in, cnt_in, first_in, steps_in, gate_in,
         chunk_steps=chunk_steps, window_steps=num_steps,
         decay_shift=decay_shift, v_threshold=v_threshold, v_rest=v_rest,
         v_min=v_min, v_max=v_max, active_pruning=active_pruning,
         patience=patience, readout=readout, sparse_skip=sparse_skip,
         streamed=streamed, block_b=bB, interpret=interpret)
-    cnt, vtr, first, adds, st_out, v_fin, en_fin, steps_out = outs[:8]
+    (cnt, vtr, first, adds, st_out, v_fin, en_fin, vp_fin, tel,
+     steps_out) = outs[:10]
+    tspk, ten, ttile = tel
     res = {
         "spike_counts": cnt[:B, :n_out],
         "v_trace": vtr[:, :B, :n_out],
@@ -226,10 +249,14 @@ def fused_snn_stack_op(pixels_u8: jax.Array, state_u32: jax.Array,
         "v": tuple(v_fin[l][:B, :sizes[l + 1]] for l in range(L)),
         "en": tuple(en_fin[l][:B, :sizes[l + 1]].astype(bool)
                     for l in range(L)),
+        "v_peak": tuple(vp_fin[l][:B, :sizes[l + 1]] for l in range(L)),
+        "telemetry": ChunkTelemetry(n_spk=tspk[:, :, :B],
+                                    n_en=ten[:, :, :B],
+                                    tiles_skipped=ttile),
         "steps": steps_out[:B, 0],
     }
     if gate is not None:
-        act, prev, streak = outs[8]
+        act, prev, streak = outs[10]
         res["gate"] = {"active": act[:B, 0] != 0, "prev": prev[:B, 0],
                        "streak": streak[:B, 0]}
     return res
@@ -258,35 +285,62 @@ def fused_snn_op(pixels_u8: jax.Array, state_u32: jax.Array, w_q: jax.Array,
         sparse_skip=sparse_skip, streamed=streamed, interpret=interpret)
 
 
-@partial(jax.jit, static_argnames=("mode", "interpret"))
 def spike_matmul_op(spikes: jax.Array, w_q: jax.Array, *,
-                    mode: str = "auto", interpret: bool | None = None):
+                    mode: str = "auto",
+                    density_threshold: float | None = None,
+                    with_telemetry: bool = False,
+                    interpret: bool | None = None):
     """Event-driven spike×weight contraction.
 
     ``mode="auto"`` dispatches at RUNTIME on the observed spike density of
     the batch: a ``lax.cond`` picks the masked (event-driven) kernel below
-    ``SPIKE_DENSITY_THRESHOLD`` and the MXU dot above it.  Both kernels
-    compute the identical int32 contraction (S ∈ {0,1} makes the masked
-    add and the dot arithmetically the same), so the dispatch can never
-    change results — only which datapath executes.  ``mode="masked"`` /
+    the dispatch threshold and the MXU dot above it.  Both kernels compute
+    the identical int32 contraction (S ∈ {0,1} makes the masked add and
+    the dot arithmetically the same), so the dispatch can never change
+    results — only which datapath executes.  ``mode="masked"`` /
     ``mode="mxu"`` force one branch.
+
+    ``density_threshold`` is the dispatch boundary: None resolves through
+    config/env/default (``core.telemetry.resolve_density_threshold``) —
+    the serving controller's retuned value
+    (``SNNStreamEngine.dispatch_threshold``) arrives through this
+    argument.  It enters the jitted computation as a TRACED scalar
+    operand, not a static argument, so the controller walking it per
+    chunk never recompiles.  ``with_telemetry=True`` additionally returns
+    a ``core.telemetry.MatmulTelemetry`` (observed density + branch
+    taken), the per-call twin of the fused kernel's chunk side channel.
     """
+    return _spike_matmul_impl(
+        spikes, w_q,
+        jnp.float32(resolve_density_threshold(density_threshold)),
+        mode=mode, with_telemetry=with_telemetry, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("mode", "with_telemetry", "interpret"))
+def _spike_matmul_impl(spikes: jax.Array, w_q: jax.Array,
+                       threshold: jax.Array, *, mode: str,
+                       with_telemetry: bool, interpret: bool | None):
     interpret = _use_interpret() if interpret is None else interpret
     B, n_in = spikes.shape
     n_out = w_q.shape[1]
     bB, bN, bK = spike_matmul.DEFAULT_BLOCK
     s = _pad_to(_pad_to(spikes, 0, bB), 1, bK)
     w = _pad_to(_pad_to(w_q, 0, bK), 1, bN)
+    density = jnp.mean((spikes != 0).astype(jnp.float32))
     if mode == "auto":
-        density = jnp.mean((spikes != 0).astype(jnp.float32))
+        used_masked = density < threshold
         out = jax.lax.cond(
-            density < SPIKE_DENSITY_THRESHOLD,
+            used_masked,
             lambda s, w: spike_matmul.spike_matmul_pallas(
                 s, w, mode="masked", interpret=interpret),
             lambda s, w: spike_matmul.spike_matmul_pallas(
                 s, w, mode="mxu", interpret=interpret),
             s, w)
     else:
+        used_masked = jnp.asarray(mode == "masked")
         out = spike_matmul.spike_matmul_pallas(s, w, mode=mode,
                                                interpret=interpret)
-    return out[:B, :n_out]
+    out = out[:B, :n_out]
+    if with_telemetry:
+        return out, MatmulTelemetry(density=density, used_masked=used_masked)
+    return out

@@ -8,11 +8,55 @@ these functions.  They intentionally re-derive the math independently of
 
 from __future__ import annotations
 
+import os
+
 import jax
 import jax.numpy as jnp
 
+from ..core.telemetry import ChunkTelemetry
+
 __all__ = ["poisson_encode_ref", "lif_forward_ref", "spike_matmul_ref",
-           "fused_snn_ref", "fused_snn_stack_ref", "weight_pack_ref"]
+           "fused_snn_ref", "fused_snn_stack_ref", "weight_pack_ref",
+           "tile_skips_ref"]
+
+# The megakernel's launch geometry, re-derived here independently of
+# kernels.fused_snn (oracle style): 128-lane neuron tiles, 8-row batch
+# blocks.  If the kernel's tiling ever changes these must be updated in
+# lockstep — which is the point: a silent geometry change breaks the
+# telemetry bit-identity tests instead of going unnoticed.
+_REF_LANE = 128
+_REF_BLOCK_B = 8
+
+
+def tile_skips_ref(x: jax.Array, en: jax.Array, *,
+                   sparse_skip: bool) -> jax.Array:
+    """Oracle for the kernel's per-layer tile-skip telemetry counter.
+
+    ``x``: (B, n_in) bool input spikes; ``en``: (B, n_out) bool enables
+    (true sizes — padding is re-derived here).  Returns (n_blocks,) i32
+    skipped (K-tile, N-tile) pairs per batch block: a pair is skipped
+    when its 128-wide K slice carries no spike in any lane of the 8-row
+    block OR its 128-wide output slice is fully pruned across the block.
+    Derived independently of both ``kernels.fused_snn`` and
+    ``core.telemetry`` so kernel bugs and mirror bugs cannot cancel.
+    """
+    B = x.shape[0]
+    bB = _REF_BLOCK_B
+    Bp = B + (-B) % bB
+
+    def pad(a, n_lane):
+        out = jnp.zeros((Bp, n_lane + (-n_lane) % _REF_LANE), bool)
+        return out.at[:B, :n_lane].set(a.astype(bool))
+
+    xp, ep = pad(x, x.shape[1]), pad(en, en.shape[1])
+    nb = Bp // bB
+    nkt, nnt = xp.shape[1] // _REF_LANE, ep.shape[1] // _REF_LANE
+    any_x = jnp.any(xp.reshape(nb, bB, nkt, _REF_LANE), axis=(1, 3))
+    any_e = jnp.any(ep.reshape(nb, bB, nnt, _REF_LANE), axis=(1, 3))
+    live = jnp.logical_and(any_x[:, :, None], any_e[:, None, :])
+    if not sparse_skip:
+        return jnp.zeros((nb,), jnp.int32)
+    return jnp.sum(jnp.logical_not(live), axis=(1, 2)).astype(jnp.int32)
 
 
 def weight_pack_ref(w_q):
@@ -137,25 +181,34 @@ def fused_snn_stack_ref(pixels_u8: jax.Array, state_u32: jax.Array,
                         decay_shift: int, v_threshold: int, v_rest: int = 0,
                         v_min: int = -(1 << 20), v_max: int = (1 << 20) - 1,
                         active_pruning: bool = False,
+                        sparse_skip: bool | None = None,
                         init: dict | None = None):
     """Oracle for the multi-layer resumable megakernel (fused_snn.py).
 
     Re-derives the whole stack — PRNG, comparator, the per-layer Σ W·S /
-    leak / fire / reset / pruning chain, the layer-summed add counter and
-    the carried-state semantics — in one scan, independently of
-    ``repro.core``.  ``init`` mirrors the kernel's carried state (``v`` /
-    ``en`` per-layer tuples, ``counts``, ``first`` with sentinel
-    ``num_steps``, ``steps`` (B,)); ``chunk_steps`` is how many steps this
-    call executes (default: the full window).
+    leak / fire / reset / pruning chain, the layer-summed add counter,
+    the carried-state semantics, the per-layer peak-membrane accumulator
+    AND the telemetry side channel (per-step spike/enable counts per
+    lane, skipped tile pairs per block via :func:`tile_skips_ref`) — in
+    one scan, independently of ``repro.core``.  ``init`` mirrors the
+    kernel's carried state (``v`` / ``en`` / ``v_peak`` per-layer tuples,
+    ``counts``, ``first`` with sentinel ``num_steps``, ``steps`` (B,));
+    ``chunk_steps`` is how many steps this call executes (default: the
+    full window).  ``sparse_skip`` only affects the telemetry tile
+    counter (None resolves the same REPRO_SPARSE_SKIP env rule as the
+    launcher, so oracle and kernel agree under the CI forcing).
 
     Returns a dict shaped like ``kernels.ops.fused_snn_stack_op``'s.
     """
     if chunk_steps is None:
         chunk_steps = num_steps
+    if sparse_skip is None:
+        sparse_skip = os.environ.get("REPRO_SPARSE_SKIP", "1") != "0"
     B = pixels_u8.shape[0]
     L = len(weights)
     ws = [w.astype(jnp.int32) for w in weights]
     n_out = ws[-1].shape[1]
+    vp0 = jnp.iinfo(jnp.int32).min
     if init is None:
         init = {
             "v": tuple(jnp.full((B, w.shape[1]), v_rest, jnp.int32)
@@ -165,17 +218,23 @@ def fused_snn_stack_ref(pixels_u8: jax.Array, state_u32: jax.Array,
             "first": jnp.full((B, n_out), num_steps, jnp.int32),
             "steps": jnp.zeros((B,), jnp.int32),
         }
+    vp_init = init.get("v_peak")
+    if vp_init is None:
+        vp_init = tuple(jnp.full((B, w.shape[1]), vp0, jnp.int32)
+                        for w in ws)
 
     def step(carry, _):
-        s, vs, ens, cnt, first, steps = carry
+        s, vs, ens, vps, cnt, first, steps = carry
         s = s ^ (s << 13)
         s = s ^ (s >> 17)
         s = s ^ (s << 5)
         x = pixels_u8 > (s >> 24).astype(jnp.uint8)
         adds = jnp.zeros((B,), jnp.int32)
-        new_vs, new_ens = [], []
+        new_vs, new_ens, new_vps = [], [], []
+        tel_spk, tel_en, tel_tiles = [], [], []
         for l in range(L):
             en = ens[l]
+            tel_tiles.append(tile_skips_ref(x, en, sparse_skip=sparse_skip))
             cur = jnp.dot(x.astype(jnp.int32), ws[l])
             cur = jnp.where(en, cur, 0)
             v_int = jnp.clip(vs[l] + cur, v_min, v_max)
@@ -183,27 +242,37 @@ def fused_snn_stack_ref(pixels_u8: jax.Array, state_u32: jax.Array,
             fired = jnp.logical_and(v_leak >= v_threshold, en)
             v_new = jnp.where(fired, jnp.int32(v_rest), v_leak)
             v_new = jnp.where(en, v_new, vs[l])
-            adds = adds + (jnp.sum(x.astype(jnp.int32), axis=-1)
-                           * jnp.sum(en.astype(jnp.int32), axis=-1))
+            n_spk = jnp.sum(x.astype(jnp.int32), axis=-1)
+            n_en = jnp.sum(en.astype(jnp.int32), axis=-1)
+            adds = adds + n_spk * n_en
+            tel_spk.append(n_spk)
+            tel_en.append(n_en)
             if active_pruning:
                 en = jnp.logical_and(en, jnp.logical_not(fired))
             new_vs.append(v_new)
             new_ens.append(en)
+            new_vps.append(jnp.maximum(vps[l], v_new))
             x = fired
         cnt = cnt + x.astype(jnp.int32)
         first = jnp.where(jnp.logical_and(x, first == num_steps),
                           steps[:, None], first)
-        carry = (s, tuple(new_vs), tuple(new_ens), cnt, first, steps + 1)
-        return carry, (new_vs[-1], adds)
+        carry = (s, tuple(new_vs), tuple(new_ens), tuple(new_vps), cnt,
+                 first, steps + 1)
+        return carry, (new_vs[-1], adds, jnp.stack(tel_spk),
+                       jnp.stack(tel_en), jnp.stack(tel_tiles))
 
     carry0 = (state_u32, tuple(init["v"]), tuple(init["en"]),
-              init["counts"], init["first"], init["steps"].astype(jnp.int32))
-    (s_f, vs_f, ens_f, cnt_f, first_f, steps_f), (vtr, adds_t) = \
+              tuple(vp_init), init["counts"], init["first"],
+              init["steps"].astype(jnp.int32))
+    ((s_f, vs_f, ens_f, vps_f, cnt_f, first_f, steps_f),
+     (vtr, adds_t, tspk, ten, ttile)) = \
         jax.lax.scan(step, carry0, None, length=chunk_steps)
     return {
         "spike_counts": cnt_f, "v_trace": vtr, "first_spike_t": first_f,
         "v_final": vs_f[-1], "active_adds": adds_t, "prng_state": s_f,
-        "v": vs_f, "en": ens_f, "steps": steps_f,
+        "v": vs_f, "en": ens_f, "v_peak": vps_f, "steps": steps_f,
+        "telemetry": ChunkTelemetry(n_spk=tspk, n_en=ten,
+                                    tiles_skipped=ttile),
     }
 
 

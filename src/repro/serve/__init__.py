@@ -16,9 +16,12 @@ from .engine import (ServeState, generate, make_decode_step, make_prefill,
                      pad_cache_to)
 from .snn_engine import (RequestResult, ShardedSNNStreamEngine,
                          SNNStreamEngine)
+from .telemetry import (AdaptiveDispatchConfig, ChunkSummary,
+                        TelemetryController, summarize_chunk)
 
 __all__ = ["ServeState", "generate", "make_decode_step", "make_prefill",
            "pad_cache_to", "eos_gate", "stability_gate",
            "StabilityGateState", "stability_init", "stability_specs",
            "stability_step", "SNNStreamEngine", "ShardedSNNStreamEngine",
-           "RequestResult"]
+           "RequestResult", "AdaptiveDispatchConfig", "ChunkSummary",
+           "TelemetryController", "summarize_chunk"]

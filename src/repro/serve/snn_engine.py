@@ -28,10 +28,23 @@ The per-lane executed-add counter is the same energy side channel the
 paper integrates (§V): a retired lane's counter is frozen, which is the
 measurable "sleep sooner" win.
 
-Readouts: ``count`` (spike-register argmax) and ``first_spike`` (earliest
-spiking class, membrane tiebreak — the active-pruning config's readout)
-both stream; ``membrane`` needs the full trace and is rejected — run those
-configs through ``core.snn.snn_apply_int``.
+Every chunk also returns the structured **telemetry side channel**
+(``core.telemetry.ChunkTelemetry`` — per-step/layer spike counts, prune
+occupancy, skipped MXU tiles), produced bit-identically by the fused
+kernels and the jnp fallback.  The engines feed it to a
+``serve.telemetry.TelemetryController``: frozen by default (static
+threshold + chunk length, zero readbacks — today's behavior bit-for-bit),
+or adaptive (``REPRO_ADAPTIVE_DISPATCH=1`` / an explicit
+``AdaptiveDispatchConfig``), where live traffic retunes the masked-vs-MXU
+dispatch threshold and picks the next chunk length.  Adaptivity is
+value-neutral: chunk splits and datapath choice are bit-identical by
+construction, so only wall-clock moves.
+
+Readouts: all three stream — ``count`` (spike-register argmax),
+``first_spike`` (earliest spiking class, membrane tiebreak — the
+active-pruning config's readout) and ``membrane`` (peak-membrane argmax:
+the per-layer running peak is carried in ``LaneState.v_peak``, so no
+per-step trace ever crosses the chunk boundary).
 
 :class:`ShardedSNNStreamEngine` scales the same engine across a device
 mesh: the lane tile is data-parallel (one contiguous slot block per
@@ -54,12 +67,17 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from ..core import lif as lif_mod
 from ..core import prng as prng_mod
 from ..core.snn import SNNConfig, readout_pred, snn_int_stack_step
+from ..core.telemetry import (ChunkTelemetry, telemetry_partition_specs)
 from ..distributed.sharding import make_device_mesh, shard_map_compat
 from .early_exit import StabilityGateState, stability_specs, stability_step
+from .telemetry import AdaptiveDispatchConfig, make_controller, \
+    summarize_chunk
 
 __all__ = ["SNNStreamEngine", "ShardedSNNStreamEngine", "LaneState",
            "RequestResult", "stream_chunk", "lane_partition_specs",
            "make_sharded_stream_chunk"]
+
+_V_PEAK_INIT = np.iinfo(np.int32).min   # window-start peak sentinel
 
 
 class LaneState(NamedTuple):
@@ -69,6 +87,7 @@ class LaneState(NamedTuple):
     rng: jax.Array         # (B, n_in) uint32 xorshift lanes
     v: tuple               # per-layer (B, n_l) int32 membrane accumulators
     en: tuple              # per-layer (B, n_l) bool neuron clock-gates
+    v_peak: tuple          # per-layer (B, n_l) int32 running peak membranes
     counts: jax.Array      # (B, n_out) int32 spike registers
     first: jax.Array       # (B, n_out) int32 first-spike latch (sentinel=T)
     gate_prev: jax.Array   # (B,) int32 stability-gate memory
@@ -97,6 +116,8 @@ def _init_lanes(batch: int, layer_sizes: tuple[int, ...], num_steps: int,
         v=tuple(jnp.full((batch, n), v_rest, jnp.int32)
                 for n in layer_sizes[1:]),
         en=tuple(jnp.ones((batch, n), bool) for n in layer_sizes[1:]),
+        v_peak=tuple(jnp.full((batch, n), _V_PEAK_INIT, jnp.int32)
+                     for n in layer_sizes[1:]),
         counts=jnp.zeros((batch, n_out), jnp.int32),
         first=jnp.full((batch, n_out), num_steps, jnp.int32),
         gate_prev=jnp.full((batch,), -1, jnp.int32),
@@ -112,10 +133,14 @@ def _stream_chunk_impl(lanes: LaneState, weights: tuple, *, chunk_steps: int,
                        dot_impl: str, active_pruning: bool, patience: int,
                        readout: str = "count", backend: str = "reference",
                        sparse_skip: bool | None = None,
-                       interpret: bool | None = None) -> LaneState:
+                       interpret: bool | None = None):
     """Un-jitted chunk body: every op is per-lane (no cross-batch contact),
     which is what lets the same code run whole-tile under ``jax.jit`` or
-    per-device-slice under ``shard_map`` with bit-identical results."""
+    per-device-slice under ``shard_map`` with bit-identical results.
+    Returns ``(lanes', telemetry)`` — the telemetry record is produced
+    bit-identically by the fused kernels and this jnp fallback (frozen
+    lanes report zero activity, matching the frozen add counters; the
+    tile counter reflects the block work the launch geometry executed)."""
     if backend in ("fused", "fused_streamed"):
         from ..kernels import ops
         k = ops.fused_snn_stack_op(
@@ -124,32 +149,37 @@ def _stream_chunk_impl(lanes: LaneState, weights: tuple, *, chunk_steps: int,
             v_threshold=lif_cfg.v_threshold, v_rest=lif_cfg.v_rest,
             v_min=lif_cfg.v_min, v_max=lif_cfg.v_max,
             active_pruning=active_pruning,
-            init={"v": lanes.v, "en": lanes.en, "counts": lanes.counts,
-                  "first": lanes.first, "steps": lanes.steps},
+            init={"v": lanes.v, "en": lanes.en, "v_peak": lanes.v_peak,
+                  "counts": lanes.counts, "first": lanes.first,
+                  "steps": lanes.steps},
             gate={"active": lanes.active, "prev": lanes.gate_prev,
                   "streak": lanes.gate_streak},
             patience=patience, readout=readout, sparse_skip=sparse_skip,
             streamed=(backend == "fused_streamed"), interpret=interpret)
         return LaneState(
             px=lanes.px, rng=k["prng_state"], v=k["v"], en=k["en"],
+            v_peak=k["v_peak"],
             counts=k["spike_counts"], first=k["first_spike_t"],
             gate_prev=k["gate"]["prev"], gate_streak=k["gate"]["streak"],
             steps=k["steps"],
             adds=lanes.adds + jnp.sum(k["active_adds"], axis=0),
-            active=k["gate"]["active"])
+            active=k["gate"]["active"]), k["telemetry"]
 
     def body(carry, _):
         st = carry
         act = st.active
         layer_states = tuple(lif_mod.LIFStateInt(v=v, enable=e)
                              for v, e in zip(st.v, st.en))
-        rng, new_states, fired, adds_t = snn_int_stack_step(
+        rng, new_states, fired, adds_t, tel = snn_int_stack_step(
             st.rng, st.px, layer_states, weights, lif_cfg,
-            dot_impl=dot_impl, active_pruning=active_pruning)
+            dot_impl=dot_impl, active_pruning=active_pruning,
+            sparse_skip=sparse_skip)
         counts = st.counts + fired.astype(jnp.int32)
         first = jnp.where(
             jnp.logical_and(fired, st.first == num_steps),
             st.steps[:, None], st.first)
+        v_peak = tuple(jnp.maximum(p, s.v)
+                       for p, s in zip(st.v_peak, new_states))
         # stability gate on the running prediction (pure, in-loop); a lane
         # with no output spikes yet has no prediction to be stable about —
         # its gate state stays at init so neither the streak nor the retire
@@ -157,7 +187,7 @@ def _stream_chunk_impl(lanes: LaneState, weights: tuple, *, chunk_steps: int,
         # stable class-0 vote, and the streak must not pre-accumulate).
         has_spike = jnp.max(counts, axis=-1) > 0
         pred = readout_pred(counts, first, new_states[-1].v, readout,
-                            num_steps).astype(jnp.int32)
+                            num_steps, v_peak=v_peak[-1]).astype(jnp.int32)
         gate, done = stability_step(
             StabilityGateState(prev=st.gate_prev, streak=st.gate_streak),
             pred, patience)
@@ -172,12 +202,18 @@ def _stream_chunk_impl(lanes: LaneState, weights: tuple, *, chunk_steps: int,
             return jnp.where(mask.reshape((-1,) + (1,) * (new.ndim - 1)),
                              new, old)
 
+        # telemetry rows: frozen lanes execute nothing → zeroed, mirroring
+        # the gated kernel; tiles stay raw (block-level executed work)
+        tel_spk = jnp.where(act[None, :], tel["n_spk"], 0)
+        tel_en = jnp.where(act[None, :], tel["n_en"], 0)
         return LaneState(
             px=st.px,
             rng=keep(rng, st.rng),
             v=tuple(keep(s.v, ov) for s, ov in zip(new_states, st.v)),
             en=tuple(keep(s.enable, oe)
                      for s, oe in zip(new_states, st.en)),
+            v_peak=tuple(keep(nv, ov)
+                         for nv, ov in zip(v_peak, st.v_peak)),
             counts=keep(counts, st.counts),
             first=keep(first, st.first),
             gate_prev=keep(gate_prev, st.gate_prev),
@@ -185,10 +221,11 @@ def _stream_chunk_impl(lanes: LaneState, weights: tuple, *, chunk_steps: int,
             steps=steps,
             adds=st.adds + jnp.where(act, adds_t, 0),
             active=jnp.where(act, still, st.active),
-        ), None
+        ), (tel_spk, tel_en, tel["tiles"])
 
-    lanes, _ = jax.lax.scan(body, lanes, None, length=chunk_steps)
-    return lanes
+    lanes, (tspk, ten, ttile) = jax.lax.scan(body, lanes, None,
+                                             length=chunk_steps)
+    return lanes, ChunkTelemetry(n_spk=tspk, n_en=ten, tiles_skipped=ttile)
 
 
 @partial(jax.jit, static_argnames=(
@@ -199,7 +236,7 @@ def stream_chunk(lanes: LaneState, weights: tuple, *, chunk_steps: int,
                  dot_impl: str, active_pruning: bool, patience: int,
                  readout: str = "count", backend: str = "reference",
                  sparse_skip: bool | None = None,
-                 interpret: bool | None = None) -> LaneState:
+                 interpret: bool | None = None):
     """Advance every active lane by up to ``chunk_steps`` window steps.
 
     ``backend="fused"`` runs the whole chunk — every layer, every step,
@@ -212,7 +249,9 @@ def stream_chunk(lanes: LaneState, weights: tuple, *, chunk_steps: int,
     retired or inactive lane is completely frozen — PRNG, membranes,
     counters and the add counter stop, which is what the compaction test
     measures.  ``sparse_skip`` forwards the event-driven tile skipping
-    flag (value-neutral).
+    flag (value-neutral).  Returns ``(lanes', ChunkTelemetry)`` — the
+    structured activity record the adaptive controller consumes, itself
+    bit-identical across the chunk backends.
     """
     return _stream_chunk_impl(
         lanes, weights, chunk_steps=chunk_steps, num_steps=num_steps,
@@ -235,6 +274,7 @@ def lane_partition_specs(n_layers: int,
     gate = stability_specs(axis_name)
     return LaneState(
         px=p, rng=p, v=(p,) * n_layers, en=(p,) * n_layers,
+        v_peak=(p,) * n_layers,
         counts=p, first=p, gate_prev=gate.prev, gate_streak=gate.streak,
         steps=p, adds=p, active=p)
 
@@ -249,23 +289,26 @@ def make_sharded_stream_chunk(mesh: Mesh, axis_name: str, n_layers: int, *,
                               interpret: bool | None = None):
     """Build the data-parallel chunk executor for ``mesh``.
 
-    Returns a jitted ``(lanes, weights) -> lanes`` whose body runs under
-    ``shard_map``: each device executes the fused megakernel (or the jnp
-    scan fallback) on its local lane slice with the weights replicated —
-    the software analogue of the paper's replicated neuron-core lanes.
-    No collectives are emitted: the stability gate and lane freezing are
-    per-lane, so the mapped body is embarrassingly parallel and
-    bit-identical to the single-device :func:`stream_chunk` on the
-    concatenation of the slices.
+    Returns a jitted ``(lanes, weights) -> (lanes, telemetry)`` whose body
+    runs under ``shard_map``: each device executes the fused megakernel
+    (or the jnp scan fallback) on its local lane slice with the weights
+    replicated — the software analogue of the paper's replicated
+    neuron-core lanes.  No collectives are emitted: the stability gate,
+    lane freezing and the telemetry record are per-lane/per-block, so the
+    mapped body is embarrassingly parallel and bit-identical to the
+    single-device :func:`stream_chunk` on the concatenation of the slices
+    (telemetry's tile leaf concatenates the device-local block lists —
+    the geometry each device's launch actually executed).
     """
     specs = lane_partition_specs(n_layers, axis_name)
+    tel_specs = telemetry_partition_specs(axis_name)
     body = partial(
         _stream_chunk_impl, chunk_steps=chunk_steps, num_steps=num_steps,
         lif_cfg=lif_cfg, dot_impl=dot_impl, active_pruning=active_pruning,
         patience=patience, readout=readout, backend=backend,
         sparse_skip=sparse_skip, interpret=interpret)
     mapped = shard_map_compat(body, mesh, in_specs=(specs, P()),
-                              out_specs=specs)
+                              out_specs=(specs, tel_specs))
     return jax.jit(mapped)
 
 
@@ -285,18 +328,29 @@ class SNNStreamEngine:
     residency budget), ``"reference"`` (jnp scan), or None/"auto" (fused →
     fused_streamed on TPU by per-device VMEM feasibility, reference
     elsewhere).  Arbitrary layer stacks are supported — hidden-layer spike
-    traffic stays on-chip on the fused paths.
+    traffic stays on-chip on the fused paths.  All three config readouts
+    stream, including ``membrane`` (peak-membrane argmax off the carried
+    ``LaneState.v_peak`` accumulator).
+
+    ``adaptive`` configures the telemetry controller
+    (serve.telemetry.TelemetryController): None reads the
+    REPRO_ADAPTIVE_DISPATCH env default (frozen off it) — frozen mode
+    reproduces the static threshold/chunk choices with zero telemetry
+    readbacks; adaptive mode retunes the masked-vs-MXU dispatch threshold
+    (``engine.dispatch_threshold``) and picks each next chunk's length
+    from the observed density/retirement stream.  Either way results are
+    bit-identical — the controller only ever moves value-neutral knobs.
     """
 
     def __init__(self, params_q: dict, cfg: SNNConfig, *, batch_size: int = 8,
                  chunk_steps: int = 4, patience: int = 2, seed: int = 0,
                  backend: str | None = None,
-                 local_batch: int | None = None):
-        if cfg.readout not in ("count", "first_spike"):
+                 local_batch: int | None = None,
+                 adaptive: AdaptiveDispatchConfig | None = None):
+        if cfg.readout not in ("count", "first_spike", "membrane"):
             raise ValueError(
-                f"streaming engine implements the 'count' and 'first_spike' "
-                f"readouts; got readout={cfg.readout!r} — run membrane "
-                f"configs through core.snn.snn_apply_int instead")
+                f"unknown readout {cfg.readout!r}: the streaming engine "
+                f"implements 'count', 'first_spike' and 'membrane'")
         from ..core.snn import fused_unsupported_reason
         self.weights = tuple(layer["w_q"] for layer in params_q["layers"])
         self.layer_sizes = tuple([self.weights[0].shape[0]]
@@ -339,9 +393,11 @@ class SNNStreamEngine:
                                  f" {reason} — use backend='reference'")
         self.cfg = cfg
         self.batch_size = batch_size
-        self.chunk_steps = chunk_steps
         self.patience = patience
         self.seed = seed
+        self.controller = make_controller(
+            adaptive, spike_density_threshold=cfg.spike_density_threshold,
+            chunk_steps=chunk_steps, num_steps=cfg.num_steps)
         self.n_in, self.n_out = self.layer_sizes[0], self.layer_sizes[-1]
         self.lanes = _init_lanes(batch_size, self.layer_sizes,
                                  cfg.num_steps, cfg.lif.v_rest)
@@ -349,6 +405,20 @@ class SNNStreamEngine:
         self.queue: list[tuple[int, np.ndarray]] = []
         self.results: dict[int, RequestResult] = {}
         self._next_id = 0
+
+    @property
+    def chunk_steps(self) -> int:
+        """Window steps of the NEXT chunk dispatch — the controller's live
+        choice (always the configured static value in frozen mode), so
+        the public attribute can never go stale under adaptive tuning."""
+        return self.controller.chunk_steps
+
+    @property
+    def dispatch_threshold(self) -> float:
+        """Live masked-vs-MXU density boundary (static when frozen) —
+        the value routing layers pass to ``spike_matmul_op``'s
+        ``density_threshold``."""
+        return self.controller.dispatch_threshold
 
     # ---- request intake -------------------------------------------------
     def submit(self, pixels_u8: np.ndarray) -> int:
@@ -365,10 +435,10 @@ class SNNStreamEngine:
 
     # ---- readout --------------------------------------------------------
     def _host_pred(self, counts: np.ndarray, first: np.ndarray,
-                   v_last: np.ndarray) -> int:
+                   v_last: np.ndarray, v_peak: np.ndarray) -> int:
         """Harvest-time prediction for one retired lane."""
         return int(readout_pred(counts, first, v_last, self.cfg.readout,
-                                self.cfg.num_steps))
+                                self.cfg.num_steps, v_peak=v_peak))
 
     # ---- scheduling -----------------------------------------------------
     def _harvest(self, st: LaneState, finished: np.ndarray) -> list[int]:
@@ -379,7 +449,7 @@ class SNNStreamEngine:
             self.results[rid] = RequestResult(
                 request_id=rid,
                 pred=self._host_pred(st.counts[i], st.first[i],
-                                     st.v[-1][i]),
+                                     st.v[-1][i], st.v_peak[-1][i]),
                 spike_counts=st.counts[i].copy(),
                 steps=int(st.steps[i]),
                 adds=int(st.adds[i]),
@@ -404,6 +474,8 @@ class SNNStreamEngine:
             v[slot] = self.cfg.lif.v_rest
         for en in st.en:
             en[slot] = True
+        for vp in st.v_peak:
+            vp[slot] = _V_PEAK_INIT
         st.counts[slot] = 0
         st.first[slot] = self.cfg.num_steps
         st.gate_prev[slot] = -1
@@ -457,27 +529,47 @@ class SNNStreamEngine:
         self.lanes = self._upload(st)
         return done_ids
 
-    def _advance(self, lanes: LaneState) -> LaneState:
-        """Dispatch one chunk on the device (async under jax dispatch)."""
+    def _advance(self, lanes: LaneState):
+        """Dispatch one chunk on the device (async under jax dispatch).
+
+        The chunk length comes from the controller: the configured static
+        value when frozen, the live retirement-tuned one when adaptive
+        (jit caches one executable per length — the tuning range is small
+        and bounded).  Returns ``(lanes', telemetry)``.
+        """
         return stream_chunk(
-            lanes, self.weights, chunk_steps=self.chunk_steps,
+            lanes, self.weights, chunk_steps=self.controller.chunk_steps,
             num_steps=self.cfg.num_steps, lif_cfg=self.cfg.lif,
             dot_impl=self.cfg.dot_impl,
             active_pruning=self.cfg.active_pruning, patience=self.patience,
             readout=self.cfg.readout, backend=self.backend,
             sparse_skip=self.cfg.sparse_skip)
 
+    def _observe(self, src: LaneState, nxt: LaneState,
+                 tel: ChunkTelemetry) -> None:
+        """Feed one chunk's telemetry to the controller (adaptive only —
+        frozen mode never forces the device→host readback)."""
+        if self.controller.frozen:
+            return
+        self.controller.observe(summarize_chunk(
+            tel, self.layer_sizes,
+            steps_before=src.steps, steps_after=nxt.steps,
+            active_before=src.active, active_after=nxt.active))
+
     def step(self) -> list[int]:
         """Admit + run one chunk.  Returns request ids finished so far."""
         done = self._admit_and_compact()
-        self.lanes = self._advance(self.lanes)
+        src = self.lanes
+        self.lanes, tel = self._advance(src)
+        self._observe(src, self.lanes, tel)
         return done
 
     def run(self, max_chunks: int | None = None) -> dict[int, RequestResult]:
         """Drive chunks until every submitted request has a result."""
         limit = max_chunks if max_chunks is not None else (
             (self.pending + self.batch_size)
-            * (self.cfg.num_steps // self.chunk_steps + 2))
+            * (self.cfg.num_steps // max(1, self.controller.min_chunk_steps)
+               + 2))
         for _ in range(limit):
             if self.pending == 0:
                 break
@@ -526,7 +618,8 @@ class ShardedSNNStreamEngine(SNNStreamEngine):
                  lanes_per_device: int | None = None,
                  batch_size: int | None = None,
                  chunk_steps: int = 4, patience: int = 2, seed: int = 0,
-                 backend: str | None = None, overlap: bool = True):
+                 backend: str | None = None, overlap: bool = True,
+                 adaptive: AdaptiveDispatchConfig | None = None):
         if mesh is None:
             mesh = make_device_mesh((len(jax.devices()),), (axis_name,))
         if axis_name not in mesh.axis_names:
@@ -552,33 +645,43 @@ class ShardedSNNStreamEngine(SNNStreamEngine):
                 f"{self.n_devices}-device {axis_name!r} axis")
         self.overlap = overlap
         self.stats = {"chunks": 0, "spec_used": 0, "spec_wasted": 0}
-        self._spec: LaneState | None = None
+        self._spec: tuple | None = None
         self._spec_src: LaneState | None = None
         super().__init__(params_q, cfg, batch_size=batch_size,
                          chunk_steps=chunk_steps, patience=patience,
                          seed=seed, backend=backend,
-                         local_batch=batch_size // self.n_devices)
+                         local_batch=batch_size // self.n_devices,
+                         adaptive=adaptive)
         specs = lane_partition_specs(len(self.weights), axis_name)
         self._shardings = jax.tree.map(
             lambda s: NamedSharding(mesh, s), specs,
             is_leaf=lambda x: isinstance(x, P))
-        self._chunk_fn = make_sharded_stream_chunk(
-            mesh, axis_name, len(self.weights),
-            chunk_steps=chunk_steps, num_steps=cfg.num_steps,
-            lif_cfg=cfg.lif, dot_impl=cfg.dot_impl,
-            active_pruning=cfg.active_pruning, patience=patience,
-            readout=cfg.readout, backend=self.backend,
-            sparse_skip=cfg.sparse_skip)
+        # one sharded executor per chunk length the controller picks
+        # (exactly one entry in frozen mode)
+        self._chunk_fns: dict[int, object] = {}
+        self._chunk_fn_for(chunk_steps)
         self.weights = jax.device_put(self.weights,
                                       NamedSharding(mesh, P()))
         self.lanes = jax.device_put(self.lanes, self._shardings)
 
     # ---- device placement ----------------------------------------------
+    def _chunk_fn_for(self, n_steps: int):
+        if n_steps not in self._chunk_fns:
+            self._chunk_fns[n_steps] = make_sharded_stream_chunk(
+                self.mesh, self.axis_name, len(self.weights),
+                chunk_steps=n_steps, num_steps=self.cfg.num_steps,
+                lif_cfg=self.cfg.lif, dot_impl=self.cfg.dot_impl,
+                active_pruning=self.cfg.active_pruning,
+                patience=self.patience, readout=self.cfg.readout,
+                backend=self.backend, sparse_skip=self.cfg.sparse_skip)
+        return self._chunk_fns[n_steps]
+
     def _upload(self, st: LaneState) -> LaneState:
         return jax.device_put(st, self._shardings)
 
-    def _advance(self, lanes: LaneState) -> LaneState:
-        return self._chunk_fn(lanes, self.weights)
+    def _advance(self, lanes: LaneState):
+        return self._chunk_fn_for(self.controller.chunk_steps)(
+            lanes, self.weights)
 
     # ---- scheduling -----------------------------------------------------
     def _admit_and_compact(self) -> list[int]:
@@ -624,15 +727,18 @@ class ShardedSNNStreamEngine(SNNStreamEngine):
             # dispatched from (no compaction replaced it — here OR in any
             # intervening run()/_admit_and_compact call): the speculation
             # IS this step's chunk (same pure function, same input)
-            nxt = self._spec
+            src = self._spec_src
+            nxt, tel = self._spec
             self.stats["spec_used"] += 1
         else:
             if self._spec is not None:
                 self.stats["spec_wasted"] += 1
-            nxt = self._advance(self.lanes)
+            src = self.lanes
+            nxt, tel = self._advance(src)
         self._spec = self._spec_src = None
         self.lanes = nxt
         self.stats["chunks"] += 1
+        self._observe(src, nxt, tel)
         if self.overlap and (self.queue
                              or any(r is not None for r in self.lane_req)):
             # enqueue chunk k+1 now — the devices stay busy while the next

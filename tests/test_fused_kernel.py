@@ -256,6 +256,7 @@ def _lanes(px, rng_seed, *, batch, active, adds=None, num_steps=50):
         rng=prng.seed_state(rng_seed, (batch, 784)),
         v=(jnp.zeros((batch, 10), jnp.int32),),
         en=(jnp.ones((batch, 10), bool),),
+        v_peak=(jnp.full((batch, 10), np.iinfo(np.int32).min, jnp.int32),),
         counts=jnp.zeros((batch, 10), jnp.int32),
         first=jnp.full((batch, 10), num_steps, jnp.int32),
         gate_prev=jnp.full((batch,), -1, jnp.int32),
@@ -277,11 +278,15 @@ def test_stream_chunk_freezes_inactive_lanes(rng, backend):
     weights = (params_q["layers"][0]["w_q"],)
     px = jnp.asarray(rng.integers(128, 256, (2, 784), dtype=np.uint8))
     lanes = _lanes(px, 1, batch=2, active=[True, False], adds=[123, 456])
-    out = stream_chunk(lanes, weights, chunk_steps=6,
-                       num_steps=cfg.num_steps, lif_cfg=cfg.lif,
-                       dot_impl="int32", active_pruning=False,
-                       patience=10_000, backend=backend)
+    out, tel = stream_chunk(lanes, weights, chunk_steps=6,
+                            num_steps=cfg.num_steps, lif_cfg=cfg.lif,
+                            dot_impl="int32", active_pruning=False,
+                            patience=10_000, backend=backend)
     out = jax.tree.map(np.asarray, out)
+    # frozen lane reports zero activity; active lane reports its spikes
+    tel = jax.tree.map(np.asarray, tel)
+    assert (tel.n_spk[:, :, 1] == 0).all() and (tel.n_en[:, :, 1] == 0).all()
+    assert tel.n_spk[:, :, 0].sum() > 0
     # active lane advanced
     assert out.steps[0] == 6 and out.adds[0] > 123
     assert (out.rng[0] != np.asarray(lanes.rng)[0]).any()
@@ -310,14 +315,20 @@ def test_stream_chunk_fused_matches_reference(rng):
                             dot_impl="int32", active_pruning=False,
                             patience=1, backend=b)
             for b in ("reference", "fused")}
-    a = jax.tree.map(np.asarray, outs["reference"])
-    b = jax.tree.map(np.asarray, outs["fused"])
+    a, tel_a = jax.tree.map(np.asarray, outs["reference"])
+    b, tel_b = jax.tree.map(np.asarray, outs["fused"])
     assert a.steps[:3].max() < 12    # bright lanes retired mid-chunk
     assert a.active[3]               # the spikeless lane kept running
     for name in LaneState._fields:
         jax.tree.map(
             lambda x, y: np.testing.assert_array_equal(x, y, err_msg=name),
             getattr(a, name), getattr(b, name))
+    # the telemetry side channel is part of the chunk contract too —
+    # identical through the gated kernel and the jnp fallback, including
+    # the zeroed rows of mid-chunk-retired lanes
+    for name in tel_a._fields:
+        np.testing.assert_array_equal(getattr(tel_a, name),
+                                      getattr(tel_b, name), err_msg=name)
 
 
 def test_spikeless_lane_gate_stays_armed(rng):
@@ -329,9 +340,9 @@ def test_spikeless_lane_gate_stays_armed(rng):
     weights = (_params(rng)["layers"][0]["w_q"],)
     lanes = _lanes(jnp.zeros((1, 784), jnp.uint8), 4, batch=1,
                    active=[True])
-    out = stream_chunk(lanes, weights, chunk_steps=8,
-                       num_steps=cfg.num_steps, lif_cfg=cfg.lif,
-                       dot_impl="int32", active_pruning=False, patience=2)
+    out, _ = stream_chunk(lanes, weights, chunk_steps=8,
+                          num_steps=cfg.num_steps, lif_cfg=cfg.lif,
+                          dot_impl="int32", active_pruning=False, patience=2)
     out = jax.tree.map(np.asarray, out)
     assert out.gate_prev[0] == -1 and out.gate_streak[0] == 0
     assert out.active[0]                    # still waiting for evidence
@@ -359,12 +370,37 @@ def test_stream_engine_first_spike_readout_matches_batch_engine(rng):
         assert r.adds == int(np.asarray(out["active_adds"]).sum())
 
 
-def test_stream_engine_rejects_membrane_readout(rng):
-    """The membrane readout needs the full trace, which the chunked lane
-    state intentionally does not carry; silently approximating it would
-    diverge from snn_apply_int, so the constructor must refuse."""
-    cfg = dataclasses.replace(SNN_CONFIG, readout="membrane")
-    with pytest.raises(ValueError, match="membrane"):
+def test_stream_engine_membrane_readout_streams(rng):
+    """The membrane readout streams: the per-layer peak accumulator in
+    LaneState replaces the per-step trace (max is associative), so chunked
+    serving reproduces the one-shot snn_apply_int predictions bit-for-bit
+    on both chunk backends — the readout the engine used to reject."""
+    cfg = dataclasses.replace(SNN_CONFIG, readout="membrane", num_steps=12)
+    params_q = _params(rng)
+    imgs = rng.integers(0, 256, (5, 784), dtype=np.uint8)
+    want = None
+    for backend in ("reference", "fused"):
+        eng = SNNStreamEngine(params_q, cfg, batch_size=2, chunk_steps=5,
+                              patience=10_000, seed=23, backend=backend)
+        ids = [eng.submit(im) for im in imgs]
+        results = eng.run()
+        got = {rid: (results[rid].pred,
+                     tuple(results[rid].spike_counts.tolist()))
+               for rid in ids}
+        if want is None:
+            want = got
+        else:
+            assert got == want, backend
+        for rid in ids:
+            out = snn.snn_apply_int(params_q, jnp.asarray(imgs[rid][None]),
+                                    prng.seed_state(23 + rid, (1, 784)),
+                                    cfg, backend="reference")
+            assert got[rid][0] == int(np.asarray(out["pred"])[0]), rid
+
+
+def test_stream_engine_rejects_unknown_readout(rng):
+    cfg = dataclasses.replace(SNN_CONFIG, readout="psychic")
+    with pytest.raises(ValueError, match="readout"):
         SNNStreamEngine(_params(rng), cfg, batch_size=2)
 
 

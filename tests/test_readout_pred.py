@@ -92,6 +92,57 @@ def test_count_vs_first_spike_tiebreak_on_pruned_config():
                             SNN_CONFIG_PRUNED.readout, T)[0]) == 1
 
 
+def test_membrane_peak_tiebreak_lowest_index():
+    """The streamed membrane path ranks by the carried peak accumulator:
+    ties break lowest-index-wins (jnp.argmax), matching the gated
+    kernel's iota+min mirror."""
+    counts = jnp.zeros((1, 4), jnp.int32)
+    first = jnp.full((1, 4), SENT, jnp.int32)
+    v_final = jnp.asarray([[0, 0, 0, 99]], jnp.int32)   # must not rank
+    v_peak = jnp.asarray([[3, 9, 9, 3]], jnp.int32)
+    assert int(readout_pred(counts, first, v_final, "membrane", T,
+                            v_peak=v_peak)[0]) == 1
+
+
+def test_membrane_pred_follows_peak_not_final_or_trace_sum():
+    """Peak semantics: a class whose membrane spiked high once and decayed
+    outranks a class that ends higher (v_final) or integrates higher —
+    and the v_peak accumulator path agrees with the v_trace path."""
+    v_trace = jnp.asarray([[[0, 50], [100, 60], [0, 70]]], jnp.int32)
+    v_trace = jnp.swapaxes(v_trace, 0, 1)              # (T=3, B=1, 2)
+    counts = jnp.zeros((1, 2), jnp.int32)
+    first = jnp.full((1, 2), SENT, jnp.int32)
+    v_final = jnp.asarray([[0, 70]], jnp.int32)
+    from_trace = readout_pred(counts, first, v_final, "membrane", T,
+                              v_trace=v_trace)
+    from_peak = readout_pred(counts, first, v_final, "membrane", T,
+                             v_peak=jnp.max(v_trace, axis=0))
+    assert int(from_trace[0]) == int(from_peak[0]) == 0
+
+
+def test_membrane_chunked_peak_matches_one_shot_pred(rng):
+    """The carried v_peak of a chunked window reproduces the one-shot
+    membrane prediction — the streamed path of the readout contract."""
+    cfg = dataclasses.replace(SNN_CONFIG_PRUNED, layer_sizes=(24, 8),
+                              num_steps=10, readout="membrane",
+                              active_pruning=False)
+    params_q = {"layers": [{
+        "w_q": jnp.asarray(rng.integers(-200, 200, (24, 8)), jnp.int16),
+        "scale": jnp.float32(1.0)}]}
+    px = jnp.asarray(rng.integers(0, 256, (5, 24), dtype=np.uint8))
+    state0 = prng.seed_state(41, px.shape)
+    one_shot = snn.snn_apply_int(params_q, px, state0, cfg,
+                                 backend="reference")
+    ws = snn.snn_window_init(params_q, state0, cfg)
+    for chunk in (4, 3, 3):
+        ws, _ = snn.snn_window_chunk(params_q, px, ws, cfg,
+                                     chunk_steps=chunk, backend="reference")
+    streamed = readout_pred(ws.counts, ws.first, ws.v[-1], "membrane",
+                            cfg.num_steps, v_peak=ws.v_peak[-1])
+    np.testing.assert_array_equal(np.asarray(streamed),
+                                  np.asarray(one_shot["pred"]))
+
+
 def test_pruned_engine_counts_are_saturated(rng):
     """End-to-end guard for the tiebreak above: under the pruned config
     every neuron fires at most once, so the registers really are 0/1 and

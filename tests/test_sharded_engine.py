@@ -238,7 +238,8 @@ def test_lane_partition_specs_cover_every_leaf():
     invariant behind collective-free shard_map execution."""
     specs = lane_partition_specs(3, "data")
     leaves = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
-    assert len(leaves) == len(specs._fields) - 2 + 2 * 3  # v/en per layer
+    # v/en/v_peak are per-layer tuples
+    assert len(leaves) == len(specs._fields) - 3 + 3 * 3
     assert all(s == P("data") for s in leaves)
 
 

@@ -1,0 +1,312 @@
+"""Telemetry side channel + adaptive dispatch controller.
+
+Contracts under test:
+
+  * telemetry executed adds ARE the energy counters: summed over layers
+    they equal ``active_adds`` on every backend, and through the gated
+    streaming chunk they equal the frozen per-lane add deltas;
+  * the telemetry record is bit-identical across the
+    fused / fused_streamed / staged / reference backends and across
+    random window chunk splits (concatenation == one-shot) — the side
+    channel is cross-checkable exactly like the datapath;
+  * the tile-skip mirror (``core.telemetry.layer_tile_skips``) agrees
+    with the independently-derived ``kernels.ref.tile_skips_ref`` oracle
+    (double-entry bookkeeping for the launch geometry);
+  * the dispatch threshold resolves config → env → the historical
+    ``kernels.ops.SPIKE_DENSITY_THRESHOLD`` constant, and
+    ``spike_matmul_op`` honors the boundary + reports its density
+    telemetry;
+  * the controller in frozen mode reproduces the static choices exactly
+    (and never syncs), while adaptive mode — property-tested over random
+    traffic — changes ONLY performance-facing knobs: engine results are
+    bit-identical with adaptivity on and off.
+"""
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.snn_mnist import SNN_CONFIG, SNN_CONFIG_DEEP
+from repro.core import prng, snn
+from repro.core.telemetry import (concat_telemetry, layer_tile_skips,
+                                  resolve_density_threshold, tiles_total)
+from repro.kernels import ops, ref
+from repro.serve import (AdaptiveDispatchConfig, SNNStreamEngine,
+                         TelemetryController, summarize_chunk)
+from repro.serve.telemetry import make_controller
+
+_TEL_FIELDS = ("n_spk", "n_en", "tiles_skipped")
+
+
+def _net(rng, sizes):
+    return {"layers": [
+        {"w_q": jnp.asarray(rng.integers(-256, 256, (a, b)), jnp.int16),
+         "scale": jnp.float32(1.0)}
+        for a, b in zip(sizes[:-1], sizes[1:])]}
+
+
+# ---------------------------------------------------------------------------
+# telemetry invariants
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("prune", [False, True])
+def test_telemetry_adds_equal_energy_counters(rng, prune):
+    """Σ_layers telemetry adds == the frozen active_adds channel, every
+    backend — the invariant that keeps the side channel honest instead of
+    being a second, separately-buggy accounting."""
+    cfg = dataclasses.replace(SNN_CONFIG_DEEP, num_steps=6,
+                              active_pruning=prune)
+    params_q = _net(rng, cfg.layer_sizes)
+    px = jnp.asarray(rng.integers(0, 256, (5, cfg.n_in), dtype=np.uint8))
+    state = prng.seed_state(13, px.shape)
+    for backend in ("reference", "staged", "fused"):
+        out = snn.snn_apply_int(params_q, px, state, cfg, backend=backend)
+        tel = out["telemetry"]
+        np.testing.assert_array_equal(
+            np.asarray(tel.adds).sum(axis=1),
+            np.asarray(out["active_adds"]), err_msg=backend)
+
+
+@pytest.mark.parametrize("sparse_skip", [False, True])
+def test_telemetry_bit_identical_across_backends(rng, sparse_skip):
+    """fused == fused(streamed init path) == staged == reference on every
+    telemetry leaf — including nonzero tile-skip counts (sparse input)."""
+    cfg = dataclasses.replace(SNN_CONFIG_DEEP, num_steps=7,
+                              active_pruning=True, sparse_skip=sparse_skip)
+    params_q = _net(rng, cfg.layer_sizes)
+    # very sparse pixels → zero-spike K-tiles actually occur
+    px = jnp.asarray(np.minimum(rng.integers(0, 256, (4, cfg.n_in)), 3)
+                     .astype(np.uint8))
+    state = prng.seed_state(29, px.shape)
+    outs = {b: snn.snn_apply_int(params_q, px, state, cfg, backend=b)
+            for b in ("reference", "staged", "fused")}
+    for f in _TEL_FIELDS:
+        a = np.asarray(getattr(outs["reference"]["telemetry"], f))
+        for b in ("staged", "fused"):
+            np.testing.assert_array_equal(
+                a, np.asarray(getattr(outs[b]["telemetry"], f)),
+                err_msg=f"{f} on {b}")
+    for lx in range(len(cfg.layer_sizes) - 1):
+        a = np.asarray(outs["reference"]["v_peak"][lx])
+        for b in ("staged", "fused"):
+            np.testing.assert_array_equal(
+                a, np.asarray(outs[b]["v_peak"][lx]),
+                err_msg=f"v_peak[{lx}] on {b}")
+    skipped = int(np.asarray(outs["fused"]["telemetry"].tiles_skipped).sum())
+    if sparse_skip:
+        assert skipped > 0, "sparse input should skip some tiles"
+    else:
+        assert skipped == 0, "dense mode must report zero skipped tiles"
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(1, 2**31), n_chunks=st.integers(1, 4),
+       backend=st.sampled_from(["fused", "fused_streamed", "reference"]))
+def test_telemetry_chunk_split_property(seed, n_chunks, backend):
+    """Property: telemetry concatenated over any random split of the
+    window == the one-shot record, and == the reference record — on the
+    resident AND weight-streamed kernels and the jnp scan."""
+    rng = np.random.default_rng(seed % (2**31))
+    cfg = dataclasses.replace(SNN_CONFIG_DEEP, num_steps=8,
+                              sparse_skip=True)
+    params_q = _net(rng, cfg.layer_sizes)
+    px = jnp.asarray(np.minimum(rng.integers(0, 256, (4, cfg.n_in)), 20)
+                     .astype(np.uint8))
+    state0 = prng.seed_state(seed, px.shape)
+    T = cfg.num_steps
+    cuts = sorted(rng.choice(np.arange(1, T), size=min(n_chunks - 1, T - 1),
+                             replace=False).tolist()) if n_chunks > 1 else []
+    bounds = [0] + cuts + [T]
+
+    def run(be, splits):
+        st_ = snn.snn_window_init(params_q, state0, cfg)
+        tels = []
+        for lo, hi in zip(splits[:-1], splits[1:]):
+            st_, out = snn.snn_window_chunk(params_q, px, st_, cfg,
+                                            chunk_steps=hi - lo, backend=be)
+            tels.append(out["telemetry"])
+        return st_, concat_telemetry(tels)
+
+    _, one_shot = run(backend, [0, T])
+    chunk_state, chunked = run(backend, bounds)
+    _, ref_tel = run("reference", [0, T])
+    for f in _TEL_FIELDS:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(chunked, f)), np.asarray(getattr(one_shot, f)),
+            err_msg=f"{f} split={bounds} backend={backend}")
+        np.testing.assert_array_equal(
+            np.asarray(getattr(chunked, f)), np.asarray(getattr(ref_tel, f)),
+            err_msg=f"{f} vs reference backend={backend}")
+
+
+def test_tile_skip_mirror_matches_ref_oracle(rng):
+    """core.telemetry.layer_tile_skips (kernel-geometry mirror) and
+    kernels.ref.tile_skips_ref (independently re-derived oracle) agree —
+    the double-entry check that a silent geometry change cannot pass."""
+    for b, n_in, n_out in ((1, 32, 10), (5, 300, 140), (9, 784, 10),
+                           (16, 256, 256)):
+        x = rng.random((b, n_in)) < 0.02
+        en = rng.random((b, n_out)) < 0.5
+        en[:, : min(128, n_out)] = False        # a fully-pruned tile
+        for ss in (False, True):
+            got = np.asarray(layer_tile_skips(
+                jnp.asarray(x), jnp.asarray(en), sparse_skip=ss))
+            want = np.asarray(ref.tile_skips_ref(
+                jnp.asarray(x), jnp.asarray(en), sparse_skip=ss))
+            np.testing.assert_array_equal(got, want,
+                                          err_msg=f"{b}x{n_in}x{n_out}")
+    # sanity: totals are bounded by the static tile grid
+    tt = tiles_total((300, 140, 10))
+    assert tt == (3 * 2, 2 * 1)
+
+
+# ---------------------------------------------------------------------------
+# dispatch threshold resolution + spike_matmul telemetry
+# ---------------------------------------------------------------------------
+
+def test_density_threshold_resolution(monkeypatch):
+    """Explicit config value → env override → the historical constant."""
+    monkeypatch.delenv("REPRO_SPIKE_DENSITY_THRESHOLD", raising=False)
+    assert resolve_density_threshold(None) == ops.SPIKE_DENSITY_THRESHOLD
+    monkeypatch.setenv("REPRO_SPIKE_DENSITY_THRESHOLD", "0.4")
+    assert resolve_density_threshold(None) == 0.4
+    assert resolve_density_threshold(0.1) == 0.1        # explicit wins
+    cfg = dataclasses.replace(SNN_CONFIG, spike_density_threshold=0.33)
+    assert resolve_density_threshold(cfg.spike_density_threshold) == 0.33
+
+
+def test_spike_matmul_threshold_and_telemetry(rng):
+    """The dispatch boundary is honored and reported: threshold 1.0 forces
+    the masked kernel, 0.0 forces MXU, and the result never changes."""
+    spikes = jnp.asarray((rng.random((6, 96)) < 0.3).astype(np.uint8))
+    w = jnp.asarray(rng.integers(-256, 256, (96, 40)), jnp.int16)
+    want = np.asarray(ref.spike_matmul_ref(spikes, w))
+    outs = {}
+    for thr in (1.0, 0.0):
+        out, tel = ops.spike_matmul_op(spikes, w, mode="auto",
+                                       density_threshold=thr,
+                                       with_telemetry=True, interpret=True)
+        outs[thr] = np.asarray(out)
+        np.testing.assert_array_equal(outs[thr], want)
+        assert bool(tel.used_masked) == (thr == 1.0)
+        np.testing.assert_allclose(float(tel.density),
+                                   float(np.mean(np.asarray(spikes) != 0)),
+                                   rtol=1e-6)
+    np.testing.assert_array_equal(outs[1.0], outs[0.0])
+
+
+# ---------------------------------------------------------------------------
+# adaptive controller
+# ---------------------------------------------------------------------------
+
+def test_frozen_controller_reproduces_static_choices(monkeypatch):
+    """Frozen mode IS today's behavior: the static threshold and chunk
+    length come back verbatim and observations are no-ops."""
+    monkeypatch.delenv("REPRO_ADAPTIVE_DISPATCH", raising=False)
+    monkeypatch.delenv("REPRO_SPIKE_DENSITY_THRESHOLD", raising=False)
+    ctl = make_controller(None, spike_density_threshold=None,
+                          chunk_steps=4, num_steps=20)
+    assert ctl.frozen
+    assert ctl.dispatch_threshold == ops.SPIKE_DENSITY_THRESHOLD
+    assert ctl.chunk_steps == 4 and ctl.min_chunk_steps == 4
+    ctl.observe(None)           # frozen observe never touches the summary
+    assert ctl.history == [] and ctl.density_ewma is None
+    ctl2 = make_controller(None, spike_density_threshold=0.4,
+                           chunk_steps=6, num_steps=20)
+    assert ctl2.dispatch_threshold == 0.4 and ctl2.chunk_steps == 6
+
+
+def test_adaptive_controller_tracks_density_and_retunes():
+    """Deterministic control law: the EWMA converges toward the observed
+    density, the threshold follows it within bounds, and the chunk length
+    shrinks under retirement pressure / grows in quiet steady state."""
+    cfg = AdaptiveDispatchConfig(adaptive=True, ewma_alpha=0.5,
+                                 min_chunk_steps=2, max_chunk_steps=8,
+                                 grow_patience=2)
+    ctl = TelemetryController(cfg=cfg, static_threshold=0.25,
+                              static_chunk_steps=4, num_steps=20)
+
+    def summary(density, retired, active):
+        from repro.serve import ChunkSummary
+        return ChunkSummary(density_in=density, layer_densities=(density,),
+                            executed_adds=0, tiles_skipped=0,
+                            lanes_retired=retired, lanes_active=active,
+                            active_lane_steps=max(1, active) * 4)
+
+    for _ in range(8):
+        ctl.observe(summary(0.04, retired=4, active=8))
+    assert abs(ctl.density_ewma - 0.04) < 1e-3
+    # gain 1.5 × 0.04 = 0.06 — the boundary walked down toward the traffic
+    assert 0.05 <= ctl.dispatch_threshold < 0.25
+    assert ctl.chunk_steps == cfg.min_chunk_steps   # retirement pressure
+    for _ in range(10):
+        ctl.observe(summary(0.04, retired=0, active=8))
+    assert ctl.chunk_steps > cfg.min_chunk_steps    # quiet → grow
+    assert len(ctl.history) == 18
+    # trajectory is replayable: same observations → same decisions
+    ctl2 = TelemetryController(cfg=cfg, static_threshold=0.25,
+                               static_chunk_steps=4, num_steps=20)
+    for _ in range(8):
+        ctl2.observe(summary(0.04, retired=4, active=8))
+    for _ in range(10):
+        ctl2.observe(summary(0.04, retired=0, active=8))
+    assert [h["chunk_steps"] for h in ctl2.history] == \
+        [h["chunk_steps"] for h in ctl.history]
+
+
+def test_summarize_chunk_measures_known_density(rng):
+    """Constant-level pixels: the summary's density estimate must land on
+    the analytic px/256 Poisson rate (occupancy-weighted)."""
+    level = 128
+    cfg = dataclasses.replace(SNN_CONFIG, num_steps=16)
+    params_q = _net(rng, cfg.layer_sizes)
+    px = jnp.full((4, cfg.n_in), level, jnp.uint8)
+    state = prng.seed_state(3, px.shape)
+    out = snn.snn_apply_int(params_q, px, state, cfg, backend="reference")
+    steps = np.full((4,), cfg.num_steps, np.int32)
+    s = summarize_chunk(out["telemetry"], cfg.layer_sizes,
+                        steps_before=np.zeros((4,), np.int32),
+                        steps_after=steps,
+                        active_before=np.ones((4,), bool),
+                        active_after=np.zeros((4,), bool))
+    assert abs(s.density_in - level / 256) < 0.03
+    assert s.lanes_retired == 4 and s.active_lane_steps == 4 * cfg.num_steps
+    assert s.executed_adds == int(np.asarray(out["active_adds"]).sum())
+
+
+@settings(max_examples=4, deadline=None)
+@given(seed=st.integers(1, 2**31),
+       level=st.sampled_from([0, 33, 128, 255]),
+       patience=st.sampled_from([1, 2, 10_000]))
+def test_adaptive_never_changes_predictions(seed, level, patience):
+    """THE acceptance property: with the controller adaptive (live chunk
+    lengths + threshold) every request's prediction, retirement step,
+    spike registers and frozen add counter are bit-identical to frozen
+    mode — adaptivity moves wall-clock only."""
+    rng = np.random.default_rng(seed % (2**31))
+    cfg = dataclasses.replace(SNN_CONFIG, num_steps=10)
+    params_q = _net(rng, cfg.layer_sizes)
+    imgs = np.minimum(rng.integers(0, 256, (6, cfg.n_in)),
+                      level).astype(np.uint8)
+
+    def run(adaptive):
+        eng = SNNStreamEngine(params_q, cfg, batch_size=2, chunk_steps=4,
+                              patience=patience, seed=seed,
+                              backend="reference", adaptive=adaptive)
+        ids = [eng.submit(im) for im in imgs]
+        res = eng.run()
+        return {i: (res[i].pred, res[i].steps, res[i].adds,
+                    res[i].early_exit, tuple(res[i].spike_counts.tolist()))
+                for i in ids}, eng
+
+    frozen, _ = run(AdaptiveDispatchConfig(adaptive=False))
+    adaptive, eng = run(AdaptiveDispatchConfig(adaptive=True,
+                                               min_chunk_steps=2,
+                                               max_chunk_steps=7,
+                                               grow_patience=1))
+    assert adaptive == frozen
+    assert not eng.controller.frozen
+    assert len(eng.controller.history) > 0
