@@ -1,0 +1,182 @@
+"""Serving-tier benchmark: routing throughput, spray balance, shed
+accounting, and the tier-level contract re-verified where the numbers
+are produced.
+
+Drives ``serve.SNNServingTier`` (N in-process engines, reference
+backend — the routing layer under test is pure host code) and reports
+
+  * **admission throughput** — submissions/s through the least-loaded
+    router, including the load-score evaluation per engine,
+  * **serve throughput** and the resulting **spray balance** across
+    engines (max/min routed per engine),
+  * **shed accounting** under deadline + overload pressure: every
+    submitted id lands in exactly one of results/shed (nothing silently
+    dropped), with the per-reason counters,
+  * the two tier contracts: **bit-identity** (tier == single-engine
+    serving per request) and **rollout-preserves-inflight** (mid-stream
+    weight rollout never changes pre-rollout windows).
+
+Saves results/bench/BENCH_router.json (uploaded as a CI artifact; the
+contract fields are diffed against the committed copy by
+benchmarks.check_tracked).  REPRO_BENCH_TINY=1 shrinks sizes for the
+smoke lane.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.snn_mnist import (SNN_CONFIG, SNN_SERVING_TIER,
+                                     make_serving_tier)
+from repro.serve import SNNStreamEngine
+
+from .common import emit, save_json
+
+
+def _params(rng, sizes):
+    return {"layers": [
+        {"w_q": jnp.asarray(rng.integers(-256, 256, (a, b)), jnp.int16),
+         "scale": jnp.float32(1.0)}
+        for a, b in zip(sizes[:-1], sizes[1:])]}
+
+
+def _sig(r):
+    return (r.pred, r.steps, r.adds, r.early_exit,
+            tuple(r.spike_counts.tolist()))
+
+
+def run():
+    tiny = bool(os.environ.get("REPRO_BENCH_TINY"))
+    sizes = (64, 10) if tiny else (784, 10)
+    T = 8 if tiny else 20
+    chunk = 3 if tiny else 4
+    n_engines = 3
+    lanes = 4 if tiny else 8
+    n_imgs = 6 * n_engines * lanes
+
+    rng = np.random.default_rng(0)
+    cfg = dataclasses.replace(SNN_CONFIG, layer_sizes=sizes, num_steps=T)
+    params_q = _params(rng, sizes)
+    imgs = rng.integers(0, 256, (n_imgs, sizes[0]), dtype=np.uint8)
+    patience = max(1, T // 4)       # early exit live → real load variance
+
+    def make(**kw):
+        knobs = dataclasses.replace(
+            SNN_SERVING_TIER, num_engines=n_engines,
+            lanes_per_engine=lanes, chunk_steps=chunk, queue_limit=None,
+            shedding=False)
+        return make_serving_tier(params_q, cfg, knobs, patience=patience,
+                                 seed=0, backend="reference", **kw)
+
+    # --- admission throughput + spray balance ---------------------------
+    tier = make()
+    t0 = time.perf_counter()
+    for im in imgs:
+        tier.submit(im)
+    dt_admit = time.perf_counter() - t0
+    emit("router.admit", dt_admit * 1e6 / n_imgs,
+         f"engines={n_engines} submits_per_s={n_imgs / dt_admit:.0f}")
+    t0 = time.perf_counter()
+    res = tier.run()
+    dt_serve = time.perf_counter() - t0
+    spray = tier.stats["routed_per_engine"]
+    balance = max(spray) / max(1, min(spray))
+    emit("router.serve", dt_serve * 1e6 / n_imgs,
+         f"imgs_per_s={n_imgs / dt_serve:.0f} spray={spray} "
+         f"balance={balance:.2f}")
+
+    # --- tier bit-identity vs single-engine serving ---------------------
+    ref = SNNStreamEngine(params_q, cfg, batch_size=lanes,
+                          chunk_steps=chunk, patience=patience, seed=0,
+                          backend="reference")
+    for im in imgs:
+        ref.submit(im)
+    ref_res = ref.run()
+    tier_bit_identical = set(res) == set(ref_res) and all(
+        _sig(res[rid]) == _sig(ref_res[rid]) for rid in ref_res)
+    emit("router.bit_identical", None, f"vs_single_engine="
+         f"{tier_bit_identical}")
+
+    # --- shed accounting under deadline + overload pressure -------------
+    shed_tier = make_serving_tier(
+        params_q, cfg,
+        dataclasses.replace(SNN_SERVING_TIER, num_engines=n_engines,
+                            lanes_per_engine=lanes, chunk_steps=chunk,
+                            queue_limit=2, shedding=True),
+        patience=10_000, seed=0, backend="reference")
+    for k, im in enumerate(imgs):
+        shed_tier.submit(
+            im, priority=("batch", "standard", "interactive")[k % 3],
+            deadline_steps=(2 if k % 7 == 0 else None))
+    shed_res = shed_tier.run()
+    served, shed = set(shed_res), set(shed_tier.shed)
+    shed_accounting_ok = (served | shed == set(range(n_imgs))
+                          and not (served & shed))
+    emit("router.shed", None,
+         f"served={len(served)} shed_deadline="
+         f"{shed_tier.stats['shed_deadline']} shed_overload="
+         f"{shed_tier.stats['shed_overload']} displaced="
+         f"{shed_tier.stats['displaced']} partition={shed_accounting_ok}")
+
+    # --- zero-drain rollout preserves in-flight windows -----------------
+    params_new = _params(np.random.default_rng(7), sizes)
+    roll = make()
+    # "in-flight" means IN A LANE: the pre set must fit the tier's lane
+    # capacity, else the overflow queues and (correctly) binds the new
+    # weights at its later admission.
+    n_pre = n_engines * lanes
+    pre = [roll.submit(im) for im in imgs[:n_pre]]
+    roll.step()                     # admits every pre request on version 0
+    t0 = time.perf_counter()
+    new_version = roll.begin_rollout(params_new)
+    dt_roll = time.perf_counter() - t0
+    post = [roll.submit(im) for im in imgs[n_pre:]]
+    roll_res = roll.run()
+    base = make()
+    for im in imgs[:n_pre]:
+        base.submit(im)
+    base_res = base.run()
+    rollout_preserves_inflight = all(
+        _sig(roll_res[rid]) == _sig(base_res[rid]) for rid in pre)
+    rollout_completed = not roll.rollout_active and all(
+        [e.kind for e in h] == ["begin", "complete"]
+        for h in roll.rollout_history())
+    new_bound = all(roll_res[rid].weight_version == new_version
+                    for rid in post)
+    emit("router.rollout", dt_roll * 1e6,
+         f"preserves_inflight={rollout_preserves_inflight} "
+         f"completed={rollout_completed} new_bound={new_bound}")
+
+    save_json({
+        "engines": n_engines,
+        "lanes_per_engine": lanes,
+        "layer_sizes": list(sizes),
+        "num_steps": T,
+        "chunk_steps": chunk,
+        "admit_us_per_request": dt_admit * 1e6 / n_imgs,
+        "imgs_per_s": n_imgs / dt_serve,
+        "spray": spray,
+        "spray_balance": balance,
+        "shed": {
+            "served": len(served),
+            "deadline": shed_tier.stats["shed_deadline"],
+            "overload": shed_tier.stats["shed_overload"],
+            "displaced": shed_tier.stats["displaced"],
+        },
+        "tier_bit_identical": tier_bit_identical,
+        "shed_accounting_ok": shed_accounting_ok,
+        "rollout_preserves_inflight": rollout_preserves_inflight,
+        "rollout_completed": rollout_completed,
+    }, "bench", "BENCH_router.json")
+    assert tier_bit_identical and shed_accounting_ok
+    assert rollout_preserves_inflight and rollout_completed and new_bound
+    return {"admit": dt_admit, "serve": dt_serve}
+
+
+if __name__ == "__main__":
+    run()

@@ -25,6 +25,15 @@ suite and commit the refreshed root copies).
 
   PYTHONPATH=src python -m benchmarks.check_tracked \\
       BENCH_fused.json BENCH_fused_multilayer.json
+  PYTHONPATH=src python -m benchmarks.check_tracked --all
+
+``--all`` (or no arguments) checks **every** BENCH_*.json committed at
+HEAD — discovered with ``git ls-tree``, not hand-listed.  This closes
+the hole where a newly committed artifact whose producing suite silently
+stopped running would never be diffed: an explicit CI list only checks
+what someone remembered to add, the glob checks what the repo actually
+claims.  A committed artifact with no fresh results/bench counterpart is
+a failure, not a skip.
 """
 
 from __future__ import annotations
@@ -53,6 +62,11 @@ CONTRACT_FIELDS = [
     "adds_match",
     "density_estimate_ok",
     "adaptive_matches_frozen",
+    # serving-tier contract (BENCH_router.json)
+    "tier_bit_identical",
+    "shed_accounting_ok",
+    "rollout_preserves_inflight",
+    "rollout_completed",
 ]
 
 
@@ -113,11 +127,27 @@ def check(names: list[str]) -> list[str]:
     return errors
 
 
+def committed_artifacts() -> list[str]:
+    """Every root-level BENCH_*.json tracked at git HEAD."""
+    out = subprocess.run(
+        ["git", "ls-tree", "--name-only", "HEAD"], cwd=REPO_ROOT,
+        capture_output=True, text=True, timeout=60)
+    if out.returncode != 0:
+        raise RuntimeError(f"git ls-tree failed: {out.stderr.strip()}")
+    return sorted(n for n in out.stdout.splitlines()
+                  if n.startswith("BENCH_") and n.endswith(".json"))
+
+
 def main(argv=None) -> None:
     names = (argv if argv is not None else sys.argv[1:])
-    if not names:
-        print("usage: python -m benchmarks.check_tracked BENCH_x.json ...")
-        sys.exit(2)
+    if not names or names == ["--all"]:
+        names = committed_artifacts()
+        print(f"# checking all {len(names)} BENCH_*.json committed at "
+              f"HEAD: {', '.join(names)}")
+        if not names:
+            print("usage: python -m benchmarks.check_tracked "
+                  "[BENCH_x.json ... | --all]  (no artifacts at HEAD)")
+            sys.exit(2)
     errors = check(list(names))
     for e in errors:
         print(f"TRACKED-ARTIFACT MISMATCH: {e}")

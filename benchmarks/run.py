@@ -29,6 +29,8 @@ SUITES = {
     "engine": ("bench_engine", "SNN engine throughput (JAX/kernels)"),
     "engine_sharded": ("bench_engine_sharded",
                        "Sharded streaming engine (lane mesh + overlap)"),
+    "router": ("bench_router",
+               "Serving tier (routing, shedding, weight rollout)"),
     "fused": ("bench_fused", "Fused vs staged encode→LIF (time + bytes)"),
     "roofline": ("roofline", "Roofline terms from the dry-run"),
 }

@@ -69,6 +69,61 @@ class SNNStreamMeshConfig:
 
 SNN_STREAM_MESH = SNNStreamMeshConfig()
 
+# Priority classes of the serving tier, ordered lowest → highest: under
+# overload the router sheds from the left (batch work is the first to
+# go), deadline admission applies to every class equally.  Deployments
+# that need more tiers replace the tuple wholesale — the router treats it
+# as an ordered vocabulary, nothing is hard-coded to these three names.
+TIER_PRIORITY_CLASSES = ("batch", "standard", "interactive")
+
+
+# Serving-tier knobs (serve.SNNServingTier): the fleet front end that
+# sprays requests across ``num_engines`` per-host engines, applies the
+# SLO admission policy, and drives zero-drain weight rollouts.  Deadlines
+# are in window steps (the currency of RequestResult.steps); ``None``
+# means the class of requests carries no deadline and is never
+# deadline-shed.  ``queue_limit`` caps each engine's host queue — the
+# overload boundary where lowest-priority-first shedding starts;
+# ``None`` queues without bound (and only deadline shedding applies).
+@dataclass(frozen=True)
+class SNNServingTierConfig:
+    num_engines: int = 2
+    lanes_per_engine: int = 8
+    chunk_steps: int = 4
+    priority_classes: tuple = TIER_PRIORITY_CLASSES
+    default_priority: str = "standard"
+    default_deadline_steps: int | None = None
+    queue_limit: int | None = 64
+    shedding: bool = True
+    # sharded=True carves the visible devices into num_engines contiguous
+    # slices — each engine is a ShardedSNNStreamEngine over its own mesh
+    # (a simulated per-host lane mesh; CI runs two 4-device hosts).
+    sharded: bool = False
+    devices_per_engine: int | None = None
+    adaptive: "AdaptiveDispatchConfig | None" = None
+
+
+SNN_SERVING_TIER = SNNServingTierConfig()
+
+
+def make_serving_tier(params_q: dict, snn_cfg: SNNConfig = SNN_CONFIG,
+                      knobs: SNNServingTierConfig = SNN_SERVING_TIER,
+                      **tier_kw):
+    """Build a ``serve.SNNServingTier`` from the knobs — the deployment
+    surface for the fleet front end, mirroring ``make_stream_engine``."""
+    from ..serve import SNNServingTier
+    return SNNServingTier(
+        params_q, snn_cfg, num_engines=knobs.num_engines,
+        lanes_per_engine=knobs.lanes_per_engine,
+        chunk_steps=knobs.chunk_steps,
+        priority_classes=knobs.priority_classes,
+        default_priority=knobs.default_priority,
+        default_deadline_steps=knobs.default_deadline_steps,
+        queue_limit=knobs.queue_limit, shedding=knobs.shedding,
+        sharded=knobs.sharded,
+        devices_per_engine=knobs.devices_per_engine,
+        adaptive=knobs.adaptive, **tier_kw)
+
 
 def make_stream_mesh(knobs: SNNStreamMeshConfig = SNN_STREAM_MESH):
     """Build the serving lane mesh from the knobs (AxisType-free fallback

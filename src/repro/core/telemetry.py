@@ -36,8 +36,11 @@ import jax.numpy as jnp
 
 __all__ = [
     "ChunkTelemetry",
+    "EngineLoad",
     "MatmulTelemetry",
     "DEFAULT_SPIKE_DENSITY_THRESHOLD",
+    "estimate_eta_steps",
+    "load_score",
     "resolve_density_threshold",
     "resolve_sparse_skip",
     "layer_tile_skips",
@@ -131,6 +134,67 @@ class ChunkTelemetry(NamedTuple):
         """
         fan_in = jnp.asarray(layer_sizes[:-1], jnp.float32)
         return self.n_spk.astype(jnp.float32) / fan_in[None, :, None]
+
+
+class EngineLoad(NamedTuple):
+    """Host-side load summary of one serving engine (router currency).
+
+    Every field is either free host bookkeeping (occupancy, queue depth —
+    the engine already tracks both) or an estimate the telemetry loop
+    maintains without extra device syncs: ``mean_service_steps`` is the
+    EWMA of window steps retired requests actually consumed (early exit
+    makes this traffic-dependent — exactly why routing on the *measured*
+    rate beats routing on ``num_steps``), ``density_ewma`` is the
+    adaptive controller's estimate (``None`` when frozen or unobserved).
+    The serving tier sprays requests by :func:`load_score` and gates
+    admission with :func:`estimate_eta_steps` — both pure functions of
+    this record, so routing decisions are deterministic and replayable.
+    """
+
+    lanes_total: int               # batch-tile slots the engine owns
+    lanes_busy: int                # slots currently bound to a request
+    queue_depth: int               # host-queue requests not yet admitted
+    mean_service_steps: float      # EWMA of consumed steps per request
+    retired_total: int             # requests completed since construction
+    density_ewma: float | None     # controller estimate (None if frozen)
+
+    @property
+    def occupancy(self) -> float:
+        """Fraction of lane slots currently serving a request."""
+        return self.lanes_busy / max(1, self.lanes_total)
+
+
+def load_score(load: EngineLoad) -> float:
+    """Expected outstanding work per lane slot, in window steps.
+
+    Busy lanes owe on average half a service window; queued requests owe
+    a full one.  Normalizing by the slot count makes engines of different
+    widths comparable, and scaling by the *measured* mean service steps
+    lets an engine whose traffic exits early absorb proportionally more
+    load.  Pure and deterministic — the router's least-loaded comparison
+    (ties broken by engine index) is reproducible in CI.
+    """
+    owed = 0.5 * load.lanes_busy + load.queue_depth
+    return owed * load.mean_service_steps / max(1, load.lanes_total)
+
+
+def estimate_eta_steps(load: EngineLoad) -> float:
+    """Expected window steps until a NEW admission would complete.
+
+    Queue-wave model: a request entering the host queue waits zero waves
+    if a lane slot is free, else one wave per ``lanes_total`` requests
+    already ahead of it, each wave lasting the measured mean service
+    window; its own service appends one more.  Deliberately coarse — the
+    admission policy needs a monotone, deterministic feasibility
+    estimate, not a simulator — and conservative in the right direction:
+    early-exit traffic shortens the measured wave, never lengthens it.
+    """
+    free = load.lanes_total - load.lanes_busy
+    if load.queue_depth < free:
+        waves = 0
+    else:
+        waves = 1 + (load.queue_depth - free) // max(1, load.lanes_total)
+    return (waves + 1) * load.mean_service_steps
 
 
 class MatmulTelemetry(NamedTuple):

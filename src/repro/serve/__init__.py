@@ -14,6 +14,8 @@ from .early_exit import (StabilityGateState, eos_gate, stability_gate,
                          stability_init, stability_specs, stability_step)
 from .engine import (ServeState, generate, make_decode_step, make_prefill,
                      pad_cache_to)
+from .rollout import RolloutEvent, WeightBank
+from .router import ShedRecord, SNNServingTier
 from .snn_engine import (RequestResult, ShardedSNNStreamEngine,
                          SNNStreamEngine)
 from .telemetry import (AdaptiveDispatchConfig, ChunkSummary,
@@ -23,5 +25,6 @@ __all__ = ["ServeState", "generate", "make_decode_step", "make_prefill",
            "pad_cache_to", "eos_gate", "stability_gate",
            "StabilityGateState", "stability_init", "stability_specs",
            "stability_step", "SNNStreamEngine", "ShardedSNNStreamEngine",
+           "SNNServingTier", "ShedRecord", "RolloutEvent", "WeightBank",
            "RequestResult", "AdaptiveDispatchConfig", "ChunkSummary",
            "TelemetryController", "summarize_chunk"]

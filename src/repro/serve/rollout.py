@@ -1,0 +1,152 @@
+"""Zero-drain weight rollout: version-tagged packed weight planes.
+
+Production serving replaces model weights while traffic is in flight.
+Draining — refusing admissions until every lane retires, swapping planes,
+then re-admitting — costs a full window of fleet throughput per engine and
+couples rollout latency to the slowest request.  This module implements
+the drain-free alternative the streaming engine's per-lane isolation
+makes cheap:
+
+  * every packed weight plane set is **version-tagged** in a
+    :class:`WeightBank` (monotone integer versions, the engine's
+    device-placed tuples as values);
+  * ``LaneState.weight_version`` records, per lane, the bank version the
+    request was **admitted** under — in-flight windows finish on their
+    admission-time weights, new admissions bind the bank's current
+    version;
+  * while two (or more) versions have live lanes, the engine dispatches
+    one gated chunk per live version — each run freezes the other
+    versions' lanes via the existing ``active`` mask, and because a
+    frozen lane is bit-for-bit untouched (PRNG, membranes, counters —
+    the compaction contract), the per-lane merge in
+    :func:`merge_version_chunks` reproduces exactly what each lane would
+    compute served alone.  A rollout can therefore **never** change the
+    outputs of windows admitted before it (the tier bit-identity test
+    pins this);
+  * the rollout **completes when the last old-version lane retires**:
+    :meth:`WeightBank.gc` drops versions no occupied lane references and
+    records the begin/complete transitions in :attr:`WeightBank.history`
+    (the observable state machine — ``idle → rolling → idle``).
+
+The temporary cost is one extra chunk launch per additional live version,
+only while old lanes are still draining; steady state always runs the
+single-version fast path.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from ..core.telemetry import ChunkTelemetry
+
+__all__ = ["RolloutEvent", "WeightBank", "merge_version_chunks"]
+
+
+@dataclass(frozen=True)
+class RolloutEvent:
+    """One transition of the rollout state machine (recorded, auditable)."""
+
+    kind: str          # "begin" (new version published) | "complete"
+    version: int       # the version published / the rollout that finished
+    retired: tuple = ()  # versions dropped by the completing gc
+
+
+class WeightBank:
+    """Version-tagged store of device-placed packed weight-plane tuples.
+
+    The bank never interprets the weight tuples — placement (device_put,
+    replication over a mesh) is the engine's job via its
+    ``_place_weights`` hook; the bank owns the version bookkeeping:
+    which versions exist, which one new admissions bind
+    (:attr:`current`), and when an old version's last lane retired
+    (:meth:`gc`).
+    """
+
+    def __init__(self, weights: tuple, version: int = 0):
+        self._planes: dict[int, tuple] = {version: weights}
+        self.current = version
+        self.history: list[RolloutEvent] = []
+
+    # ---- queries --------------------------------------------------------
+    @property
+    def versions(self) -> tuple[int, ...]:
+        """Live versions, ascending (more than one ⇒ a rollout is active)."""
+        return tuple(sorted(self._planes))
+
+    @property
+    def rolling(self) -> bool:
+        """True while any pre-rollout version still holds live lanes."""
+        return len(self._planes) > 1
+
+    def weights(self, version: int) -> tuple:
+        return self._planes[version]
+
+    # ---- state machine --------------------------------------------------
+    def begin(self, weights: tuple) -> int:
+        """Publish a new weight version; new admissions bind it.
+
+        The engine validates shape/code compatibility before calling (the
+        lane state layout is fixed by ``layer_sizes``, so a rollout can
+        retune weights, never retopologize).  Returns the new version.
+        """
+        v = self.current + 1
+        self._planes[v] = weights
+        self.current = v
+        self.history.append(RolloutEvent(kind="begin", version=v))
+        return v
+
+    def gc(self, live_versions: set[int]) -> tuple[int, ...]:
+        """Drop versions no occupied lane references (never the current).
+
+        Called at compaction time with the set of versions the occupied
+        lanes carry.  Dropping the last old version IS rollout
+        completion — recorded as a ``complete`` event.  Returns the
+        versions retired by this call.
+        """
+        dead = tuple(v for v in self._planes
+                     if v != self.current and v not in live_versions)
+        for v in dead:
+            del self._planes[v]
+        if dead and not self.rolling:
+            self.history.append(RolloutEvent(
+                kind="complete", version=self.current, retired=dead))
+        return dead
+
+
+def merge_version_chunks(outputs):
+    """Merge per-version gated chunk runs into one lane tile + telemetry.
+
+    ``outputs`` is a list of ``(mask, lanes, telemetry)`` — one entry per
+    live version, ``mask`` the (B,) bool "lane belongs to this version"
+    selector, ``lanes`` the LaneState that version's run produced (its
+    own lanes advanced, every other lane frozen bit-for-bit).  Each lane
+    takes every leaf from its *own* version's run, so the merge equals
+    serving each version's lanes alone; lanes owned by none of the masks
+    (free slots with stale tags) fall through to the first run, where
+    they were frozen — i.e. unchanged.
+
+    Telemetry merges by **summation**: a frozen lane reports zero
+    activity rows, so each lane's counts appear in exactly one run, and
+    the tile counter sums to the total block geometry the version
+    launches actually executed (rollout chunks really do launch once per
+    live version — the telemetry says so).
+    """
+    _, merged, tel0 = outputs[0]
+    for mask, lanes, _ in outputs[1:]:
+        m = jnp.asarray(mask)
+
+        def sel(new, old, m=m):
+            return jnp.where(m.reshape(m.shape + (1,) * (new.ndim - 1)),
+                             new, old)
+
+        merged = jax.tree.map(sel, lanes, merged)
+    tel = ChunkTelemetry(
+        n_spk=sum((t.n_spk for _, _, t in outputs[1:]), tel0.n_spk),
+        n_en=sum((t.n_en for _, _, t in outputs[1:]), tel0.n_en),
+        tiles_skipped=sum((t.tiles_skipped for _, _, t in outputs[1:]),
+                          tel0.tiles_skipped),
+    )
+    return merged, tel

@@ -1,0 +1,310 @@
+"""Multi-host serving tier: telemetry-routed spraying + SLO admission.
+
+The per-device datapath (fused megakernel, lane mesh, adaptive telemetry)
+serves one engine's worth of traffic; this module is the tier above it —
+the front end a fleet deployment actually exposes.  An
+:class:`SNNServingTier` owns N per-host engines (plain or sharded — in
+one process here, but nothing below the ``submit``/``step`` surface knows
+that) and makes the three decisions a fleet front end must make:
+
+**Routing** — requests spray **least-loaded** across engines, scored by
+the load signals the serving telemetry loop already maintains for free
+(:meth:`SNNStreamEngine.load_summary` → ``core.telemetry.EngineLoad``):
+lane occupancy, host-queue depth, the measured mean service window
+(early-exit traffic drains faster — the retirement-rate signal), and the
+controller's density EWMA when adaptive.  Scoring is a pure function
+(``core.telemetry.load_score``) with a deterministic lowest-index
+tie-break, so a replayed submission stream routes identically — CI
+reproducibility is a feature of the router, not an accident.
+
+**SLO-aware admission** — the paper's active-pruning/early-exit design
+makes per-request latency *structurally* variable, which is exactly the
+regime where deadline-aware shedding beats FIFO queueing (SparrowSNN
+makes the same argument for deadline-bound edge inference).  Each request
+carries a deadline in **window steps** (the currency of
+``RequestResult.steps``) and a **priority class**; a request whose
+completion estimate (``core.telemetry.estimate_eta_steps``, fed by the
+measured retirement rate) exceeds its deadline is **shed at admission** —
+recorded in :attr:`SNNServingTier.shed` with the estimate that rejected
+it, never silently dropped.  Under overload (every engine's host queue at
+``queue_limit``) the tier sheds **lowest-priority-first**: a higher-class
+arrival displaces the newest lowest-class queued request instead of
+queueing forever behind it.
+
+**Zero-drain weight rollout** — :meth:`begin_rollout` broadcasts
+version-tagged packed planes to every engine (``serve.rollout``):
+in-flight windows finish on their admission-time weights, new admissions
+bind the new version, and the rollout completes when the last old-version
+lane retires fleet-wide.  No admission pause, no drained windows.
+
+The whole tier rides the existing bit-identity contract: routing and
+shedding change *which* engine serves a request (or whether it is served)
+— never its prediction.  Every engine is constructed with the tier's
+seed, and requests carry their tier-global id into
+``engine.submit(request_id=...)``, so a request's window is a pure
+function of ``(seed, id, pixels)`` regardless of placement — the
+property test replays random schedules against single-engine serving.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from ..core.snn import SNNConfig
+from ..core.telemetry import estimate_eta_steps, load_score
+from .snn_engine import RequestResult, SNNStreamEngine
+
+__all__ = ["DEFAULT_PRIORITY_CLASSES", "ShedRecord", "SNNServingTier"]
+
+# Priority classes, ordered lowest → highest.  Overload shedding walks
+# this order from the left; deployments override the tuple wholesale
+# (configs.snn_mnist.SNNServingTierConfig threads it through).
+DEFAULT_PRIORITY_CLASSES = ("batch", "standard", "interactive")
+
+
+@dataclass(frozen=True)
+class ShedRecord:
+    """Why a request was not served (the recorded, auditable drop).
+
+    ``reason`` is ``"deadline"`` (the admission-time completion estimate
+    exceeded the request's deadline) or ``"overload"`` (every engine
+    queue was full and the request was — or was displaced by — a
+    higher-priority arrival).
+    """
+
+    request_id: int
+    reason: str                    # "deadline" | "overload"
+    priority: str
+    priority_level: int
+    deadline_steps: int | None
+    eta_steps: float | None = None  # the estimate that rejected it
+    displaced_by: int | None = None  # overload: the admitted higher-prio rid
+
+
+class SNNServingTier:
+    """Front-end router over N same-seed streaming engines (class doc
+    above; construction knobs mirror ``SNNServingTierConfig``).
+
+    ``sharded=True`` partitions the visible jax devices into
+    ``num_engines`` contiguous slices — each engine becomes a
+    ``ShardedSNNStreamEngine`` over its own slice's mesh, i.e. a
+    simulated per-host lane mesh (CI runs two 4-device "hosts" on an
+    8-device forced-host CPU).  ``shedding=False`` disables both shed
+    paths (every request is eventually served — the bit-identity
+    property's configuration).
+    """
+
+    def __init__(self, params_q: dict, cfg: SNNConfig, *,
+                 num_engines: int = 2, lanes_per_engine: int = 8,
+                 chunk_steps: int = 4, patience: int = 2, seed: int = 0,
+                 backend: str | None = None,
+                 priority_classes: tuple = DEFAULT_PRIORITY_CLASSES,
+                 default_priority: str = "standard",
+                 default_deadline_steps: int | None = None,
+                 queue_limit: int | None = None, shedding: bool = True,
+                 sharded: bool = False,
+                 devices_per_engine: int | None = None,
+                 adaptive=None):
+        if num_engines < 1:
+            raise ValueError(f"num_engines must be >= 1, got {num_engines}")
+        if default_priority not in priority_classes:
+            raise ValueError(f"default priority {default_priority!r} not in "
+                             f"{priority_classes}")
+        self.priority_classes = tuple(priority_classes)
+        self.default_priority = default_priority
+        self.default_deadline_steps = default_deadline_steps
+        self.queue_limit = queue_limit
+        self.shedding = shedding
+        self.seed = seed
+        self.engines: list[SNNStreamEngine] = []
+        if sharded:
+            import jax
+
+            from ..distributed.sharding import make_device_mesh
+            from .snn_engine import ShardedSNNStreamEngine
+            devs = jax.devices()
+            per = (devices_per_engine if devices_per_engine is not None
+                   else len(devs) // num_engines)
+            if per < 1 or per * num_engines > len(devs):
+                raise ValueError(
+                    f"cannot carve {num_engines} × {per}-device hosts out "
+                    f"of {len(devs)} visible devices")
+            for i in range(num_engines):
+                mesh = make_device_mesh(
+                    (per,), ("data",), devices=devs[i * per:(i + 1) * per])
+                self.engines.append(ShardedSNNStreamEngine(
+                    params_q, cfg, mesh=mesh,
+                    batch_size=lanes_per_engine, chunk_steps=chunk_steps,
+                    patience=patience, seed=seed, backend=backend,
+                    adaptive=adaptive))
+        else:
+            for i in range(num_engines):
+                self.engines.append(SNNStreamEngine(
+                    params_q, cfg, batch_size=lanes_per_engine,
+                    chunk_steps=chunk_steps, patience=patience, seed=seed,
+                    backend=backend, adaptive=adaptive))
+        self.shed: dict[int, ShedRecord] = {}
+        self._assignment: dict[int, int] = {}    # rid -> engine index
+        self._meta: dict[int, tuple] = {}        # rid -> (level, prio, ddl)
+        self._next_id = 0
+        self.stats = {"routed_per_engine": [0] * num_engines,
+                      "shed_deadline": 0, "shed_overload": 0,
+                      "displaced": 0}
+
+    # ---- routing --------------------------------------------------------
+    def _route_index(self) -> int:
+        """Least-loaded engine; ties break on the lowest index (the
+        deterministic spray order the reproducibility tests replay)."""
+        scores = [(load_score(e.load_summary()), i)
+                  for i, e in enumerate(self.engines)]
+        return min(scores)[1]
+
+    def _level(self, priority: str) -> int:
+        try:
+            return self.priority_classes.index(priority)
+        except ValueError:
+            raise ValueError(f"unknown priority class {priority!r}: tier "
+                             f"serves {self.priority_classes}") from None
+
+    def _shed(self, rid: int, reason: str, priority: str, level: int,
+              deadline: int | None, *, eta: float | None = None,
+              displaced_by: int | None = None) -> None:
+        self.shed[rid] = ShedRecord(
+            request_id=rid, reason=reason, priority=priority,
+            priority_level=level, deadline_steps=deadline, eta_steps=eta,
+            displaced_by=displaced_by)
+        self.stats[f"shed_{reason}"] += 1
+
+    def _overload_victim(self) -> int | None:
+        """The queued request overload shedding would displace: lowest
+        priority class first, newest arrival within the class (its wait
+        so far is the smallest sunk cost).  None if any queue has room."""
+        if self.queue_limit is None:
+            return None
+        if any(len(e.queue) < self.queue_limit for e in self.engines):
+            return None
+        queued = [rid for e in self.engines for rid, _ in e.queue]
+        if not queued:
+            return None
+        return max(queued, key=lambda r: (-self._meta[r][0], r))
+
+    def _evict(self, victim: int) -> int:
+        """Remove a queued request from its engine; returns the engine."""
+        idx = self._assignment.pop(victim)
+        eng = self.engines[idx]
+        eng.queue = [q for q in eng.queue if q[0] != victim]
+        self.stats["routed_per_engine"][idx] -= 1
+        return idx
+
+    # ---- intake ---------------------------------------------------------
+    def submit(self, pixels_u8, *, priority: str | None = None,
+               deadline_steps: int | None = None) -> int:
+        """Admit (or shed) one request; returns its tier-global id.
+
+        Admission runs entirely at submit time — shed decisions are never
+        deferred to a queue scan, so a caller learns a request's fate
+        (``rid in tier.shed``) as soon as the tier does.
+        """
+        rid = self._next_id
+        self._next_id += 1
+        priority = self.default_priority if priority is None else priority
+        level = self._level(priority)
+        deadline = (self.default_deadline_steps if deadline_steps is None
+                    else deadline_steps)
+        self._meta[rid] = (level, priority, deadline)
+        if not self.shedding:
+            self._admit(rid, pixels_u8, self._route_index())
+            return rid
+        # overload first: a doomed-by-deadline request must not displace a
+        # queued one
+        victim = self._overload_victim()
+        if victim is not None:
+            if level <= self._meta[victim][0]:
+                # nothing queued is lower-priority than the arrival
+                self._shed(rid, "overload", priority, level, deadline)
+                return rid
+        idx = (self._route_index() if victim is None else None)
+        eta = estimate_eta_steps(
+            self.engines[idx if idx is not None
+                         else self._assignment[victim]].load_summary())
+        if deadline is not None and eta > deadline:
+            self._shed(rid, "deadline", priority, level, deadline, eta=eta)
+            return rid
+        if victim is not None:
+            vl, vp, vd = self._meta[victim]
+            self._shed(victim, "overload", vp, vl, vd, displaced_by=rid)
+            idx = self._evict(victim)
+            self.stats["displaced"] += 1
+        self._admit(rid, pixels_u8, idx)
+        return rid
+
+    def _admit(self, rid: int, pixels_u8, idx: int) -> None:
+        self.engines[idx].submit(pixels_u8, request_id=rid)
+        self._assignment[rid] = idx
+        self.stats["routed_per_engine"][idx] += 1
+
+    # ---- drive ----------------------------------------------------------
+    @property
+    def pending(self) -> int:
+        return sum(e.pending for e in self.engines)
+
+    def step(self) -> list[int]:
+        """One chunk on every engine with work; returns finished rids."""
+        done = []
+        for e in self.engines:
+            if e.pending:
+                done.extend(e.step())
+        return done
+
+    def run(self, max_chunks: int | None = None) -> dict[int, RequestResult]:
+        """Drive all engines until every admitted request has a result.
+
+        Engines advance in lockstep rounds (one chunk each per round) —
+        the in-process stand-in for N hosts running concurrently.  Shed
+        requests are *not* in the returned dict; they are in
+        :attr:`shed`, which partitions every submitted id with
+        :attr:`results`.
+        """
+        limit = max_chunks if max_chunks is not None else sum(
+            (e.pending + e.batch_size)
+            * (e.cfg.num_steps // max(1, e.controller.min_chunk_steps) + 2)
+            for e in self.engines)
+        for _ in range(limit):
+            if self.pending == 0:
+                break
+            self.step()
+        for e in self.engines:
+            e.run(max_chunks=0)     # final harvest of retired lanes
+        return self.results
+
+    @property
+    def results(self) -> dict[int, RequestResult]:
+        out: dict[int, RequestResult] = {}
+        for e in self.engines:
+            out.update(e.results)
+        return out
+
+    def load_report(self) -> list:
+        """Per-engine ``EngineLoad`` snapshot (ordered by engine index)."""
+        return [e.load_summary() for e in self.engines]
+
+    # ---- weight rollout -------------------------------------------------
+    def begin_rollout(self, params_q: dict) -> int:
+        """Broadcast new packed weight planes to every engine, zero-drain.
+
+        Returns the fleet-wide new version (engines move in lockstep —
+        they were constructed together and roll together).  Completion is
+        per-engine as its last old-version lane retires;
+        :attr:`rollout_active` goes False when the whole fleet finished.
+        """
+        versions = {e.begin_rollout(params_q) for e in self.engines}
+        assert len(versions) == 1, f"engines out of lockstep: {versions}"
+        return versions.pop()
+
+    @property
+    def rollout_active(self) -> bool:
+        return any(e.bank.rolling for e in self.engines)
+
+    def rollout_history(self) -> list:
+        """Per-engine rollout event logs (ordered by engine index)."""
+        return [list(e.bank.history) for e in self.engines]

@@ -67,9 +67,11 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from ..core import lif as lif_mod
 from ..core import prng as prng_mod
 from ..core.snn import SNNConfig, readout_pred, snn_int_stack_step
-from ..core.telemetry import (ChunkTelemetry, telemetry_partition_specs)
+from ..core.telemetry import (ChunkTelemetry, EngineLoad,
+                              telemetry_partition_specs)
 from ..distributed.sharding import make_device_mesh, shard_map_compat
 from .early_exit import StabilityGateState, stability_specs, stability_step
+from .rollout import WeightBank, merge_version_chunks
 from .telemetry import AdaptiveDispatchConfig, make_controller, \
     summarize_chunk
 
@@ -95,6 +97,7 @@ class LaneState(NamedTuple):
     steps: jax.Array       # (B,) int32 window steps executed
     adds: jax.Array        # (B,) int32 executed synaptic adds (energy)
     active: jax.Array      # (B,) bool — lane still consuming compute
+    weight_version: jax.Array  # (B,) int32 admission-time WeightBank tag
 
 
 @dataclass
@@ -105,6 +108,7 @@ class RequestResult:
     steps: int             # window steps actually consumed
     adds: int              # synaptic adds executed (energy side channel)
     early_exit: bool       # retired by the stability gate before T
+    weight_version: int = 0  # weight plane version the window ran on
 
 
 def _init_lanes(batch: int, layer_sizes: tuple[int, ...], num_steps: int,
@@ -125,6 +129,7 @@ def _init_lanes(batch: int, layer_sizes: tuple[int, ...], num_steps: int,
         steps=jnp.zeros((batch,), jnp.int32),
         adds=jnp.zeros((batch,), jnp.int32),
         active=jnp.zeros((batch,), bool),
+        weight_version=jnp.zeros((batch,), jnp.int32),
     )
 
 
@@ -163,7 +168,8 @@ def _stream_chunk_impl(lanes: LaneState, weights: tuple, *, chunk_steps: int,
             gate_prev=k["gate"]["prev"], gate_streak=k["gate"]["streak"],
             steps=k["steps"],
             adds=lanes.adds + jnp.sum(k["active_adds"], axis=0),
-            active=k["gate"]["active"]), k["telemetry"]
+            active=k["gate"]["active"],
+            weight_version=lanes.weight_version), k["telemetry"]
 
     def body(carry, _):
         st = carry
@@ -221,6 +227,7 @@ def _stream_chunk_impl(lanes: LaneState, weights: tuple, *, chunk_steps: int,
             steps=steps,
             adds=st.adds + jnp.where(act, adds_t, 0),
             active=jnp.where(act, still, st.active),
+            weight_version=st.weight_version,
         ), (tel_spk, tel_en, tel["tiles"])
 
     lanes, (tspk, ten, ttile) = jax.lax.scan(body, lanes, None,
@@ -276,7 +283,7 @@ def lane_partition_specs(n_layers: int,
         px=p, rng=p, v=(p,) * n_layers, en=(p,) * n_layers,
         v_peak=(p,) * n_layers,
         counts=p, first=p, gate_prev=gate.prev, gate_streak=gate.streak,
-        steps=p, adds=p, active=p)
+        steps=p, adds=p, active=p, weight_version=p)
 
 
 def make_sharded_stream_chunk(mesh: Mesh, axis_name: str, n_layers: int, *,
@@ -352,9 +359,9 @@ class SNNStreamEngine:
                 f"unknown readout {cfg.readout!r}: the streaming engine "
                 f"implements 'count', 'first_spike' and 'membrane'")
         from ..core.snn import fused_unsupported_reason
-        self.weights = tuple(layer["w_q"] for layer in params_q["layers"])
-        self.layer_sizes = tuple([self.weights[0].shape[0]]
-                                 + [w.shape[1] for w in self.weights])
+        weights = tuple(layer["w_q"] for layer in params_q["layers"])
+        self.layer_sizes = tuple([weights[0].shape[0]]
+                                 + [w.shape[1] for w in weights])
         # Per-device lane tile (the sharded subclass passes its slice;
         # single-device serving holds the whole tile) — scopes the fused
         # VMEM feasibility checks below to one device's launch.
@@ -362,7 +369,7 @@ class SNNStreamEngine:
 
         def reason_for(streamed: bool) -> str | None:
             return fused_unsupported_reason(
-                cfg, len(self.weights), self.layer_sizes,
+                cfg, len(weights), self.layer_sizes,
                 trace_steps=chunk_steps, local_batch=self.local_batch,
                 streamed=streamed)
 
@@ -386,11 +393,14 @@ class SNNStreamEngine:
         self.backend = backend
         if backend in ("fused", "fused_streamed"):
             from ..kernels.ops import validate_weight_codes
-            validate_weight_codes(self.weights)  # int8-packing range
+            validate_weight_codes(weights)  # int8-packing range
             reason = reason_for(backend == "fused_streamed")
             if reason is not None:
                 raise ValueError(f"{backend} streaming backend unavailable:"
                                  f" {reason} — use backend='reference'")
+        # Version-tagged weight store (serve.rollout): new admissions bind
+        # bank.current; in-flight lanes keep their admission-time version.
+        self.bank = WeightBank(self._place_weights(weights))
         self.cfg = cfg
         self.batch_size = batch_size
         self.patience = patience
@@ -405,6 +415,25 @@ class SNNStreamEngine:
         self.queue: list[tuple[int, np.ndarray]] = []
         self.results: dict[int, RequestResult] = {}
         self._next_id = 0
+        # Host mirror of LaneState.weight_version (only admission writes
+        # it, so no device sync is ever needed to know which versions are
+        # in flight) + the load-summary estimators the router reads.
+        self._lane_versions = np.zeros(batch_size, np.int64)
+        self._service_ewma: float | None = None
+        self._retired_total = 0
+
+    _SERVICE_EWMA_ALPHA = 0.25
+
+    @property
+    def weights(self) -> tuple:
+        """Device-placed weight planes of the CURRENT bank version (new
+        admissions bind these; draining lanes may still run older ones)."""
+        return self.bank.weights(self.bank.current)
+
+    def _place_weights(self, weights: tuple) -> tuple:
+        """Device-placement hook for a weight-plane tuple (the sharded
+        engine replicates over its mesh here)."""
+        return tuple(jnp.asarray(w) for w in weights)
 
     @property
     def chunk_steps(self) -> int:
@@ -421,13 +450,39 @@ class SNNStreamEngine:
         return self.controller.dispatch_threshold
 
     # ---- request intake -------------------------------------------------
-    def submit(self, pixels_u8: np.ndarray) -> int:
-        """Enqueue one image; returns its request id."""
+    def submit(self, pixels_u8: np.ndarray, *,
+               request_id: int | None = None) -> int:
+        """Enqueue one image; returns its request id.
+
+        ``request_id`` lets a routing tier impose its GLOBAL id: the PRNG
+        seeds from ``seed + request_id``, so a request served by any
+        engine of a same-seed fleet computes the identical window — the
+        tier-level bit-identity contract rides on this hook.
+        """
         pixels_u8 = np.asarray(pixels_u8, np.uint8).reshape(self.n_in)
-        rid = self._next_id
-        self._next_id += 1
+        if request_id is None:
+            rid = self._next_id
+        else:
+            rid = int(request_id)
+            if (rid in self.results or rid in self.lane_req
+                    or any(q[0] == rid for q in self.queue)):
+                raise ValueError(f"request id {rid} already in use")
+        self._next_id = max(self._next_id, rid + 1)
         self.queue.append((rid, pixels_u8))
         return rid
+
+    def load_summary(self) -> EngineLoad:
+        """Routing-tier load signals — pure host bookkeeping, no syncs."""
+        return EngineLoad(
+            lanes_total=self.batch_size,
+            lanes_busy=sum(r is not None for r in self.lane_req),
+            queue_depth=len(self.queue),
+            mean_service_steps=(float(self.cfg.num_steps)
+                                if self._service_ewma is None
+                                else self._service_ewma),
+            retired_total=self._retired_total,
+            density_ewma=self.controller.density_ewma,
+        )
 
     @property
     def pending(self) -> int:
@@ -446,16 +501,23 @@ class SNNStreamEngine:
         done_ids = []
         for i in np.nonzero(finished)[0]:
             rid = self.lane_req[int(i)]
+            steps = int(st.steps[i])
             self.results[rid] = RequestResult(
                 request_id=rid,
                 pred=self._host_pred(st.counts[i], st.first[i],
                                      st.v[-1][i], st.v_peak[-1][i]),
                 spike_counts=st.counts[i].copy(),
-                steps=int(st.steps[i]),
+                steps=steps,
                 adds=int(st.adds[i]),
-                early_exit=int(st.steps[i]) < self.cfg.num_steps,
+                early_exit=steps < self.cfg.num_steps,
+                weight_version=int(st.weight_version[i]),
             )
             done_ids.append(rid)
+            self._retired_total += 1
+            a = self._SERVICE_EWMA_ALPHA
+            self._service_ewma = (float(steps) if self._service_ewma is None
+                                  else (1 - a) * self._service_ewma
+                                  + a * steps)
         return done_ids
 
     def _admit_into(self, st: LaneState, slot: int) -> None:
@@ -483,6 +545,7 @@ class SNNStreamEngine:
         st.steps[slot] = 0
         st.adds[slot] = 0
         st.active[slot] = True
+        st.weight_version[slot] = self.bank.current
         self.lane_req[slot] = rid
 
     def _upload(self, st: LaneState) -> LaneState:
@@ -526,10 +589,45 @@ class SNNStreamEngine:
                 break
             self._admit_into(st, slot)
 
+        self._sync_versions(st)
         self.lanes = self._upload(st)
         return done_ids
 
-    def _advance(self, lanes: LaneState):
+    def _sync_versions(self, st: LaneState) -> None:
+        """Refresh the host version mirror; retire drained weight planes.
+
+        Called with the compacted host tile just before upload — the only
+        moment lane↔version bindings change.  Dropping the last
+        old-version plane here IS rollout completion (recorded in
+        ``bank.history``): zero drain, because admission never paused.
+        """
+        self._lane_versions = np.asarray(st.weight_version).astype(np.int64)
+        self.bank.gc({int(v) for v, r in zip(self._lane_versions,
+                                             self.lane_req)
+                      if r is not None})
+
+    def begin_rollout(self, params_q: dict) -> int:
+        """Publish new weight planes without draining in-flight windows.
+
+        New admissions bind the returned version immediately; lanes
+        already in flight finish on their admission-time planes (the
+        version-split dispatch in :meth:`_dispatch_chunk`).  The rollout
+        completes — old planes freed, ``bank.history`` records it — when
+        the last old-version lane retires.  Topology is fixed: the lane
+        state layout is a function of ``layer_sizes``.
+        """
+        ws = tuple(layer["w_q"] for layer in params_q["layers"])
+        sizes = tuple([ws[0].shape[0]] + [w.shape[1] for w in ws])
+        if sizes != self.layer_sizes:
+            raise ValueError(
+                f"rollout cannot change the topology: engine serves "
+                f"{self.layer_sizes}, new weights are {sizes}")
+        if self.backend in ("fused", "fused_streamed"):
+            from ..kernels.ops import validate_weight_codes
+            validate_weight_codes(ws)
+        return self.bank.begin(self._place_weights(ws))
+
+    def _advance(self, lanes: LaneState, weights: tuple):
         """Dispatch one chunk on the device (async under jax dispatch).
 
         The chunk length comes from the controller: the configured static
@@ -538,12 +636,37 @@ class SNNStreamEngine:
         and bounded).  Returns ``(lanes', telemetry)``.
         """
         return stream_chunk(
-            lanes, self.weights, chunk_steps=self.controller.chunk_steps,
+            lanes, weights, chunk_steps=self.controller.chunk_steps,
             num_steps=self.cfg.num_steps, lif_cfg=self.cfg.lif,
             dot_impl=self.cfg.dot_impl,
             active_pruning=self.cfg.active_pruning, patience=self.patience,
             readout=self.cfg.readout, backend=self.backend,
             sparse_skip=self.cfg.sparse_skip)
+
+    def _dispatch_chunk(self, lanes: LaneState):
+        """Version-aware chunk dispatch.
+
+        Single live weight version (steady state): one ordinary chunk.
+        Mid-rollout: one gated run per live version — each freezes every
+        other version's lanes through the existing ``active`` mask, and
+        the per-lane merge (``serve.rollout.merge_version_chunks``)
+        reconstructs the tile exactly as if each version's lanes had been
+        served alone, so a rollout never perturbs pre-rollout windows.
+        """
+        occ = [r is not None for r in self.lane_req]
+        versions = sorted({int(v) for v, o in zip(self._lane_versions, occ)
+                           if o})
+        if len(versions) <= 1:
+            v = versions[0] if versions else self.bank.current
+            return self._advance(lanes, self.bank.weights(v))
+        outs = []
+        for v in versions:
+            mask = self._lane_versions == v
+            sub = lanes._replace(active=jnp.logical_and(
+                lanes.active, jnp.asarray(mask)))
+            out, tel = self._advance(sub, self.bank.weights(v))
+            outs.append((mask, out, tel))
+        return merge_version_chunks(outs)
 
     def _observe(self, src: LaneState, nxt: LaneState,
                  tel: ChunkTelemetry) -> None:
@@ -560,7 +683,7 @@ class SNNStreamEngine:
         """Admit + run one chunk.  Returns request ids finished so far."""
         done = self._admit_and_compact()
         src = self.lanes
-        self.lanes, tel = self._advance(src)
+        self.lanes, tel = self._dispatch_chunk(src)
         self._observe(src, self.lanes, tel)
         return done
 
@@ -660,11 +783,14 @@ class ShardedSNNStreamEngine(SNNStreamEngine):
         # (exactly one entry in frozen mode)
         self._chunk_fns: dict[int, object] = {}
         self._chunk_fn_for(chunk_steps)
-        self.weights = jax.device_put(self.weights,
-                                      NamedSharding(mesh, P()))
         self.lanes = jax.device_put(self.lanes, self._shardings)
 
     # ---- device placement ----------------------------------------------
+    def _place_weights(self, weights: tuple) -> tuple:
+        # replicated over the lane mesh — rollout versions land the same
+        # way the construction-time planes do
+        return jax.device_put(tuple(jnp.asarray(w) for w in weights),
+                              NamedSharding(self.mesh, P()))
     def _chunk_fn_for(self, n_steps: int):
         if n_steps not in self._chunk_fns:
             self._chunk_fns[n_steps] = make_sharded_stream_chunk(
@@ -679,9 +805,9 @@ class ShardedSNNStreamEngine(SNNStreamEngine):
     def _upload(self, st: LaneState) -> LaneState:
         return jax.device_put(st, self._shardings)
 
-    def _advance(self, lanes: LaneState):
+    def _advance(self, lanes: LaneState, weights: tuple):
         return self._chunk_fn_for(self.controller.chunk_steps)(
-            lanes, self.weights)
+            lanes, weights)
 
     # ---- scheduling -----------------------------------------------------
     def _admit_and_compact(self) -> list[int]:
@@ -716,6 +842,7 @@ class ShardedSNNStreamEngine(SNNStreamEngine):
                 if free_slots[d]:
                     self._admit_into(st, free_slots[d].pop(0))
 
+        self._sync_versions(st)
         self.lanes = self._upload(st)
         return done_ids
 
@@ -734,7 +861,7 @@ class ShardedSNNStreamEngine(SNNStreamEngine):
             if self._spec is not None:
                 self.stats["spec_wasted"] += 1
             src = self.lanes
-            nxt, tel = self._advance(src)
+            nxt, tel = self._dispatch_chunk(src)
         self._spec = self._spec_src = None
         self.lanes = nxt
         self.stats["chunks"] += 1
@@ -742,7 +869,9 @@ class ShardedSNNStreamEngine(SNNStreamEngine):
         if self.overlap and (self.queue
                              or any(r is not None for r in self.lane_req)):
             # enqueue chunk k+1 now — the devices stay busy while the next
-            # step's host-side readback and queue bookkeeping run
+            # step's host-side readback and queue bookkeeping run (the
+            # lane↔version map only changes at compaction, which discards
+            # the speculation, so version-split dispatch speculates safely)
             self._spec_src = nxt
-            self._spec = self._advance(nxt)
+            self._spec = self._dispatch_chunk(nxt)
         return done

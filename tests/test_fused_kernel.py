@@ -265,6 +265,7 @@ def _lanes(px, rng_seed, *, batch, active, adds=None, num_steps=50):
         adds=(jnp.zeros((batch,), jnp.int32) if adds is None
               else jnp.asarray(adds, jnp.int32)),
         active=jnp.asarray(active),
+        weight_version=jnp.zeros((batch,), jnp.int32),
     )
 
 

