@@ -1,0 +1,236 @@
+"""Fault-tolerance benchmark: failover latency, evacuation bit-identity,
+degradation-ladder behaviour, and the never-silent accounting contract —
+re-verified where the numbers are produced.
+
+Drives ``serve.SNNServingTier`` / ``serve.SNNStreamEngine`` under seeded
+``serve.faults.FaultPlan`` schedules and reports
+
+  * **failover recovery latency in chunks** — rounds from the engine
+    failure to the evacuated lanes being re-dispatched on a healthy
+    engine, plus the total extra rounds the faulted tier needs versus
+    the never-faulted baseline,
+  * **evacuation bit-identity** — every request served across a
+    mid-window engine loss matches the no-fault tier
+    prediction-for-prediction (the LaneState row at a chunk boundary is
+    a complete checkpoint),
+  * **degradation ladder** — persistent fused launch faults demote the
+    engine down the resumable backend chain and clean chunks re-promote
+    it, with results bit-identical to the never-faulted fused engine,
+  * **never-silent accounting** — under a chaos plan mixing transient
+    dispatch faults, a poison request, and a state-losing device loss,
+    ``results ∪ shed ∪ faulted`` partitions the submitted ids exactly,
+    and a replay of the same (plan, schedule) reproduces every record.
+
+Saves results/bench/BENCH_faults.json (contract fields diffed against
+the committed copy by benchmarks.check_tracked).  REPRO_BENCH_TINY=1
+shrinks sizes for the smoke lane.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.snn_mnist import SNN_CONFIG, SNN_SERVING_TIER, \
+    make_serving_tier
+from repro.serve import (FaultEvent, FaultInjector, FaultPlan,
+                         FaultToleranceConfig, SNNStreamEngine)
+
+from .common import emit, save_json
+
+
+def _params(rng, sizes):
+    return {"layers": [
+        {"w_q": jnp.asarray(rng.integers(-256, 256, (a, b)), jnp.int16),
+         "scale": jnp.float32(1.0)}
+        for a, b in zip(sizes[:-1], sizes[1:])]}
+
+
+def _sig(r):
+    return (r.pred, r.steps, r.adds, r.early_exit,
+            tuple(r.spike_counts.tolist()))
+
+
+def _drive(tier):
+    """Step a tier to completion by hand, watching the failover rounds.
+
+    Returns (results, total_rounds, fail_round, evacuation_latency) with
+    the latency counted in tier rounds (== chunks per surviving engine)
+    between the failure being detected and the evacuated lanes leaving
+    the adoption queue for a healthy engine's batch tile.
+    """
+    rounds, r_fail, r_adopted = 0, None, None
+    while tier.pending and rounds < 100_000:
+        tier.step()
+        rounds += 1
+        if r_fail is None and tier.stats["engines_failed"]:
+            r_fail = rounds
+        if (r_fail is not None and r_adopted is None
+                and not any(e._adoptions for e in tier.engines)):
+            r_adopted = rounds
+    for i in tier._alive():
+        tier.engines[i].run(max_chunks=0)
+    latency = None if r_fail is None else (r_adopted - r_fail)
+    return tier.results, rounds, r_fail, latency
+
+
+def run():
+    tiny = bool(os.environ.get("REPRO_BENCH_TINY"))
+    sizes = (32, 10) if tiny else (784, 10)
+    T = 8 if tiny else 20
+    chunk = 2 if tiny else 4
+    lanes = 2 if tiny else 4
+    n_imgs = 6 * lanes
+
+    rng = np.random.default_rng(0)
+    cfg = dataclasses.replace(SNN_CONFIG, layer_sizes=sizes, num_steps=T)
+    params_q = _params(rng, sizes)
+    imgs = rng.integers(0, 256, (n_imgs, sizes[0]), dtype=np.uint8)
+
+    def make(**knob_kw):
+        knobs = dataclasses.replace(
+            SNN_SERVING_TIER, num_engines=2, lanes_per_engine=lanes,
+            chunk_steps=chunk, queue_limit=None, shedding=False, **knob_kw)
+        return make_serving_tier(params_q, cfg, knobs, patience=10_000,
+                                 seed=0, backend="reference")
+
+    # --- failover: recovery latency + evacuation bit-identity -----------
+    plan = FaultPlan(events=(
+        FaultEvent(kind="device_loss", engine=1, first_chunk=2),))
+    tier = make(fault_plan=plan)
+    rids = [tier.submit(im) for im in imgs]
+    t0 = time.perf_counter()
+    res, rounds, fail_round, evac_latency = _drive(tier)
+    dt = time.perf_counter() - t0
+    base = make()
+    for im in imgs:
+        base.submit(im)
+    base_res, base_rounds, _, _ = _drive(base)
+    overhead = rounds - base_rounds
+    evacuation_bit_identical = set(res) == set(base_res) == set(rids) and \
+        all(_sig(res[rid]) == _sig(base_res[rid]) for rid in rids)
+    failover_partition_ok = (
+        set(res) | set(tier.shed) | set(tier.faulted) == set(rids)
+        and not tier.shed and not tier.faulted)
+    emit("faults.failover", dt * 1e6 / n_imgs,
+         f"fail_round={fail_round} evac_latency_chunks={evac_latency} "
+         f"overhead_chunks={overhead} evacuated={tier.stats['evacuated']} "
+         f"requeued={tier.stats['requeued']} "
+         f"bit_identical={evacuation_bit_identical}")
+
+    # --- degradation ladder (fused engine, fault window then recovery) --
+    fplan = FaultPlan(events=(FaultEvent(
+        kind="dispatch", first_chunk=0, last_chunk=3, backends=("fused",)),))
+    ft = FaultToleranceConfig(demote_after=2, promote_after=3)
+    eng = SNNStreamEngine(params_q, cfg, batch_size=lanes,
+                          chunk_steps=chunk, patience=10_000, seed=0,
+                          backend="fused", injector=FaultInjector(fplan, 0),
+                          fault_cfg=ft)
+    for im in imgs[:2 * lanes]:
+        eng.submit(im)
+    t0 = time.perf_counter()
+    lres = eng.run()
+    dt_ladder = time.perf_counter() - t0
+    ref = SNNStreamEngine(params_q, cfg, batch_size=lanes,
+                          chunk_steps=chunk, patience=10_000, seed=0,
+                          backend="fused")
+    for im in imgs[:2 * lanes]:
+        ref.submit(im)
+    lref = ref.run()
+    demotes = [e for e in eng.controller.history
+               if isinstance(e, dict) and e.get("event") == "demote"]
+    promotes = [e for e in eng.controller.history
+                if isinstance(e, dict) and e.get("event") == "promote"]
+    ladder_bit_identical = set(lres) == set(lref) and all(
+        _sig(lres[rid]) == _sig(lref[rid]) for rid in lref)
+    ladder_repromoted = (bool(demotes) and bool(promotes)
+                         and eng.health.demotion_level == 0
+                         and eng.backend_effective == "fused")
+    emit("faults.ladder", dt_ladder * 1e6 / (2 * lanes),
+         f"demoted_to={demotes[0]['to'] if demotes else None} "
+         f"faults={eng.health.total_faults} "
+         f"repromoted={ladder_repromoted} "
+         f"bit_identical={ladder_bit_identical}")
+
+    # --- chaos accounting: partition + deterministic replay -------------
+    chaos = FaultPlan(events=(
+        FaultEvent(kind="poison", request_id=5, first_chunk=0),
+        FaultEvent(kind="device_loss", engine=0, first_chunk=4,
+                   state_lost=True)),
+        seed=13, dispatch_rate=0.02)
+
+    def chaos_once():
+        t = make_serving_tier(
+            params_q, cfg,
+            dataclasses.replace(SNN_SERVING_TIER, num_engines=2,
+                                lanes_per_engine=lanes, chunk_steps=chunk,
+                                queue_limit=3, shedding=True,
+                                fault_plan=chaos),
+            patience=10_000, seed=0, backend="reference")
+        crids = [t.submit(im, deadline_steps=(8 if k % 5 == 0 else None))
+                 for k, im in enumerate(imgs)]
+        cres = t.run()
+        partition = (
+            set(cres) | set(t.shed) | set(t.faulted) == set(crids)
+            and not (set(cres) & set(t.shed))
+            and not (set(cres) & set(t.faulted))
+            and not (set(t.shed) & set(t.faulted)))
+        return ({r: _sig(v) for r, v in cres.items()}, dict(t.shed),
+                dict(t.faulted), dict(t.stats,
+                                      routed_per_engine=tuple(
+                                          t.stats["routed_per_engine"])),
+                partition)
+
+    first = chaos_once()
+    second = chaos_once()
+    replay_deterministic = first == second
+    no_silent_loss = failover_partition_ok and first[4]
+    faulted = first[2]
+    emit("faults.chaos", None,
+         f"served={len(first[0])} shed={len(first[1])} "
+         f"faulted={len(faulted)} "
+         f"reasons={sorted({r.reason for r in faulted.values()})} "
+         f"replay_deterministic={replay_deterministic} "
+         f"partition={no_silent_loss}")
+
+    save_json({
+        "layer_sizes": list(sizes),
+        "num_steps": T,
+        "chunk_steps": chunk,
+        "lanes_per_engine": lanes,
+        "failover": {
+            "fail_round": fail_round,
+            "evacuation_latency_chunks": evac_latency,
+            "recovery_overhead_chunks": overhead,
+            "evacuated": tier.stats["evacuated"],
+            "requeued": tier.stats["requeued"],
+        },
+        "ladder": {
+            "demoted_to": demotes[0]["to"] if demotes else None,
+            "faults_absorbed": eng.health.total_faults,
+            "serve_us_per_img": dt_ladder * 1e6 / (2 * lanes),
+        },
+        "chaos": {
+            "served": len(first[0]),
+            "shed": len(first[1]),
+            "faulted": len(faulted),
+            "quarantined": first[3]["quarantined"],
+            "engines_failed": first[3]["engines_failed"],
+        },
+        "evacuation_bit_identical": evacuation_bit_identical,
+        "ladder_bit_identical": ladder_bit_identical,
+        "ladder_repromoted": ladder_repromoted,
+        "replay_deterministic": replay_deterministic,
+        "no_silent_loss": no_silent_loss,
+    }, "bench", "BENCH_faults.json")
+    assert evacuation_bit_identical and ladder_bit_identical
+    assert ladder_repromoted and replay_deterministic and no_silent_loss
+    return {"failover_rounds": rounds, "overhead": overhead}
+
+
+if __name__ == "__main__":
+    run()

@@ -67,6 +67,12 @@ CONTRACT_FIELDS = [
     "shed_accounting_ok",
     "rollout_preserves_inflight",
     "rollout_completed",
+    # fault-tolerance contract (BENCH_faults.json)
+    "evacuation_bit_identical",
+    "ladder_bit_identical",
+    "ladder_repromoted",
+    "replay_deterministic",
+    "no_silent_loss",
 ]
 
 

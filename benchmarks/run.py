@@ -31,6 +31,8 @@ SUITES = {
                        "Sharded streaming engine (lane mesh + overlap)"),
     "router": ("bench_router",
                "Serving tier (routing, shedding, weight rollout)"),
+    "faults": ("bench_faults",
+               "Fault tolerance (failover latency, ladder, accounting)"),
     "fused": ("bench_fused", "Fused vs staged encode→LIF (time + bytes)"),
     "roofline": ("roofline", "Roofline terms from the dry-run"),
 }

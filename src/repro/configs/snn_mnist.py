@@ -101,6 +101,15 @@ class SNNServingTierConfig:
     sharded: bool = False
     devices_per_engine: int | None = None
     adaptive: "AdaptiveDispatchConfig | None" = None
+    # Fault tolerance (serve.faults): ``fault_plan`` arms a deterministic
+    # injection schedule (a FaultPlan, or the compact env-spec string
+    # "seed=11,dispatch=0.03"); None leaves engines to arm from the
+    # REPRO_FAULT_PLAN env, and injection-free otherwise.  ``fault_cfg``
+    # tunes the recovery policy (retry budget, backoff, demotion /
+    # promotion thresholds, watchdog deadline, quarantine count); None
+    # uses FaultToleranceConfig defaults.
+    fault_plan: "FaultPlan | str | None" = None
+    fault_cfg: "FaultToleranceConfig | None" = None
 
 
 SNN_SERVING_TIER = SNNServingTierConfig()
@@ -122,7 +131,8 @@ def make_serving_tier(params_q: dict, snn_cfg: SNNConfig = SNN_CONFIG,
         queue_limit=knobs.queue_limit, shedding=knobs.shedding,
         sharded=knobs.sharded,
         devices_per_engine=knobs.devices_per_engine,
-        adaptive=knobs.adaptive, **tier_kw)
+        adaptive=knobs.adaptive, fault_plan=knobs.fault_plan,
+        fault_cfg=knobs.fault_cfg, **tier_kw)
 
 
 def make_stream_mesh(knobs: SNNStreamMeshConfig = SNN_STREAM_MESH):

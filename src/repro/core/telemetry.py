@@ -157,6 +157,12 @@ class EngineLoad(NamedTuple):
     mean_service_steps: float      # EWMA of consumed steps per request
     retired_total: int             # requests completed since construction
     density_ewma: float | None     # controller estimate (None if frozen)
+    # Health surface (serve.faults) — defaulted so positional construction
+    # of the historical six-field record keeps meaning "healthy engine".
+    consecutive_faults: int = 0    # dispatch faults since the last clean chunk
+    demotion_level: int = 0        # rungs down the backend degradation ladder
+    watchdog_margin: int | None = None  # chunks left before the hang deadline
+    alive: bool = True             # False once the engine declared failure
 
     @property
     def occupancy(self) -> float:
@@ -173,9 +179,21 @@ def load_score(load: EngineLoad) -> float:
     lets an engine whose traffic exits early absorb proportionally more
     load.  Pure and deterministic — the router's least-loaded comparison
     (ties broken by engine index) is reproducible in CI.
+
+    The health surface folds in as an additive degradation charge: each
+    rung down the backend ladder counts like half the tile being busy and
+    each consecutive unresolved fault like a quarter, so a degraded
+    engine keeps serving but stops being anyone's first choice; a dead
+    engine scores infinite and can never win a least-loaded comparison.
+    A fully healthy record scores exactly what the historical six-field
+    formula scored, keeping the tier's routing-determinism contract.
     """
+    if not load.alive:
+        return float("inf")
     owed = 0.5 * load.lanes_busy + load.queue_depth
-    return owed * load.mean_service_steps / max(1, load.lanes_total)
+    degraded = (0.5 * load.demotion_level
+                + 0.25 * load.consecutive_faults) * load.lanes_total
+    return (owed + degraded) * load.mean_service_steps / max(1, load.lanes_total)
 
 
 def estimate_eta_steps(load: EngineLoad) -> float:

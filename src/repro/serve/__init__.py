@@ -14,7 +14,10 @@ from .early_exit import (StabilityGateState, eos_gate, stability_gate,
                          stability_init, stability_specs, stability_step)
 from .engine import (ServeState, generate, make_decode_step, make_prefill,
                      pad_cache_to)
-from .rollout import RolloutEvent, WeightBank
+from .faults import (DeviceLostFault, DispatchFault, EngineFailure,
+                     EngineHealthState, FaultEvent, FaultInjector, FaultPlan,
+                     FaultRecord, FaultToleranceConfig, PoisonDispatchError)
+from .rollout import RolloutEvent, RolloutInProgressError, WeightBank
 from .router import ShedRecord, SNNServingTier
 from .snn_engine import (RequestResult, ShardedSNNStreamEngine,
                          SNNStreamEngine)
@@ -25,6 +28,10 @@ __all__ = ["ServeState", "generate", "make_decode_step", "make_prefill",
            "pad_cache_to", "eos_gate", "stability_gate",
            "StabilityGateState", "stability_init", "stability_specs",
            "stability_step", "SNNStreamEngine", "ShardedSNNStreamEngine",
-           "SNNServingTier", "ShedRecord", "RolloutEvent", "WeightBank",
+           "SNNServingTier", "ShedRecord", "RolloutEvent",
+           "RolloutInProgressError", "WeightBank",
            "RequestResult", "AdaptiveDispatchConfig", "ChunkSummary",
-           "TelemetryController", "summarize_chunk"]
+           "TelemetryController", "summarize_chunk",
+           "FaultPlan", "FaultEvent", "FaultInjector", "FaultRecord",
+           "FaultToleranceConfig", "EngineHealthState", "EngineFailure",
+           "DispatchFault", "DeviceLostFault", "PoisonDispatchError"]

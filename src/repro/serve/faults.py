@@ -1,0 +1,383 @@
+"""Deterministic fault injection + the serving fault-tolerance vocabulary.
+
+The serving stack through PR 6 assumes every engine, device and kernel
+launch succeeds forever: one failed dispatch loses every in-flight window
+on that engine and wedges the router.  Hardware-SNN deployments lean on
+exactly the opposite — the paper's active-pruning mechanism *disables*
+neurons post-classification rather than failing hard, and SparrowSNN
+co-designs around partial-availability operation on battery-edge devices
+— so the serving tier should survive faults the way the datapath survives
+pruning.  This module provides the two halves of that layer:
+
+**Deterministic fault injection** — :class:`FaultPlan` is a seeded,
+replayable schedule of injected failures (transient dispatch exceptions,
+engine hangs past a chunk deadline, device loss with or without lane
+state, corrupted telemetry chunks, poison requests that fault wherever
+they are dispatched).  A :class:`FaultInjector` binds one engine to the
+plan and is consulted by ``SNNStreamEngine._dispatch_chunk`` before and
+after every launch — single-device and sharded paths alike.  Fault
+decisions are pure functions of ``(plan seed, engine id, consult index,
+attempt)``, so a replayed run injects the identical fault sequence: CI
+can run the whole router/engine suite under a seeded plan
+(``REPRO_FAULT_PLAN=seed=11,dispatch=0.03``) and require bit-identical
+results, because every recovery path is value-neutral by construction.
+
+**Recovery vocabulary** — the typed exceptions the engines raise
+(:class:`DispatchFault` transient, :class:`DeviceLostFault` permanent,
+:class:`PoisonDispatchError` request-attributed, :class:`EngineFailure`
+the escalation the tier's failover consumes), the per-engine
+:class:`EngineHealthState` the health surface is built from, the
+:class:`FaultToleranceConfig` policy knobs (retry budget, deterministic
+backoff, demotion/promotion thresholds, watchdog deadline, quarantine
+count), and :class:`FaultRecord` — the never-silent accounting entry for
+a window that could not be served (mirroring ``router.ShedRecord``:
+``results ∪ shed ∪ faulted`` exactly partitions the submitted ids).
+
+Nothing here imports jax at module scope: the plan/health machinery is
+pure host bookkeeping, importable from configs and benchmarks alike.
+"""
+
+from __future__ import annotations
+
+import os
+from dataclasses import dataclass, field
+
+import numpy as np
+
+__all__ = [
+    "DispatchFault", "DeviceLostFault", "PoisonDispatchError",
+    "EngineFailure", "FaultEvent", "FaultPlan", "FaultInjector",
+    "FaultToleranceConfig", "EngineHealthState", "FaultRecord",
+    "telemetry_ok", "injector_from_env", "REPRO_FAULT_PLAN_ENV",
+]
+
+REPRO_FAULT_PLAN_ENV = "REPRO_FAULT_PLAN"
+
+
+# ---- typed faults ---------------------------------------------------------
+
+class FaultError(RuntimeError):
+    """Base of every injected/declared serving fault."""
+
+
+class DispatchFault(FaultError):
+    """Transient chunk-dispatch failure (retryable; the backoff path)."""
+
+    def __init__(self, msg: str, *, engine: int, seq: int, attempt: int):
+        super().__init__(msg)
+        self.engine, self.seq, self.attempt = engine, seq, attempt
+
+
+class DeviceLostFault(FaultError):
+    """Permanent device loss.  ``state_lost=True`` additionally marks the
+    lane state unrecoverable — the in-flight windows cannot be evacuated
+    and must be shed with :class:`FaultRecord`\\ s."""
+
+    def __init__(self, msg: str, *, engine: int, state_lost: bool = False):
+        super().__init__(msg)
+        self.engine, self.state_lost = engine, state_lost
+
+
+class PoisonDispatchError(FaultError):
+    """A specific request faults every launch that includes it.  Raised
+    before the launch (the lane state is intact), carrying the request id
+    so the tier can evict the lane, retry it elsewhere, and quarantine it
+    after ``FaultToleranceConfig.quarantine_after`` faults."""
+
+    def __init__(self, msg: str, *, request_id: int, engine: int):
+        super().__init__(msg)
+        self.request_id, self.engine = request_id, engine
+
+
+class EngineFailure(FaultError):
+    """An engine declared itself failed — the tier's failover trigger.
+
+    ``reason`` is ``"device_lost"``, ``"hang"`` (chunk-deadline watchdog
+    tripped) or ``"dispatch_exhausted"`` (transient faults persisted past
+    the retry/demotion budget).  ``state_lost`` says whether the lane
+    snapshot survives for evacuation.
+    """
+
+    def __init__(self, msg: str, *, engine: int, reason: str,
+                 state_lost: bool = False):
+        super().__init__(msg)
+        self.engine, self.reason, self.state_lost = engine, reason, state_lost
+
+
+# ---- the plan -------------------------------------------------------------
+
+@dataclass(frozen=True)
+class FaultEvent:
+    """One scheduled fault.  ``chunk`` coordinates are engine-local
+    dispatch-consult indices (the injector counts every ``before``
+    consultation, retries included — deterministic because the serving
+    loops are single-threaded); ``last_chunk=None`` means the fault
+    persists forever (a "kill"), a bounded range models a transient
+    brown-out the retry/backoff/ladder machinery should ride through.
+
+    kinds: ``dispatch`` (transient launch exception), ``hang`` (the
+    device stalls — dispatches make no progress until the watchdog
+    trips), ``device_loss`` (permanent; ``state_lost`` optionally
+    destroys the lane snapshot), ``telemetry`` (the side-channel record
+    of this chunk comes back corrupted), ``poison`` (every launch
+    containing ``request_id`` faults, on any engine).
+    ``backends`` restricts a ``dispatch`` fault to specific chunk
+    backends — the degradation-ladder tests use it to fail the fused
+    launch persistently while the demoted rungs stay clean.
+    """
+
+    kind: str                        # dispatch|hang|device_loss|telemetry|poison
+    engine: int | None = None        # None = any engine
+    first_chunk: int = 0
+    last_chunk: int | None = None    # inclusive; None = forever
+    request_id: int | None = None    # poison target
+    backends: tuple | None = None    # dispatch: only these backends fault
+    state_lost: bool = False         # device_loss: snapshot unrecoverable
+
+    def _active(self, engine: int, seq: int) -> bool:
+        if self.engine is not None and engine != self.engine:
+            return False
+        if seq < self.first_chunk:
+            return False
+        return self.last_chunk is None or seq <= self.last_chunk
+
+
+class FaultPlan:
+    """Seeded, replayable schedule of injected failures.
+
+    Two layers compose: explicit :class:`FaultEvent`\\ s (targeted kills
+    and brown-outs — what the failover contract tests drive) and seeded
+    *rates* (``dispatch_rate``/``telemetry_rate`` — background chaos for
+    whole-suite CI runs).  Rate decisions hash ``(seed, engine, consult
+    index, attempt)`` through an independent PRNG stream per coordinate,
+    so the same plan replayed injects the identical faults, and a retry
+    (new attempt) re-rolls rather than deterministically re-faulting.
+
+    ``REPRO_FAULT_PLAN`` activates a plan for every engine constructed
+    without an explicit injector, spec ``seed=11,dispatch=0.03,
+    telemetry=0.02`` — rates only, because transient faults are the one
+    class a *standalone* engine fully absorbs (hangs/device loss need a
+    tier to evacuate to).
+    """
+
+    def __init__(self, events: tuple = (), *, seed: int = 0,
+                 dispatch_rate: float = 0.0, telemetry_rate: float = 0.0):
+        self.events = tuple(events)
+        self.seed = int(seed)
+        self.dispatch_rate = float(dispatch_rate)
+        self.telemetry_rate = float(telemetry_rate)
+
+    # -- construction ------------------------------------------------------
+    @classmethod
+    def from_spec(cls, spec: str) -> "FaultPlan":
+        """Parse the compact ``k=v[,k=v...]`` env spec (rates + seed)."""
+        kw: dict = {"seed": 0, "dispatch_rate": 0.0, "telemetry_rate": 0.0}
+        names = {"seed": "seed", "dispatch": "dispatch_rate",
+                 "telemetry": "telemetry_rate"}
+        for part in spec.split(","):
+            part = part.strip()
+            if not part:
+                continue
+            k, _, v = part.partition("=")
+            if k not in names:
+                raise ValueError(
+                    f"unknown {REPRO_FAULT_PLAN_ENV} key {k!r}: "
+                    f"expected {sorted(names)}")
+            kw[names[k]] = int(v) if k == "seed" else float(v)
+        return cls(seed=kw.pop("seed"), **kw)
+
+    @classmethod
+    def from_env(cls) -> "FaultPlan | None":
+        spec = os.environ.get(REPRO_FAULT_PLAN_ENV)
+        return cls.from_spec(spec) if spec else None
+
+    # -- queries (pure in (engine, seq, attempt)) --------------------------
+    def _roll(self, *coords: int) -> float:
+        return float(np.random.default_rng(
+            (self.seed,) + tuple(int(c) for c in coords)).random())
+
+    def poison_rid(self, engine: int, seq: int, rids) -> int | None:
+        for ev in self.events:
+            if (ev.kind == "poison" and ev._active(engine, seq)
+                    and ev.request_id in rids):
+                return ev.request_id
+        return None
+
+    def device_loss(self, engine: int, seq: int) -> FaultEvent | None:
+        for ev in self.events:
+            if ev.kind == "device_loss" and ev._active(engine, seq):
+                return ev
+        return None
+
+    def hang(self, engine: int, seq: int) -> bool:
+        return any(ev.kind == "hang" and ev._active(engine, seq)
+                   for ev in self.events)
+
+    def dispatch_fault(self, engine: int, seq: int, attempt: int,
+                       backend: str) -> bool:
+        for ev in self.events:
+            if (ev.kind == "dispatch" and ev._active(engine, seq)
+                    and (ev.backends is None or backend in ev.backends)):
+                return True
+        if self.dispatch_rate > 0.0:
+            return self._roll(engine, seq, attempt, 0) < self.dispatch_rate
+        return False
+
+    def corrupt_telemetry(self, engine: int, seq: int) -> bool:
+        if any(ev.kind == "telemetry" and ev._active(engine, seq)
+               for ev in self.events):
+            return True
+        if self.telemetry_rate > 0.0:
+            return self._roll(engine, seq, 1) < self.telemetry_rate
+        return False
+
+
+class FaultInjector:
+    """One engine's binding to a :class:`FaultPlan`.
+
+    The engine consults :meth:`before_dispatch` ahead of every launch
+    attempt (it raises the scheduled typed fault, or returns ``"hang"``
+    when the device should stall this chunk) and passes each launch's
+    telemetry through :meth:`filter_telemetry` (which corrupts the record
+    when the plan says so — the engine's own validation must catch it).
+    The injector owns the monotone consult counter, so the fault
+    coordinates are a pure function of the (single-threaded) call
+    sequence.
+    """
+
+    def __init__(self, plan: FaultPlan, engine_id: int = 0):
+        self.plan = plan
+        self.engine_id = int(engine_id)
+        self.consults = 0               # dispatch-consult index ("chunk")
+
+    def before_dispatch(self, attempt: int, *, backend: str, rids) -> str:
+        e, seq = self.engine_id, self.consults
+        self.consults += 1
+        loss = self.plan.device_loss(e, seq)
+        if loss is not None:
+            raise DeviceLostFault(
+                f"injected device loss on engine {e} at consult {seq}",
+                engine=e, state_lost=loss.state_lost)
+        rid = self.plan.poison_rid(e, seq, rids)
+        if rid is not None:
+            raise PoisonDispatchError(
+                f"injected poison fault for request {rid} on engine {e}",
+                request_id=rid, engine=e)
+        if self.plan.dispatch_fault(e, seq, attempt, backend):
+            raise DispatchFault(
+                f"injected dispatch fault on engine {e} at consult {seq} "
+                f"(attempt {attempt}, backend {backend!r})",
+                engine=e, seq=seq, attempt=attempt)
+        return "hang" if self.plan.hang(e, seq) else "ok"
+
+    def filter_telemetry(self, tel):
+        """Possibly corrupt one chunk's telemetry record (plan-driven)."""
+        if tel is None or not self.plan.corrupt_telemetry(
+                self.engine_id, self.consults - 1):
+            return tel
+        # flip the spike-count leaf negative: impossible under the
+        # telemetry contract, so host validation must reject the record
+        return tel._replace(n_spk=-(np.abs(np.asarray(tel.n_spk)) + 1))
+
+
+def injector_from_env(engine_id: int) -> FaultInjector | None:
+    """The env-armed injector for engines built without an explicit one."""
+    plan = FaultPlan.from_env()
+    return None if plan is None else FaultInjector(plan, engine_id)
+
+
+def telemetry_ok(tel) -> bool:
+    """Host-side validity check of a chunk's telemetry record.
+
+    The side channel's contract makes corruption cheap to detect: every
+    leaf is a count, so any negative entry (or NaN smuggled through a
+    float cast) falsifies the record.  Engines validate only when a fault
+    harness is armed — the check forces a device→host readback.
+    """
+    if tel is None:
+        return False
+    for leaf in (tel.n_spk, tel.n_en, tel.tiles_skipped):
+        a = np.asarray(leaf)
+        if not np.issubdtype(a.dtype, np.integer) or (a < 0).any():
+            return False
+    return True
+
+
+# ---- policy + health ------------------------------------------------------
+
+@dataclass(frozen=True)
+class FaultToleranceConfig:
+    """Recovery-policy knobs shared by the engines and the tier.
+
+    Backoff is deterministic and counted in *scheduling rounds* (the
+    tier's lockstep step currency), not wall-clock: after a round whose
+    immediate retries all faulted, the engine sits out
+    ``min(backoff_base << burst, backoff_max)`` rounds before retrying —
+    replayable, and bounded so a recovering engine rejoins quickly.
+    """
+
+    max_retries: int = 2        # immediate same-round retries per dispatch
+    fail_after: int = 6         # consecutive faults ⇒ EngineFailure
+    backoff_base: int = 1       # rounds; doubles per faulting round
+    backoff_max: int = 4        # rounds; the bound on the backoff
+    demote_after: int = 2       # consecutive faults ⇒ step down the ladder
+    promote_after: int = 4      # clean chunks ⇒ probe one rung back up
+    watchdog_chunks: int = 4    # stalled chunks ⇒ declare the engine hung
+    quarantine_after: int = 3   # per-request faults ⇒ quarantine (tier)
+
+
+@dataclass
+class EngineHealthState:
+    """Mutable per-engine fault/demotion bookkeeping (host-only).
+
+    The load-visible slice of this state rides on
+    ``core.telemetry.EngineLoad`` (consecutive faults, demotion level,
+    watchdog margin, liveness) so ``load_score`` steers traffic away from
+    degraded engines; ``events`` is the auditable transition log
+    (demotions, promotions, failures), mirrored into the telemetry
+    controller's history where the dispatch decisions already live.
+    """
+
+    alive: bool = True
+    demotion_level: int = 0        # index into the engine's backend ladder
+    consecutive_faults: int = 0
+    total_faults: int = 0
+    telemetry_faults: int = 0      # corrupted side-channel records dropped
+    clean_chunks: int = 0          # consecutive clean chunks at this level
+    stalled_chunks: int = 0        # consecutive no-progress chunks (hang)
+    events: list = field(default_factory=list)
+
+    def record_fault(self, kind: str, detail: str = "") -> None:
+        self.total_faults += 1
+        self.consecutive_faults += 1
+        self.clean_chunks = 0
+        self.events.append({"event": "fault", "kind": kind,
+                            "detail": detail})
+
+    def record_clean(self) -> None:
+        self.consecutive_faults = 0
+        self.clean_chunks += 1
+
+
+@dataclass(frozen=True)
+class FaultRecord:
+    """Why a request was lost to a fault (the recorded, auditable drop —
+    the fault-path sibling of ``router.ShedRecord``; ``results ∪ shed ∪
+    faulted`` exactly partitions a tier's submitted ids).
+
+    ``reason``: ``"state_lost"`` (its engine died with the lane snapshot
+    unrecoverable), ``"engine_lost"`` (its engine died and no healthy
+    engine remained to evacuate to), ``"no_capacity"`` (submitted while
+    every engine was dead), or ``"quarantined"`` (faulted
+    ``quarantine_after`` times across engines — a poison request).
+    ``replay_seed`` is the PRNG seed its window runs under
+    (``tier.seed + request_id``), so a quarantined request is exactly
+    reproducible offline.
+    """
+
+    request_id: int
+    reason: str
+    engine: int | None = None       # the engine whose fault dropped it
+    faults: int = 0                 # faults attributed to this request
+    replay_seed: int | None = None
+    detail: str = ""

@@ -42,16 +42,31 @@ import jax.numpy as jnp
 
 from ..core.telemetry import ChunkTelemetry
 
-__all__ = ["RolloutEvent", "WeightBank", "merge_version_chunks"]
+__all__ = ["RolloutEvent", "RolloutInProgressError", "WeightBank",
+           "merge_version_chunks"]
+
+
+class RolloutInProgressError(RuntimeError):
+    """``begin(exclusive=True)`` found a rollout still draining.
+
+    Carries the live version list so the caller can decide to wait for
+    the drain, force the stack anyway, or abort the in-flight rollout.
+    """
+
+    def __init__(self, versions: tuple):
+        self.versions = tuple(versions)
+        super().__init__(
+            "rollout already in progress: live versions "
+            f"{self.versions} (pass exclusive=False to stack)")
 
 
 @dataclass(frozen=True)
 class RolloutEvent:
     """One transition of the rollout state machine (recorded, auditable)."""
 
-    kind: str          # "begin" (new version published) | "complete"
-    version: int       # the version published / the rollout that finished
-    retired: tuple = ()  # versions dropped by the completing gc
+    kind: str          # "begin" | "complete" | "restore" | "abort"
+    version: int       # the version published / finished / restored
+    retired: tuple = ()  # versions dropped by a completing gc / an abort
 
 
 class WeightBank:
@@ -85,18 +100,72 @@ class WeightBank:
         return self._planes[version]
 
     # ---- state machine --------------------------------------------------
-    def begin(self, weights: tuple) -> int:
+    def begin(self, weights: tuple, *, exclusive: bool = False) -> int:
         """Publish a new weight version; new admissions bind it.
+
+        Beginning while an earlier rollout is still draining **stacks**:
+        three or more versions can be live at once, each draining
+        independently as its last lane retires (the gated-dispatch merge
+        handles any number of versions, and the back-to-back-rollout
+        tier test pins the drain order) — stacking is the deliberate
+        default because refusing would couple publish latency to the
+        slowest in-flight window.  Callers that want drained-only
+        publishes pass ``exclusive=True`` and catch the typed
+        :class:`RolloutInProgressError`, which carries the live version
+        list.
 
         The engine validates shape/code compatibility before calling (the
         lane state layout is fixed by ``layer_sizes``, so a rollout can
         retune weights, never retopologize).  Returns the new version.
         """
+        if exclusive and self.rolling:
+            raise RolloutInProgressError(self.versions)
         v = self.current + 1
         self._planes[v] = weights
         self.current = v
         self.history.append(RolloutEvent(kind="begin", version=v))
         return v
+
+    def ensure(self, version: int, weights: tuple) -> bool:
+        """Re-register an old version without republishing it.
+
+        The failover path: a lane evacuated from a dead engine may carry
+        a version its adopting engine already garbage-collected.  The
+        tier re-installs that version's planes from its host copies so
+        the adopted window finishes on its admission-time weights —
+        ``current`` (what new admissions bind) is untouched, and the
+        ``restore`` event keeps the state machine auditable.  Restoring
+        a non-current version re-opens the rolling state until the
+        adopted lane retires, which is exactly the "a rollout never
+        completes while an old-version lane exists" invariant.  Returns
+        True if the version had to be installed.
+        """
+        if version in self._planes:
+            return False
+        if version > self.current:
+            raise ValueError(
+                f"cannot restore version {version} newer than current "
+                f"{self.current}")
+        self._planes[version] = weights
+        self.history.append(RolloutEvent(kind="restore", version=version))
+        return True
+
+    def abort(self) -> tuple[int, ...]:
+        """Drop every non-current version unconditionally (dead engine).
+
+        When an engine fails mid-rollout its lanes are evacuated or shed
+        — nothing on *this* engine will ever dispatch the draining
+        versions again, so the planes are freed immediately rather than
+        waiting for a compaction-time gc that will never run.  Returns
+        the versions dropped.
+        """
+        dead = tuple(v for v in self._planes if v != self.current)
+        for v in dead:
+            del self._planes[v]
+        if dead:
+            self.history.append(RolloutEvent(
+                kind="abort", version=self.current, retired=dead))
+        return dead
 
     def gc(self, live_versions: set[int]) -> tuple[int, ...]:
         """Drop versions no occupied lane references (never the current).

@@ -37,10 +37,29 @@ in-flight windows finish on their admission-time weights, new admissions
 bind the new version, and the rollout completes when the last old-version
 lane retires fleet-wide.  No admission pause, no drained windows.
 
-The whole tier rides the existing bit-identity contract: routing and
-shedding change *which* engine serves a request (or whether it is served)
-— never its prediction.  Every engine is constructed with the tier's
-seed, and requests carry their tier-global id into
+**Failover** — engines fail (``serve.faults``: injected deterministically,
+or for real once the runtime meets real hardware).  The tier catches the
+typed escalations its engines raise mid-step: a *poison request* is
+evicted from its lane and retried on another engine (quarantined with its
+replay seed after ``quarantine_after`` faults across engines); a *failed
+engine* (dispatch faults past the retry/demotion budget, the
+chunk-deadline watchdog, device loss) is marked dead, its host queue
+re-routed, and its surviving lanes **evacuated**: each in-flight
+``LaneState`` row is snapshotted at the last committed chunk boundary and
+re-admitted mid-window onto a healthy engine, where it resumes
+bit-identically (the chunked==one-shot property — the row IS the
+checkpoint).  Old weight versions an adopting engine already dropped are
+restored from the tier's host copies (``WeightBank.ensure``), so a
+rollout can never complete while an evacuated old-version lane is still
+draining.  Windows that cannot be recovered (state lost with the device,
+no healthy engine left) are recorded in :attr:`faulted` as
+:class:`~.faults.FaultRecord`\\ s — never silently dropped:
+``results ∪ shed ∪ faulted`` exactly partitions the submitted ids.
+
+The whole tier rides the existing bit-identity contract: routing,
+shedding and failover change *which* engine serves a request (or whether
+it is served) — never its prediction.  Every engine is constructed with
+the tier's seed, and requests carry their tier-global id into
 ``engine.submit(request_id=...)``, so a request's window is a pure
 function of ``(seed, id, pixels)`` regardless of placement — the
 property test replays random schedules against single-engine serving.
@@ -52,6 +71,8 @@ from dataclasses import dataclass
 
 from ..core.snn import SNNConfig
 from ..core.telemetry import estimate_eta_steps, load_score
+from .faults import (EngineFailure, FaultInjector, FaultPlan, FaultRecord,
+                     FaultToleranceConfig, PoisonDispatchError)
 from .snn_engine import RequestResult, SNNStreamEngine
 
 __all__ = ["DEFAULT_PRIORITY_CLASSES", "ShedRecord", "SNNServingTier"]
@@ -104,7 +125,9 @@ class SNNServingTier:
                  queue_limit: int | None = None, shedding: bool = True,
                  sharded: bool = False,
                  devices_per_engine: int | None = None,
-                 adaptive=None):
+                 adaptive=None,
+                 fault_plan: FaultPlan | str | None = None,
+                 fault_cfg: FaultToleranceConfig | None = None):
         if num_engines < 1:
             raise ValueError(f"num_engines must be >= 1, got {num_engines}")
         if default_priority not in priority_classes:
@@ -116,6 +139,16 @@ class SNNServingTier:
         self.queue_limit = queue_limit
         self.shedding = shedding
         self.seed = seed
+        if isinstance(fault_plan, str):
+            fault_plan = FaultPlan.from_spec(fault_plan)
+        self.fault_plan = fault_plan
+        self.fault_cfg = fault_cfg or FaultToleranceConfig()
+
+        def _inj(i: int) -> FaultInjector | None:
+            # engines built without one still arm from REPRO_FAULT_PLAN
+            return (FaultInjector(fault_plan, i)
+                    if fault_plan is not None else None)
+
         self.engines: list[SNNStreamEngine] = []
         if sharded:
             import jax
@@ -136,27 +169,49 @@ class SNNServingTier:
                     params_q, cfg, mesh=mesh,
                     batch_size=lanes_per_engine, chunk_steps=chunk_steps,
                     patience=patience, seed=seed, backend=backend,
-                    adaptive=adaptive))
+                    adaptive=adaptive, engine_id=i, injector=_inj(i),
+                    fault_cfg=self.fault_cfg))
         else:
             for i in range(num_engines):
                 self.engines.append(SNNStreamEngine(
                     params_q, cfg, batch_size=lanes_per_engine,
                     chunk_steps=chunk_steps, patience=patience, seed=seed,
-                    backend=backend, adaptive=adaptive))
+                    backend=backend, adaptive=adaptive, engine_id=i,
+                    injector=_inj(i), fault_cfg=self.fault_cfg))
         self.shed: dict[int, ShedRecord] = {}
+        self.faulted: dict[int, FaultRecord] = {}
+        self._dead: set[int] = set()             # failed engine indices
+        self._rid_faults: dict[int, int] = {}    # rid -> faults across engines
+        # Host copies of every published weight-plane set, by version —
+        # the failover path re-installs a gc'd version on an adopting
+        # engine from here (WeightBank.ensure), so an evacuated lane
+        # always finishes on its admission-time weights.
+        self._version_planes: dict[int, tuple] = {
+            0: tuple(layer["w_q"] for layer in params_q["layers"])}
         self._assignment: dict[int, int] = {}    # rid -> engine index
         self._meta: dict[int, tuple] = {}        # rid -> (level, prio, ddl)
         self._next_id = 0
         self.stats = {"routed_per_engine": [0] * num_engines,
                       "shed_deadline": 0, "shed_overload": 0,
-                      "displaced": 0}
+                      "displaced": 0, "engines_failed": 0, "evacuated": 0,
+                      "requeued": 0, "poison_retries": 0, "quarantined": 0}
 
     # ---- routing --------------------------------------------------------
-    def _route_index(self) -> int:
-        """Least-loaded engine; ties break on the lowest index (the
-        deterministic spray order the reproducibility tests replay)."""
-        scores = [(load_score(e.load_summary()), i)
-                  for i, e in enumerate(self.engines)]
+    def _alive(self) -> list[int]:
+        return [i for i in range(len(self.engines)) if i not in self._dead]
+
+    def _route_index(self, exclude: int | None = None) -> int:
+        """Least-loaded healthy engine; ties break on the lowest index
+        (the deterministic spray order the reproducibility tests replay).
+        The health surface rides the same score — a degraded engine bids
+        high, a dead one infinite.  ``exclude`` steers a poison-request
+        retry away from the engine it just faulted on (when another
+        healthy engine exists)."""
+        idxs = self._alive()
+        if exclude is not None and len(idxs) > 1:
+            idxs = [i for i in idxs if i != exclude]
+        scores = [(load_score(self.engines[i].load_summary()), i)
+                  for i in idxs]
         return min(scores)[1]
 
     def _level(self, priority: str) -> int:
@@ -181,9 +236,10 @@ class SNNServingTier:
         so far is the smallest sunk cost).  None if any queue has room."""
         if self.queue_limit is None:
             return None
-        if any(len(e.queue) < self.queue_limit for e in self.engines):
+        alive = [self.engines[i] for i in self._alive()]
+        if any(len(e.queue) < self.queue_limit for e in alive):
             return None
-        queued = [rid for e in self.engines for rid, _ in e.queue]
+        queued = [rid for e in alive for rid, _ in e.queue]
         if not queued:
             return None
         return max(queued, key=lambda r: (-self._meta[r][0], r))
@@ -198,20 +254,36 @@ class SNNServingTier:
 
     # ---- intake ---------------------------------------------------------
     def submit(self, pixels_u8, *, priority: str | None = None,
-               deadline_steps: int | None = None) -> int:
+               deadline_steps: int | None = None,
+               request_id: int | None = None) -> int:
         """Admit (or shed) one request; returns its tier-global id.
 
         Admission runs entirely at submit time — shed decisions are never
         deferred to a queue scan, so a caller learns a request's fate
         (``rid in tier.shed``) as soon as the tier does.
+
+        All validation (priority class, ``request_id`` collision) runs
+        BEFORE any tier state is touched: a rejected submit leaves the
+        tier exactly as it found it — no id consumed, no bookkeeping
+        entry, no queue mutation (regression-tested; the id counter used
+        to advance before the priority check could throw).
         """
-        rid = self._next_id
-        self._next_id += 1
         priority = self.default_priority if priority is None else priority
         level = self._level(priority)
+        if request_id is None:
+            rid = self._next_id
+        else:
+            rid = int(request_id)
+            if rid in self._meta:
+                raise ValueError(f"request id {rid} already in use")
         deadline = (self.default_deadline_steps if deadline_steps is None
                     else deadline_steps)
+        self._next_id = max(self._next_id, rid + 1)
         self._meta[rid] = (level, priority, deadline)
+        if not self._alive():
+            # every engine is dead: recorded, never silent
+            self._drop(rid, "no_capacity", None)
+            return rid
         if not self.shedding:
             self._admit(rid, pixels_u8, self._route_index())
             return rid
@@ -243,17 +315,114 @@ class SNNServingTier:
         self._assignment[rid] = idx
         self.stats["routed_per_engine"][idx] += 1
 
+    # ---- failover (serve.faults) ----------------------------------------
+    def _drop(self, rid: int, reason: str, engine: int | None,
+              detail: str = "") -> None:
+        """Record an unrecoverable request — the never-silent fault drop."""
+        self._assignment.pop(rid, None)
+        self.faulted[rid] = FaultRecord(
+            request_id=rid, reason=reason, engine=engine,
+            faults=self._rid_faults.get(rid, 0),
+            replay_seed=self.seed + rid, detail=detail)
+        if reason == "quarantined":
+            self.stats["quarantined"] += 1
+
+    def _adopt_row(self, tgt: int, rid: int, row) -> None:
+        """Re-admit one evacuated lane row onto engine ``tgt``, restoring
+        its (possibly garbage-collected) weight version first."""
+        eng = self.engines[tgt]
+        v = int(row.weight_version)
+        if v not in eng.bank.versions:
+            eng.bank.ensure(v, eng._place_weights(self._version_planes[v]))
+        eng.adopt(rid, row)
+        self._assignment[rid] = tgt
+
+    def _handle_poison(self, idx: int, fault: PoisonDispatchError) -> None:
+        """Evict the poison request's lane; retry elsewhere or quarantine.
+
+        The lane row is evacuated bit-exactly, so if the fault was
+        engine-local (or transient) the retried window still resumes
+        bit-identically.  After ``fault_cfg.quarantine_after`` faults
+        across engines the request is quarantined with its replay seed
+        (``FaultRecord``) instead of being retried forever.
+        """
+        rid = fault.request_id
+        row = self.engines[idx].evict_lane(rid)
+        self._rid_faults[rid] = self._rid_faults.get(rid, 0) + 1
+        if self._rid_faults[rid] >= self.fault_cfg.quarantine_after:
+            self._drop(rid, "quarantined", idx, detail=str(fault))
+            return
+        self._adopt_row(self._route_index(exclude=idx), rid, row)
+        self.stats["poison_retries"] += 1
+
+    def _handle_engine_failure(self, idx: int, fault: EngineFailure) -> None:
+        """Failover: mark the engine dead, evacuate its lanes, re-route
+        its queue, and record what could not be recovered.
+
+        The failed engine's in-flight lanes are snapshotted at their last
+        committed chunk boundary (the injector faults *before* a launch,
+        and a hung launch makes no progress, so the device tile is always
+        valid pre-fault state) and re-admitted least-loaded onto healthy
+        engines — resuming bit-identically mid-window.  ``state_lost``
+        failures (device gone with its memory) shed every in-flight lane
+        as a ``FaultRecord`` instead; the host queue and pending
+        adoptions are host-side and always recoverable.  The dead
+        engine's draining weight versions are freed (``bank.abort``) —
+        its lanes now live elsewhere, restored via the tier's host
+        copies.
+        """
+        eng = self.engines[idx]
+        self._dead.add(idx)
+        self.stats["engines_failed"] += 1
+        queued = list(eng.queue)
+        eng.queue.clear()
+        adoptions = list(eng._adoptions)
+        eng._adoptions.clear()
+        if fault.state_lost:
+            rows = []
+            lost = [r for r in eng.lane_req if r is not None]
+            eng.lane_req = [None] * eng.batch_size
+        else:
+            rows = eng.snapshot_lanes()
+            lost = []
+        eng.bank.abort()
+        for rid in lost:
+            self._drop(rid, "state_lost", idx, detail=str(fault))
+        for rid, row in rows + adoptions:
+            if not self._alive():
+                self._drop(rid, "engine_lost", idx, detail=str(fault))
+                continue
+            self._adopt_row(self._route_index(), rid, row)
+            self.stats["evacuated"] += 1
+        for rid, px in queued:
+            if not self._alive():
+                self._drop(rid, "engine_lost", idx, detail=str(fault))
+                continue
+            tgt = self._route_index()
+            self.engines[tgt].submit(px, request_id=rid)
+            self._assignment[rid] = tgt
+            self.stats["requeued"] += 1
+
     # ---- drive ----------------------------------------------------------
     @property
     def pending(self) -> int:
-        return sum(e.pending for e in self.engines)
+        return sum(self.engines[i].pending for i in self._alive())
 
     def step(self) -> list[int]:
-        """One chunk on every engine with work; returns finished rids."""
+        """One chunk on every healthy engine with work; returns finished
+        rids.  Engine faults surface here as typed exceptions and are
+        handled inline — an engine failing mid-round hands its work to
+        the engines after it in the same round."""
         done = []
-        for e in self.engines:
-            if e.pending:
+        for idx, e in enumerate(self.engines):
+            if idx in self._dead or not e.pending:
+                continue
+            try:
                 done.extend(e.step())
+            except PoisonDispatchError as f:
+                self._handle_poison(idx, f)
+            except EngineFailure as f:
+                self._handle_engine_failure(idx, f)
         return done
 
     def run(self, max_chunks: int | None = None) -> dict[int, RequestResult]:
@@ -262,19 +431,21 @@ class SNNServingTier:
         Engines advance in lockstep rounds (one chunk each per round) —
         the in-process stand-in for N hosts running concurrently.  Shed
         requests are *not* in the returned dict; they are in
-        :attr:`shed`, which partitions every submitted id with
-        :attr:`results`.
+        :attr:`shed`, and fault casualties in :attr:`faulted` — the three
+        together partition every submitted id.
         """
         limit = max_chunks if max_chunks is not None else sum(
             (e.pending + e.batch_size)
             * (e.cfg.num_steps // max(1, e.controller.min_chunk_steps) + 2)
-            for e in self.engines)
+            for e in self.engines) + (
+                64 * len(self.engines)
+                if any(e.injector is not None for e in self.engines) else 0)
         for _ in range(limit):
             if self.pending == 0:
                 break
             self.step()
-        for e in self.engines:
-            e.run(max_chunks=0)     # final harvest of retired lanes
+        for i in self._alive():
+            self.engines[i].run(max_chunks=0)  # final harvest
         return self.results
 
     @property
@@ -292,18 +463,27 @@ class SNNServingTier:
     def begin_rollout(self, params_q: dict) -> int:
         """Broadcast new packed weight planes to every engine, zero-drain.
 
-        Returns the fleet-wide new version (engines move in lockstep —
-        they were constructed together and roll together).  Completion is
-        per-engine as its last old-version lane retires;
-        :attr:`rollout_active` goes False when the whole fleet finished.
+        Returns the fleet-wide new version (healthy engines move in
+        lockstep — they were constructed together and roll together;
+        dead engines are skipped, their drained versions already
+        aborted).  Completion is per-engine as its last old-version lane
+        retires; :attr:`rollout_active` goes False when the whole healthy
+        fleet finished — including lanes evacuated onto engines that had
+        already dropped the old version (restored via ``bank.ensure``),
+        which is why a rollout can never complete while an old-version
+        lane sits anywhere alive.
         """
-        versions = {e.begin_rollout(params_q) for e in self.engines}
+        versions = {self.engines[i].begin_rollout(params_q)
+                    for i in self._alive()}
         assert len(versions) == 1, f"engines out of lockstep: {versions}"
-        return versions.pop()
+        v = versions.pop()
+        self._version_planes[v] = tuple(
+            layer["w_q"] for layer in params_q["layers"])
+        return v
 
     @property
     def rollout_active(self) -> bool:
-        return any(e.bank.rolling for e in self.engines)
+        return any(self.engines[i].bank.rolling for i in self._alive())
 
     def rollout_history(self) -> list:
         """Per-engine rollout event logs (ordered by engine index)."""

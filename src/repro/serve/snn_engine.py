@@ -71,6 +71,9 @@ from ..core.telemetry import (ChunkTelemetry, EngineLoad,
                               telemetry_partition_specs)
 from ..distributed.sharding import make_device_mesh, shard_map_compat
 from .early_exit import StabilityGateState, stability_specs, stability_step
+from .faults import (DeviceLostFault, DispatchFault, EngineFailure,
+                     EngineHealthState, FaultInjector, FaultToleranceConfig,
+                     PoisonDispatchError, injector_from_env, telemetry_ok)
 from .rollout import WeightBank, merge_version_chunks
 from .telemetry import AdaptiveDispatchConfig, make_controller, \
     summarize_chunk
@@ -353,7 +356,10 @@ class SNNStreamEngine:
                  chunk_steps: int = 4, patience: int = 2, seed: int = 0,
                  backend: str | None = None,
                  local_batch: int | None = None,
-                 adaptive: AdaptiveDispatchConfig | None = None):
+                 adaptive: AdaptiveDispatchConfig | None = None,
+                 engine_id: int = 0,
+                 injector: FaultInjector | None = None,
+                 fault_cfg: FaultToleranceConfig | None = None):
         if cfg.readout not in ("count", "first_spike", "membrane"):
             raise ValueError(
                 f"unknown readout {cfg.readout!r}: the streaming engine "
@@ -398,6 +404,24 @@ class SNNStreamEngine:
             if reason is not None:
                 raise ValueError(f"{backend} streaming backend unavailable:"
                                  f" {reason} — use backend='reference'")
+        # Degradation ladder (serve.faults): the resumable slice of the
+        # resolve_backend chain below the configured backend — staged
+        # cannot resume mid-window, so the last rung is always the jnp
+        # reference scan; infeasible rungs (a streamed launch over budget)
+        # are skipped at construction so a demotion can never fault on
+        # feasibility.  health.demotion_level indexes this tuple.
+        rungs = ("fused", "fused_streamed", "reference")
+        self._ladder = tuple(
+            b for b in rungs[rungs.index(backend):]
+            if b in (backend, "reference")
+            or reason_for(b == "fused_streamed") is None)
+        self.engine_id = int(engine_id)
+        self.injector = (injector if injector is not None
+                         else injector_from_env(engine_id))
+        self.fault_cfg = fault_cfg or FaultToleranceConfig()
+        self.health = EngineHealthState()
+        self._cooldown = 0           # scheduling rounds left to sit out
+        self._adoptions: list[tuple[int, LaneState]] = []  # evacuated rows
         # Version-tagged weight store (serve.rollout): new admissions bind
         # bank.current; in-flight lanes keep their admission-time version.
         self.bank = WeightBank(self._place_weights(weights))
@@ -465,28 +489,44 @@ class SNNStreamEngine:
         else:
             rid = int(request_id)
             if (rid in self.results or rid in self.lane_req
-                    or any(q[0] == rid for q in self.queue)):
+                    or any(q[0] == rid for q in self.queue)
+                    or any(a[0] == rid for a in self._adoptions)):
                 raise ValueError(f"request id {rid} already in use")
         self._next_id = max(self._next_id, rid + 1)
         self.queue.append((rid, pixels_u8))
         return rid
 
     def load_summary(self) -> EngineLoad:
-        """Routing-tier load signals — pure host bookkeeping, no syncs."""
+        """Routing-tier load signals — pure host bookkeeping, no syncs.
+
+        Includes the health surface: consecutive-fault count, degradation
+        rung and hang-watchdog margin (chunks of no-progress headroom
+        left; ``None`` when no fault harness is armed and the watchdog
+        therefore never runs), and liveness.  ``load_score`` folds these
+        into the routing comparison, steering traffic away from degraded
+        engines without any new device syncs.
+        """
         return EngineLoad(
             lanes_total=self.batch_size,
             lanes_busy=sum(r is not None for r in self.lane_req),
-            queue_depth=len(self.queue),
+            queue_depth=len(self.queue) + len(self._adoptions),
             mean_service_steps=(float(self.cfg.num_steps)
                                 if self._service_ewma is None
                                 else self._service_ewma),
             retired_total=self._retired_total,
             density_ewma=self.controller.density_ewma,
+            consecutive_faults=self.health.consecutive_faults,
+            demotion_level=self.health.demotion_level,
+            watchdog_margin=(None if self.injector is None
+                             else self.fault_cfg.watchdog_chunks
+                             - self.health.stalled_chunks),
+            alive=self.health.alive,
         )
 
     @property
     def pending(self) -> int:
-        return len(self.queue) + sum(r is not None for r in self.lane_req)
+        return (len(self.queue) + len(self._adoptions)
+                + sum(r is not None for r in self.lane_req))
 
     # ---- readout --------------------------------------------------------
     def _host_pred(self, counts: np.ndarray, first: np.ndarray,
@@ -521,13 +561,32 @@ class SNNStreamEngine:
         return done_ids
 
     def _admit_into(self, st: LaneState, slot: int) -> None:
-        """Reset host-side lane ``slot`` for the next queued request.
+        """Fill host-side lane ``slot`` with the next waiting request.
 
-        The PRNG lanes are seeded from ``seed + request_id``, so a
-        request's entire window is a pure function of its id — independent
-        of which slot, device, or chunk it lands in.  This is what makes
-        sharded and single-device serving bit-identical per request.
+        Evacuated-lane adoptions take priority over fresh admissions: an
+        adopted request already spent window steps elsewhere, so it is
+        the oldest work waiting, and its row is written back verbatim —
+        mid-window resume is bit-exact because the row IS the complete
+        chunk-boundary state.
+
+        For fresh requests the PRNG lanes are seeded from
+        ``seed + request_id``, so a request's entire window is a pure
+        function of its id — independent of which slot, device, chunk
+        *or engine* it lands in.  This is what makes sharded,
+        single-device and post-failover serving bit-identical per
+        request.
         """
+        if self._adoptions:
+            rid, row = self._adoptions.pop(0)
+            for f in LaneState._fields:
+                dst, src = getattr(st, f), getattr(row, f)
+                if isinstance(dst, tuple):
+                    for d, s in zip(dst, src):
+                        d[slot] = s
+                else:
+                    dst[slot] = src
+            self.lane_req[slot] = rid
+            return
         rid, pixels = self.queue.pop(0)
         st.px[slot] = pixels
         st.rng[slot] = np.asarray(
@@ -558,8 +617,9 @@ class SNNStreamEngine:
         actually retired or a queued request can be admitted."""
         occupied = np.array([r is not None for r in self.lane_req])
         active = np.asarray(self.lanes.active)
+        waiting = bool(self.queue or self._adoptions)
         return bool((occupied & ~active).any() or (
-            self.queue and not (occupied & active).all()))
+            waiting and not (occupied & active).all()))
 
     def _admit_and_compact(self) -> list[int]:
         """Harvest retired lanes, compact active ones, admit queued images.
@@ -583,9 +643,9 @@ class SNNStreamEngine:
         self.lane_req = ([self.lane_req[int(i)] for i in live]
                          + [None] * (self.batch_size - n_live))
 
-        # Admit queued requests into the freed tail slots.
+        # Admit waiting work (adoptions first) into the freed tail slots.
         for slot in range(n_live, self.batch_size):
-            if not self.queue:
+            if not (self.queue or self._adoptions):
                 break
             self._admit_into(st, slot)
 
@@ -605,6 +665,73 @@ class SNNStreamEngine:
         self.bank.gc({int(v) for v, r in zip(self._lane_versions,
                                              self.lane_req)
                       if r is not None})
+
+    # ---- failover (serve.faults) ----------------------------------------
+    def snapshot_lanes(self) -> list[tuple[int, LaneState]]:
+        """Host snapshot of every in-flight lane — the evacuation source.
+
+        Called by the tier on an engine that declared failure (with its
+        lane state intact).  Lanes that already finished are harvested
+        into ``results`` first — they need no evacuation — then each
+        still-active lane is returned as ``(request_id, row)``, where
+        ``row`` is the lane's complete chunk-boundary state (membranes,
+        enables, peaks, PRNG, counters, step/add totals, weight version).
+        Because chunked execution is bit-identical to one-shot, adopting
+        the row on any same-seed engine resumes the window bit-exactly.
+        The snapshot empties the engine: every slot is released and the
+        version mirror cleared, so a dead engine holds no live versions.
+        """
+        occupied = np.array([r is not None for r in self.lane_req])
+        st = jax.tree.map(lambda a: np.array(a), self.lanes)
+        self._harvest(st, occupied & ~st.active)
+        rows = []
+        for i in np.nonzero(occupied & st.active)[0]:
+            idx = int(i)
+            rows.append((self.lane_req[idx],
+                         jax.tree.map(lambda a, idx=idx: a[idx].copy(), st)))
+        self.lane_req = [None] * self.batch_size
+        self._lane_versions = np.zeros(self.batch_size, np.int64)
+        return rows
+
+    def evict_lane(self, request_id: int) -> LaneState:
+        """Pull one in-flight lane off the tile (poison-request path).
+
+        Returns the lane's host row (same contract as
+        :meth:`snapshot_lanes`) and frees the slot, so the tier can retry
+        the request on another engine — or quarantine it — without
+        touching any other lane.
+        """
+        slot = self.lane_req.index(request_id)
+        st = jax.tree.map(lambda a: np.array(a), self.lanes)
+        row = jax.tree.map(lambda a: a[slot].copy(), st)
+        st.active[slot] = False
+        self.lane_req[slot] = None
+        self._sync_versions(st)
+        self.lanes = self._upload(st)
+        return row
+
+    def adopt(self, request_id: int, row: LaneState) -> None:
+        """Queue an evacuated lane row for admission on this engine.
+
+        Adoptions are admitted ahead of the fresh-request queue at the
+        next compaction and resume bit-exactly (see :meth:`_admit_into`).
+        The row's weight version must already be in this engine's bank —
+        the tier restores garbage-collected versions via ``bank.ensure``
+        before adopting, so an old-version lane never silently runs on
+        the wrong planes.
+        """
+        rid = int(request_id)
+        if (rid in self.results or rid in self.lane_req
+                or any(q[0] == rid for q in self.queue)
+                or any(a[0] == rid for a in self._adoptions)):
+            raise ValueError(f"request id {rid} already in use")
+        v = int(row.weight_version)
+        if v not in self.bank.versions:
+            raise KeyError(
+                f"adopting request {rid} needs weight version {v}, not in "
+                f"bank {self.bank.versions} — restore it via bank.ensure()")
+        self._adoptions.append((rid, row))
+        self._next_id = max(self._next_id, rid + 1)
 
     def begin_rollout(self, params_q: dict) -> int:
         """Publish new weight planes without draining in-flight windows.
@@ -640,10 +767,10 @@ class SNNStreamEngine:
             num_steps=self.cfg.num_steps, lif_cfg=self.cfg.lif,
             dot_impl=self.cfg.dot_impl,
             active_pruning=self.cfg.active_pruning, patience=self.patience,
-            readout=self.cfg.readout, backend=self.backend,
+            readout=self.cfg.readout, backend=self.backend_effective,
             sparse_skip=self.cfg.sparse_skip)
 
-    def _dispatch_chunk(self, lanes: LaneState):
+    def _dispatch_versions(self, lanes: LaneState):
         """Version-aware chunk dispatch.
 
         Single live weight version (steady state): one ordinary chunk.
@@ -668,6 +795,130 @@ class SNNStreamEngine:
             outs.append((mask, out, tel))
         return merge_version_chunks(outs)
 
+    # ---- fault-guarded dispatch (serve.faults) --------------------------
+    @property
+    def backend_effective(self) -> str:
+        """The ladder rung chunks currently dispatch on (== the
+        configured ``backend`` until faults demote the engine)."""
+        return self._ladder[self.health.demotion_level]
+
+    def _health_event(self, ev: dict) -> None:
+        """Record a health transition where decisions are audited: the
+        health log AND the telemetry controller's history."""
+        self.health.events.append(ev)
+        self.controller.history.append(ev)
+
+    def _demote(self) -> None:
+        lvl = self.health.demotion_level
+        self._health_event({"event": "demote", "from": self._ladder[lvl],
+                            "to": self._ladder[lvl + 1], "level": lvl + 1})
+        self.health.demotion_level = lvl + 1
+        # the new rung gets a fresh fault budget and a fresh clean streak
+        self.health.consecutive_faults = 0
+        self.health.clean_chunks = 0
+
+    def _promote(self) -> None:
+        lvl = self.health.demotion_level
+        self._health_event({"event": "promote", "from": self._ladder[lvl],
+                            "to": self._ladder[lvl - 1], "level": lvl - 1})
+        self.health.demotion_level = lvl - 1
+        self.health.clean_chunks = 0
+
+    def _fail(self, reason: str, *, state_lost: bool = False):
+        self.health.alive = False
+        self._health_event({"event": "engine_failure", "reason": reason,
+                            "state_lost": state_lost})
+        raise EngineFailure(
+            f"engine {self.engine_id} failed: {reason}",
+            engine=self.engine_id, reason=reason, state_lost=state_lost)
+
+    def _dispatch_chunk(self, lanes: LaneState):
+        """Chunk dispatch with the fault harness in the loop.
+
+        With no injector armed this is exactly :meth:`_dispatch_versions`
+        — zero overhead, zero readbacks, the historical engine
+        bit-for-bit.  Armed, every launch consults the injector and the
+        recovery ladder runs:
+
+        * **transient dispatch fault** → up to ``max_retries`` immediate
+          re-launches (each a fresh injector roll); retries are the pure
+          chunk function on unchanged lane state, so a recovered launch
+          is bit-identical to a never-faulted one.  ``demote_after``
+          consecutive faults step the backend down the degradation
+          ladder; a faulting round past the retry budget backs off a
+          bounded, deterministic number of scheduling rounds; and
+          ``fail_after`` consecutive faults with no rung left escalate to
+          :class:`EngineFailure` (the tier evacuates).
+        * **hang** → the chunk makes no progress; ``watchdog_chunks``
+          consecutive no-progress chunks trip the chunk-deadline watchdog
+          and the engine declares failure *with its lane state intact*.
+        * **device loss** → immediate failure, optionally with the lane
+          state unrecoverable.
+        * **poison request** → the typed per-request fault propagates for
+          the tier to evict/quarantine; the launch never ran, so every
+          other lane is untouched.
+        * **corrupted telemetry** → the record fails host validation and
+          is dropped (the controller never observes it); the datapath
+          result stands — telemetry is a side channel, not the result.
+
+        Returns ``(lanes', telemetry | None)`` — ``None`` marks a round
+        that produced no observable record (hang / backoff / corruption).
+        """
+        if self.injector is None:
+            return self._dispatch_versions(lanes)
+        if not self.health.alive:
+            raise EngineFailure(
+                f"engine {self.engine_id} is dead", engine=self.engine_id,
+                reason="dead", state_lost=False)
+        ft = self.fault_cfg
+        attempt = 0
+        while True:
+            try:
+                tok = self.injector.before_dispatch(
+                    attempt, backend=self.backend_effective,
+                    rids=[r for r in self.lane_req if r is not None])
+            except DeviceLostFault as e:
+                self._fail("device_lost", state_lost=e.state_lost)
+            except PoisonDispatchError:
+                raise
+            except DispatchFault as e:
+                self.health.record_fault("dispatch", str(e))
+                if (self.health.consecutive_faults >= ft.demote_after
+                        and self.health.demotion_level + 1
+                        < len(self._ladder)):
+                    self._demote()
+                    attempt = 0
+                    continue
+                if self.health.consecutive_faults >= ft.fail_after:
+                    self._fail("dispatch_exhausted")
+                attempt += 1
+                if attempt <= ft.max_retries:
+                    continue
+                # the whole round faulted: deterministic bounded backoff,
+                # counted in scheduling rounds (the tier's step currency)
+                burst = self.health.consecutive_faults - 1
+                self._cooldown = min(ft.backoff_base << min(burst, 8),
+                                     ft.backoff_max)
+                return lanes, None
+            if tok == "hang":
+                self.health.stalled_chunks += 1
+                if self.health.stalled_chunks >= ft.watchdog_chunks:
+                    self._fail("hang")
+                return lanes, None
+            out, tel = self._dispatch_versions(lanes)
+            self.health.stalled_chunks = 0
+            tel = self.injector.filter_telemetry(tel)
+            if not telemetry_ok(tel):
+                self.health.telemetry_faults += 1
+                self._health_event({"event": "fault", "kind": "telemetry"})
+                tel = None
+            else:
+                self.health.record_clean()
+                if (self.health.demotion_level > 0
+                        and self.health.clean_chunks >= ft.promote_after):
+                    self._promote()
+            return out, tel
+
     def _observe(self, src: LaneState, nxt: LaneState,
                  tel: ChunkTelemetry) -> None:
         """Feed one chunk's telemetry to the controller (adaptive only —
@@ -682,9 +933,14 @@ class SNNStreamEngine:
     def step(self) -> list[int]:
         """Admit + run one chunk.  Returns request ids finished so far."""
         done = self._admit_and_compact()
+        if self._cooldown > 0:
+            # transient-fault backoff: sit this scheduling round out
+            self._cooldown -= 1
+            return done
         src = self.lanes
         self.lanes, tel = self._dispatch_chunk(src)
-        self._observe(src, self.lanes, tel)
+        if tel is not None:
+            self._observe(src, self.lanes, tel)
         return done
 
     def run(self, max_chunks: int | None = None) -> dict[int, RequestResult]:
@@ -692,7 +948,10 @@ class SNNStreamEngine:
         limit = max_chunks if max_chunks is not None else (
             (self.pending + self.batch_size)
             * (self.cfg.num_steps // max(1, self.controller.min_chunk_steps)
-               + 2))
+               + 2)
+            # fault rounds (retry backoff, hang stalls) make no progress;
+            # give an armed harness bounded slack instead of a hard wedge
+            + (0 if self.injector is None else 64))
         for _ in range(limit):
             if self.pending == 0:
                 break
@@ -742,7 +1001,10 @@ class ShardedSNNStreamEngine(SNNStreamEngine):
                  batch_size: int | None = None,
                  chunk_steps: int = 4, patience: int = 2, seed: int = 0,
                  backend: str | None = None, overlap: bool = True,
-                 adaptive: AdaptiveDispatchConfig | None = None):
+                 adaptive: AdaptiveDispatchConfig | None = None,
+                 engine_id: int = 0,
+                 injector: FaultInjector | None = None,
+                 fault_cfg: FaultToleranceConfig | None = None):
         if mesh is None:
             mesh = make_device_mesh((len(jax.devices()),), (axis_name,))
         if axis_name not in mesh.axis_names:
@@ -774,14 +1036,15 @@ class ShardedSNNStreamEngine(SNNStreamEngine):
                          chunk_steps=chunk_steps, patience=patience,
                          seed=seed, backend=backend,
                          local_batch=batch_size // self.n_devices,
-                         adaptive=adaptive)
+                         adaptive=adaptive, engine_id=engine_id,
+                         injector=injector, fault_cfg=fault_cfg)
         specs = lane_partition_specs(len(self.weights), axis_name)
         self._shardings = jax.tree.map(
             lambda s: NamedSharding(mesh, s), specs,
             is_leaf=lambda x: isinstance(x, P))
-        # one sharded executor per chunk length the controller picks
-        # (exactly one entry in frozen mode)
-        self._chunk_fns: dict[int, object] = {}
+        # one sharded executor per (chunk length, ladder rung) the
+        # runtime dispatches (exactly one entry when frozen and healthy)
+        self._chunk_fns: dict[tuple[int, str], object] = {}
         self._chunk_fn_for(chunk_steps)
         self.lanes = jax.device_put(self.lanes, self._shardings)
 
@@ -792,15 +1055,17 @@ class ShardedSNNStreamEngine(SNNStreamEngine):
         return jax.device_put(tuple(jnp.asarray(w) for w in weights),
                               NamedSharding(self.mesh, P()))
     def _chunk_fn_for(self, n_steps: int):
-        if n_steps not in self._chunk_fns:
-            self._chunk_fns[n_steps] = make_sharded_stream_chunk(
+        key = (n_steps, self.backend_effective)
+        if key not in self._chunk_fns:
+            self._chunk_fns[key] = make_sharded_stream_chunk(
                 self.mesh, self.axis_name, len(self.weights),
                 chunk_steps=n_steps, num_steps=self.cfg.num_steps,
                 lif_cfg=self.cfg.lif, dot_impl=self.cfg.dot_impl,
                 active_pruning=self.cfg.active_pruning,
                 patience=self.patience, readout=self.cfg.readout,
-                backend=self.backend, sparse_skip=self.cfg.sparse_skip)
-        return self._chunk_fns[n_steps]
+                backend=self.backend_effective,
+                sparse_skip=self.cfg.sparse_skip)
+        return self._chunk_fns[key]
 
     def _upload(self, st: LaneState) -> LaneState:
         return jax.device_put(st, self._shardings)
@@ -834,10 +1099,11 @@ class ShardedSNNStreamEngine(SNNStreamEngine):
         st = jax.tree.map(lambda a: a[np.asarray(order, np.int32)], st)
         self.lane_req = lane_req
 
-        # Round-robin admission across device blocks.
-        while self.queue and any(free_slots):
+        # Round-robin admission across device blocks (adoptions first —
+        # _admit_into drains them before the fresh queue).
+        while (self.queue or self._adoptions) and any(free_slots):
             for d in range(self.n_devices):
-                if not self.queue:
+                if not (self.queue or self._adoptions):
                     break
                 if free_slots[d]:
                     self._admit_into(st, free_slots[d].pop(0))
@@ -849,6 +1115,9 @@ class ShardedSNNStreamEngine(SNNStreamEngine):
     def step(self) -> list[int]:
         """Admit + run one chunk, overlapping the next with host work."""
         done = self._admit_and_compact()
+        if self._cooldown > 0:
+            self._cooldown -= 1
+            return done
         if self._spec is not None and self.lanes is self._spec_src:
             # the tile object is the very one the speculative chunk was
             # dispatched from (no compaction replaced it — here OR in any
@@ -865,9 +1134,15 @@ class ShardedSNNStreamEngine(SNNStreamEngine):
         self._spec = self._spec_src = None
         self.lanes = nxt
         self.stats["chunks"] += 1
-        self._observe(src, nxt, tel)
-        if self.overlap and (self.queue
-                             or any(r is not None for r in self.lane_req)):
+        if tel is not None:
+            self._observe(src, nxt, tel)
+        # Speculation is off while a fault harness is armed: a speculative
+        # launch would consume injector consults (and could fault) one
+        # step early, detaching the fault coordinates from the committed
+        # dispatch sequence the deterministic-replay contract pins.
+        if self.overlap and self.injector is None \
+                and (self.queue
+                     or any(r is not None for r in self.lane_req)):
             # enqueue chunk k+1 now — the devices stay busy while the next
             # step's host-side readback and queue bookkeeping run (the
             # lane↔version map only changes at compaction, which discards
