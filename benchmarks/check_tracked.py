@@ -73,6 +73,13 @@ CONTRACT_FIELDS = [
     "ladder_repromoted",
     "replay_deterministic",
     "no_silent_loss",
+    # model-axis sharding contract (BENCH_model_sharded.json)
+    "model_sharded_bit_identical",
+    "telemetry_bit_identical_model",
+    "wide_fused_resident",
+    "wide_shard_fits_vmem",
+    "failover_bit_identical",
+    "mesh_shape",
 ]
 
 
@@ -84,7 +91,7 @@ def _get(obj, dotted):
     return obj, True
 
 
-def _committed_json(name: str):
+def _committed_json(name: str, repo_root: str = REPO_ROOT):
     """The artifact as committed at git HEAD, or None with a reason.
 
     The working-tree root copy is NOT a usable baseline here: the bench
@@ -92,7 +99,7 @@ def _committed_json(name: str):
     """
     try:
         out = subprocess.run(
-            ["git", "show", f"HEAD:{name}"], cwd=REPO_ROOT,
+            ["git", "show", f"HEAD:{name}"], cwd=repo_root,
             capture_output=True, text=True, timeout=60)
     except (OSError, subprocess.TimeoutExpired) as e:
         return None, f"git unavailable ({e})"
@@ -105,25 +112,44 @@ def _committed_json(name: str):
         return None, f"committed copy is not valid JSON ({e})"
 
 
-def check(names: list[str]) -> list[str]:
+def check(names: list[str], repo_root: str = REPO_ROOT) -> list[str]:
+    bench_dir = os.path.join(repo_root, "results", "bench")
     errors = []
     for name in names:
-        tracked, why = _committed_json(name)
+        tracked, why = _committed_json(name, repo_root)
         if tracked is None:
             errors.append(f"{name}: {why}")
             continue
-        fresh_p = os.path.join(BENCH_DIR, name)
+        fresh_p = os.path.join(bench_dir, name)
         if not os.path.exists(fresh_p):
             errors.append(f"{name}: no fresh results/bench copy — the "
-                          f"producing suite did not run")
+                          f"producing suite did not run (re-run "
+                          f"`python -m benchmarks.run` or drop the stale "
+                          f"committed artifact)")
             continue
-        with open(fresh_p) as f:
-            fresh = json.load(f)
+        try:
+            with open(fresh_p) as f:
+                fresh = json.load(f)
+        except (OSError, json.JSONDecodeError) as e:
+            errors.append(f"{name}: fresh results/bench copy unreadable "
+                          f"({e}) — the producing suite crashed mid-write; "
+                          f"re-run it")
+            continue
         for field in CONTRACT_FIELDS:
             tv, present = _get(tracked, field)
-            if not present:
-                continue
             fv, fresh_present = _get(fresh, field)
+            if not present:
+                if fresh_present:
+                    # The reverse hole: a contract field the bench now
+                    # emits but the committed baseline predates.  Skipping
+                    # it silently would let the new claim go untracked
+                    # forever — the artifact must be re-committed.
+                    errors.append(
+                        f"{name}: contract field {field!r} added to the "
+                        f"bench but missing from the committed copy — "
+                        f"re-run the suite and commit the refreshed root "
+                        f"artifact")
+                continue
             if not fresh_present:
                 errors.append(f"{name}: contract field {field!r} vanished "
                               f"from the fresh run")
@@ -133,28 +159,34 @@ def check(names: list[str]) -> list[str]:
     return errors
 
 
-def committed_artifacts() -> list[str]:
+def committed_artifacts(repo_root: str = REPO_ROOT) -> list[str]:
     """Every root-level BENCH_*.json tracked at git HEAD."""
-    out = subprocess.run(
-        ["git", "ls-tree", "--name-only", "HEAD"], cwd=REPO_ROOT,
-        capture_output=True, text=True, timeout=60)
+    try:
+        out = subprocess.run(
+            ["git", "ls-tree", "--name-only", "HEAD"], cwd=repo_root,
+            capture_output=True, text=True, timeout=60)
+    except (OSError, subprocess.TimeoutExpired) as e:
+        raise SystemExit(f"TRACKED-ARTIFACT MISMATCH: git unavailable "
+                         f"({e}) — run from a git checkout")
     if out.returncode != 0:
-        raise RuntimeError(f"git ls-tree failed: {out.stderr.strip()}")
+        raise SystemExit(f"TRACKED-ARTIFACT MISMATCH: git ls-tree failed "
+                         f"({out.stderr.strip()}) — run from a git "
+                         f"checkout with at least one commit")
     return sorted(n for n in out.stdout.splitlines()
                   if n.startswith("BENCH_") and n.endswith(".json"))
 
 
-def main(argv=None) -> None:
+def main(argv=None, repo_root: str = REPO_ROOT) -> None:
     names = (argv if argv is not None else sys.argv[1:])
     if not names or names == ["--all"]:
-        names = committed_artifacts()
+        names = committed_artifacts(repo_root)
         print(f"# checking all {len(names)} BENCH_*.json committed at "
               f"HEAD: {', '.join(names)}")
         if not names:
             print("usage: python -m benchmarks.check_tracked "
                   "[BENCH_x.json ... | --all]  (no artifacts at HEAD)")
             sys.exit(2)
-    errors = check(list(names))
+    errors = check(list(names), repo_root)
     for e in errors:
         print(f"TRACKED-ARTIFACT MISMATCH: {e}")
     if errors:

@@ -33,6 +33,8 @@ SUITES = {
                "Serving tier (routing, shedding, weight rollout)"),
     "faults": ("bench_faults",
                "Fault tolerance (failover latency, ladder, accounting)"),
+    "model_sharded": ("bench_model_sharded",
+                      "Model-axis sharding (2-D data×model mesh)"),
     "fused": ("bench_fused", "Fused vs staged encode→LIF (time + bytes)"),
     "roofline": ("roofline", "Roofline terms from the dry-run"),
 }

@@ -51,13 +51,19 @@ SNN_CONFIG_PRUNED = SNNConfig(
 
 # Streaming-serving mesh knobs (serve.ShardedSNNStreamEngine).  The lane
 # tile is data-parallel: ``axis_name`` shards the batch axis of every
-# LaneState leaf, weights are replicated per device.  ``num_devices=None``
-# takes every visible device; the engine asserts divisibility.
+# LaneState leaf.  ``model_devices > 1`` adds a second mesh axis
+# (``model_axis_name``) that shards each layer's output-neuron weight
+# columns across devices (spike exchange at layer boundaries) — the 2-D
+# (data × model) mesh that keeps WIDE-class stacks VMEM-resident.
+# ``num_devices=None`` lets the data axis absorb every device the model
+# axis leaves over; the engine asserts divisibility.
 @dataclass(frozen=True)
 class SNNStreamMeshConfig:
     axis_name: str = "data"
-    num_devices: int | None = None     # None = all visible devices
-    lanes_per_device: int = 8          # device-local batch-tile slots
+    num_devices: int | None = None     # data-axis width (None = the rest)
+    model_axis_name: str = "model"
+    model_devices: int = 1             # model-axis width (1 = pure data)
+    lanes_per_device: int = 8          # slots per DATA-axis device block
     chunk_steps: int = 4               # window steps per device dispatch
     overlap: bool = True               # speculative chunk k+1 dispatch
     # Telemetry-driven dispatch tuning (serve.telemetry): None reads the
@@ -137,9 +143,19 @@ def make_serving_tier(params_q: dict, snn_cfg: SNNConfig = SNN_CONFIG,
 
 def make_stream_mesh(knobs: SNNStreamMeshConfig = SNN_STREAM_MESH):
     """Build the serving lane mesh from the knobs (AxisType-free fallback
-    via distributed.sharding, so it works on the pinned 0.4.x jax)."""
+    via distributed.sharding, so it works on the pinned 0.4.x jax).
+
+    ``model_devices == 1`` keeps the historical 1-D data mesh;
+    ``model_devices > 1`` builds the validated 2-D (data × model) mesh.
+    """
     import jax
 
+    if knobs.model_devices > 1:
+        from ..distributed.sharding import make_2d_device_mesh
+        return make_2d_device_mesh(
+            data_devices=knobs.num_devices,
+            model_devices=knobs.model_devices,
+            axis_names=(knobs.axis_name, knobs.model_axis_name))
     from ..distributed.sharding import make_device_mesh
     n = knobs.num_devices or len(jax.devices())
     return make_device_mesh((n,), (knobs.axis_name,),
@@ -156,6 +172,7 @@ def make_stream_engine(params_q: dict, snn_cfg: SNNConfig = SNN_CONFIG,
     return ShardedSNNStreamEngine(
         params_q, snn_cfg, mesh=make_stream_mesh(knobs),
         axis_name=knobs.axis_name,
+        model_axis_name=knobs.model_axis_name,
         lanes_per_device=knobs.lanes_per_device,
         chunk_steps=knobs.chunk_steps, overlap=knobs.overlap,
         adaptive=knobs.adaptive, **engine_kw)
@@ -178,10 +195,14 @@ SNN_CONFIG_DEEP = SNNConfig(
 # Widened SNN_CONFIG_DEEP whose int8-packed resident footprint
 # (~13.5 MiB by kernels.fused_snn.stack_vmem_bytes for the padded
 # 896→2048→2048→128 stack — the packed weights alone are 12 MiB) exceeds
-# the fused kernel's VMEM residency budget: the stack that exercises the
-# ``fused_streamed`` backend — weights stay in HBM and are double-buffered
-# through VMEM slab scratch, still ONE launch per chunk.  ``auto`` on TPU
-# resolves it to fused_streamed; an explicit ``fused`` request raises.
+# the fused kernel's VMEM residency budget: single-device ``auto`` on TPU
+# resolves it to the ``fused_streamed`` backend — weights stay in HBM and
+# are double-buffered through VMEM slab scratch, still ONE launch per
+# chunk — and an explicit single-device ``fused`` request raises.  On a
+# 4-way model axis (``resolve_backend(..., model_shards=4)``) each device
+# holds only its 2048/4-column weight shard (~3.4 MiB), the per-shard
+# footprint fits the budget, and ``auto`` resolves to VMEM-resident
+# ``fused`` — the stack the 2-D (data × model) mesh exists for.
 SNN_CONFIG_WIDE = SNNConfig(
     layer_sizes=(784, 2048, 2048, 10),
     num_steps=20,

@@ -38,6 +38,7 @@ __all__ = [
     "quantize_params",
     "encode_lif_timestep",
     "snn_int_stack_step",
+    "snn_int_stack_step_sharded",
     "resolve_backend",
     "fused_unsupported_reason",
     "readout_pred",
@@ -171,7 +172,8 @@ def fused_unsupported_reason(cfg: SNNConfig, n_layers: int,
                              layer_sizes: tuple[int, ...] | None = None,
                              trace_steps: int | None = None,
                              local_batch: int | None = None,
-                             streamed: bool = False) -> str | None:
+                             streamed: bool = False,
+                             model_shards: int = 1) -> str | None:
     """Why the fused megakernel cannot run this configuration (None = ok).
 
     The kernel handles arbitrary layer stacks, but it keeps every weight
@@ -188,11 +190,19 @@ def fused_unsupported_reason(cfg: SNNConfig, n_layers: int,
     sharded caller (serve.ShardedSNNStreamEngine) validates against the
     launch one device actually executes — ``kernels.fused_snn.block_b_for``
     maps the local tile to the batch block that launch allocates (never
-    derived from the global lane count).
+    derived from the global lane count).  ``model_shards`` scopes the
+    check the same way along the neuron axis: on a ``model_shards``-way
+    model mesh axis each device holds only an output-column shard of
+    every layer that divides (``kernels.fused_snn.layer_shard_ways``), so
+    feasibility is judged against the per-device shard footprint — how a
+    WIDE stack that overflows single-device VMEM becomes resident-fused
+    on a 4-way model axis.
     """
     from ..kernels import fused_snn
     if n_layers < 1:
         return "the network has no layers"
+    if model_shards < 1:
+        return f"model_shards={model_shards} is not a positive shard count"
     sizes = layer_sizes
     if sizes is None and len(cfg.layer_sizes) - 1 == n_layers:
         sizes = cfg.layer_sizes
@@ -201,12 +211,14 @@ def fused_unsupported_reason(cfg: SNNConfig, n_layers: int,
     need = fused_snn.stack_vmem_bytes(
         sizes, fused_snn.block_b_for(local_batch),
         cfg.num_steps if trace_steps is None else trace_steps,
-        streamed=streamed)
+        streamed=streamed, model_shards=model_shards)
     if need > fused_snn.VMEM_BUDGET_BYTES:
         kind = "streamed working set" if streamed else \
             "resident stack footprint"
+        shard = (f" on a {model_shards}-way model axis"
+                 if model_shards > 1 else "")
         return (f"{kind} ~{need / 2**20:.1f} MiB for "
-                f"layer_sizes={tuple(sizes)} exceeds the "
+                f"layer_sizes={tuple(sizes)}{shard} exceeds the "
                 f"{fused_snn.VMEM_BUDGET_BYTES / 2**20:.0f} MiB VMEM "
                 f"budget")
     return None
@@ -216,7 +228,8 @@ def resolve_backend(cfg: SNNConfig, backend: str | None = None,
                     n_layers: int = 1, *,
                     layer_sizes: tuple[int, ...] | None = None,
                     trace_steps: int | None = None,
-                    local_batch: int | None = None) -> str:
+                    local_batch: int | None = None,
+                    model_shards: int = 1) -> str:
     """Pick the integer-engine backend actually run on this host.
 
     ``auto`` resolves on TPU through the chain fused → fused_streamed →
@@ -231,17 +244,23 @@ def resolve_backend(cfg: SNNConfig, backend: str | None = None,
     scopes the VMEM feasibility check to one device's batch tile (see
     :func:`fused_unsupported_reason`) — data-parallel sharding never
     *shrinks* what fits, but the check must not be run against the global
-    lane count either.
+    lane count either.  ``model_shards`` likewise scopes it to the
+    per-device weight shard of a model mesh axis: a WIDE stack that
+    resolves ``fused_streamed`` single-device resolves resident ``fused``
+    on a 4-way model axis, because each device only keeps a quarter of
+    every shardable layer on-chip.
     """
     b = backend if backend is not None else cfg.backend
     on_tpu = jax.default_backend() == "tpu"
     reason = fused_unsupported_reason(cfg, n_layers, layer_sizes,
-                                      trace_steps, local_batch)
+                                      trace_steps, local_batch,
+                                      model_shards=model_shards)
 
     def streamed_reason():
         return fused_unsupported_reason(cfg, n_layers, layer_sizes,
                                         trace_steps, local_batch,
-                                        streamed=True)
+                                        streamed=True,
+                                        model_shards=model_shards)
 
     if b == "auto":
         if not on_tpu:
@@ -592,6 +611,97 @@ def snn_int_stack_step(rng: jax.Array, pixels_u8: jax.Array,
         current = jnp.where(st.enable, current, 0)
         new_st, fired = lif.lif_step_int(st, current, lif_cfg)
         adds = adds + n_spk[-1] * n_en[-1]
+        if active_pruning:
+            new_st = new_st._replace(
+                enable=jnp.logical_and(new_st.enable,
+                                       jnp.logical_not(fired)))
+        new_states.append(new_st)
+        x = fired
+    tel = {"n_spk": jnp.stack(n_spk), "n_en": jnp.stack(n_en),
+           "tiles": jnp.stack(tiles)}
+    return rng, tuple(new_states), x, adds, tel
+
+
+def snn_int_stack_step_sharded(rng: jax.Array, pixels_u8: jax.Array,
+                               states: tuple, weights: tuple,
+                               lif_cfg: lif.LIFConfig, *,
+                               model_axis: str, ways: tuple[int, ...],
+                               dot_impl: str = "int32",
+                               active_pruning: bool = False,
+                               sparse_skip: bool | None = None,
+                               contraction: str = "jnp",
+                               interpret: bool | None = None):
+    """One stack timestep on a model mesh axis — the sharded twin of
+    :func:`snn_int_stack_step`, to be traced inside ``shard_map``.
+
+    Layer state, pixels and PRNG lanes arrive FULL (replicated over
+    ``model_axis`` — the ``LaneState`` checkpoint stays placement-
+    independent); each ``weights[l]`` is the device-LOCAL view: the
+    output-column shard for layers ``ways[l] > 1``
+    (``kernels.fused_snn.layer_shard_ways``), the whole matrix for
+    layers that replicate.  Per sharded layer the device slices its own
+    membrane/enable columns (``jax.lax.axis_index``), runs the partial
+    Σ W·S of the full input-spike vector against its weight shard —
+    ``contraction="pallas"`` launches
+    ``kernels.ops.partial_contraction_op``, ``"jnp"`` the reference
+    integer dot, bit-identical either way — steps LIF on the shard
+    (elementwise, so the shard of the update == the update of the
+    shard), then ``jax.lax.all_gather``s the fired/membrane shards back
+    to full along the neuron axis.  Disjoint column shards in
+    axis-index order concatenate to exactly the single-device integer
+    contraction, so every derived quantity (pruning, counts, gate,
+    telemetry) is computed on full arrays redundantly by every model
+    peer and stays bit-identical to :func:`snn_int_stack_step`.
+    Replicated layers skip the exchange entirely.
+
+    Returns ``(rng, new_states, fired_out, adds, tel)`` exactly like the
+    unsharded step; the ``tiles`` telemetry row covers THIS device's
+    contraction geometry (its shard's skipped tile pairs), which the
+    model-sharded chunk concatenates on the block axis.
+    """
+    from . import prng as prng_mod
+    from ..kernels import ops as kops
+    ss = resolve_sparse_skip(sparse_skip)
+    rng = prng_mod.xorshift32_step(rng)
+    x = pixels_u8 > prng_mod.uniform_u8(rng)
+
+    def contract(spikes, en, w_loc):
+        if contraction == "pallas":
+            return kops.partial_contraction_op(
+                spikes, en, w_loc, sparse_skip=ss, interpret=interpret)
+        cur = lif.synaptic_current_int(spikes, w_loc, dot_impl)
+        return cur, layer_tile_skips(spikes, en, sparse_skip=ss)
+
+    n_spk, n_en, tiles, new_states = [], [], [], []
+    adds = jnp.zeros(pixels_u8.shape[:-1], jnp.int32)
+    for st, w_loc, w_ways in zip(states, weights, ways):
+        n_spk.append(jnp.sum(x.astype(jnp.int32), axis=-1))
+        n_en.append(jnp.sum(st.enable.astype(jnp.int32), axis=-1))
+        adds = adds + n_spk[-1] * n_en[-1]
+        if w_ways == 1:
+            current, skipped = contract(x, st.enable, w_loc)
+            tiles.append(skipped)
+            current = jnp.where(st.enable, current, 0)
+            new_st, fired = lif.lif_step_int(st, current, lif_cfg)
+        else:
+            shard_n = w_loc.shape[1]
+            off = jax.lax.axis_index(model_axis) * shard_n
+            v_sh = jax.lax.dynamic_slice_in_dim(st.v, off, shard_n, axis=-1)
+            en_sh = jax.lax.dynamic_slice_in_dim(st.enable, off, shard_n,
+                                                 axis=-1)
+            current_sh, skipped = contract(x, en_sh, w_loc)
+            tiles.append(skipped)
+            current_sh = jnp.where(en_sh, current_sh, 0)
+            new_sh, fired_sh = lif.lif_step_int(
+                lif.LIFStateInt(v=v_sh, enable=en_sh), current_sh, lif_cfg)
+            # spike exchange: every model peer recovers the full fired
+            # vector (next layer's input) and membrane row, shards
+            # concatenating in axis-index order == the weight slicing
+            v_full = jax.lax.all_gather(new_sh.v, model_axis, axis=-1,
+                                        tiled=True)
+            fired = jax.lax.all_gather(fired_sh, model_axis, axis=-1,
+                                       tiled=True)
+            new_st = lif.LIFStateInt(v=v_full, enable=st.enable)
         if active_pruning:
             new_st = new_st._replace(
                 enable=jnp.logical_and(new_st.enable,

@@ -170,6 +170,29 @@ class EngineLoad(NamedTuple):
         return self.lanes_busy / max(1, self.lanes_total)
 
 
+def _effective_service_steps(load: EngineLoad) -> float:
+    """Sanitized mean service window for the routing estimators.
+
+    A just-constructed engine has retired nothing, and an ``EngineLoad``
+    assembled by an external coordinator may carry a zero, negative or
+    non-finite ``mean_service_steps`` (empty EWMA serialized as 0.0 /
+    NaN).  Feeding that into :func:`load_score` made a cold engine's
+    score collapse to 0 (or NaN) regardless of its queue, so it
+    spuriously beat every warmed healthy engine; :func:`estimate_eta_steps`
+    likewise returned 0 / NaN instead of a usable wait bound.  Any value
+    that cannot be a measured window (non-finite or ≤ 0) falls back to
+    one step — the smallest window a request can consume — so a cold
+    engine's outstanding work still counts, while every legitimately
+    measured mean (engines seed the EWMA with ``num_steps``) passes
+    through untouched and the historical scoring formula is preserved
+    bit-for-bit for healthy warmed records.
+    """
+    mean = float(load.mean_service_steps)
+    if not (0.0 < mean < float("inf")):   # ≤0, NaN and ±inf all fail this
+        return 1.0
+    return mean
+
+
 def load_score(load: EngineLoad) -> float:
     """Expected outstanding work per lane slot, in window steps.
 
@@ -193,7 +216,8 @@ def load_score(load: EngineLoad) -> float:
     owed = 0.5 * load.lanes_busy + load.queue_depth
     degraded = (0.5 * load.demotion_level
                 + 0.25 * load.consecutive_faults) * load.lanes_total
-    return (owed + degraded) * load.mean_service_steps / max(1, load.lanes_total)
+    return ((owed + degraded) * _effective_service_steps(load)
+            / max(1, load.lanes_total))
 
 
 def estimate_eta_steps(load: EngineLoad) -> float:
@@ -206,13 +230,19 @@ def estimate_eta_steps(load: EngineLoad) -> float:
     admission policy needs a monotone, deterministic feasibility
     estimate, not a simulator — and conservative in the right direction:
     early-exit traffic shortens the measured wave, never lengthens it.
+
+    Cold-engine edge: a record whose service EWMA is still empty (zero /
+    NaN mean) estimates with a one-step wave via
+    :func:`_effective_service_steps`, so the ETA is always finite and
+    ≥ 1 — an admission gate comparing it against a deadline never sees
+    0 or NaN from an engine that simply hasn't retired anything yet.
     """
     free = load.lanes_total - load.lanes_busy
     if load.queue_depth < free:
         waves = 0
     else:
         waves = 1 + (load.queue_depth - free) // max(1, load.lanes_total)
-    return (waves + 1) * load.mean_service_steps
+    return (waves + 1) * _effective_service_steps(load)
 
 
 class MatmulTelemetry(NamedTuple):
@@ -269,18 +299,26 @@ def layer_tile_skips(x: jax.Array, en: jax.Array, *,
     return jnp.sum(jnp.logical_not(live), axis=(1, 2)).astype(jnp.int32)
 
 
-def telemetry_partition_specs(axis_name: str | None = "data"):
-    """PartitionSpecs of a ChunkTelemetry on a data-parallel lane mesh.
+def telemetry_partition_specs(axis_name: str | None = "data",
+                              model_axis: str | None = None):
+    """PartitionSpecs of a ChunkTelemetry on a lane (× model) mesh.
 
     The per-lane leaves shard on the lane axis (last); the tile leaf
     shards on its batch-*block* axis, which nests inside the lane axis
-    (device-local blocks concatenate to the global block list).  No leaf
-    looks across devices, so the record composes with the engines'
-    collective-free ``shard_map`` chunk.
+    (device-local blocks concatenate to the global block list).  With a
+    ``model_axis`` the per-lane counts stay data-sharded only — every
+    model peer derives them from the *full* gathered spike vector, so
+    they are replicated over the model axis — while the tile leaf
+    concatenates per-shard skip counts on the block axis, data-outer /
+    model-inner: each model peer counts the tile pairs of its own weight
+    shard's contraction geometry.  No leaf looks across devices, so the
+    record composes with the engines' ``shard_map`` chunk.
     """
     from jax.sharding import PartitionSpec as P
     p = P(None, None, axis_name)
-    return ChunkTelemetry(n_spk=p, n_en=p, tiles_skipped=p)
+    tiles_axes = axis_name if model_axis is None else (axis_name, model_axis)
+    return ChunkTelemetry(n_spk=p, n_en=p,
+                          tiles_skipped=P(None, None, tiles_axes))
 
 
 def concat_telemetry(chunks) -> ChunkTelemetry:

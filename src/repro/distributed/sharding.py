@@ -29,7 +29,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 __all__ = ["ShardingRules", "use_rules", "current_rules", "logical_spec",
            "shard", "named_sharding", "DEFAULT_RULES", "FSDP_RULES",
-           "make_device_mesh", "shard_map_compat"]
+           "make_device_mesh", "make_2d_device_mesh", "shard_map_compat"]
 
 
 def make_device_mesh(shape: tuple, axis_names: tuple, *,
@@ -52,6 +52,47 @@ def make_device_mesh(shape: tuple, axis_names: tuple, *,
     from jax.experimental import mesh_utils
     devs = mesh_utils.create_device_mesh(shape, devices=devices)
     return Mesh(devs, axis_names)
+
+
+def make_2d_device_mesh(data_devices: int | None = None,
+                        model_devices: int = 1, *,
+                        axis_names: tuple[str, str] = ("data", "model"),
+                        devices=None) -> Mesh:
+    """Validated 2-D (data × model) mesh for the serving engines.
+
+    The data axis shards the lane (batch) tile; the model axis shards
+    each layer's output-neuron dimension (weight columns) with spike
+    exchange at layer boundaries.  ``data_devices=None`` absorbs every
+    device the ``model_devices``-way model axis leaves over, so
+    ``make_2d_device_mesh(model_devices=4)`` on an 8-device host yields a
+    2×4 mesh.  A ``model_devices=1`` mesh is still built 2-D (a trailing
+    1-sized model axis) — the lane partition specs never mention the
+    model axis, so every 1-D data-mesh consumer composes unchanged.
+    """
+    pool = list(jax.devices()) if devices is None else list(devices)
+    if len(set(axis_names)) != 2:
+        raise ValueError(f"axis_names must be two distinct names, got "
+                         f"{axis_names!r}")
+    model_devices = int(model_devices)
+    if model_devices < 1:
+        raise ValueError(f"model_devices={model_devices} must be >= 1")
+    if data_devices is None:
+        if len(pool) % model_devices:
+            raise ValueError(
+                f"{len(pool)} devices do not divide over a "
+                f"{model_devices}-way model axis — pass data_devices "
+                f"explicitly or change the model width")
+        data_devices = len(pool) // model_devices
+    data_devices = int(data_devices)
+    if data_devices < 1:
+        raise ValueError(f"data_devices={data_devices} must be >= 1")
+    need = data_devices * model_devices
+    if need > len(pool):
+        raise ValueError(
+            f"{data_devices}×{model_devices} (data × model) mesh needs "
+            f"{need} devices but only {len(pool)} are visible")
+    return make_device_mesh((data_devices, model_devices),
+                            tuple(axis_names), devices=pool[:need])
 
 
 def shard_map_compat(f, mesh: Mesh, in_specs, out_specs):

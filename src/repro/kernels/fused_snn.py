@@ -74,6 +74,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 __all__ = ["fused_snn_stack_pallas", "pack_weights", "stack_vmem_bytes",
+           "layer_shard_ways", "partial_contraction_pallas",
            "block_b_for", "VMEM_BUDGET_BYTES", "DEFAULT_BLOCK_B", "LANE"]
 
 DEFAULT_BLOCK_B = 8     # batch tile per program
@@ -129,8 +130,30 @@ def _widen_tile(packed: jax.Array) -> jax.Array:
     return (packed[0].astype(jnp.int32) * 2 + packed[1].astype(jnp.int32))
 
 
+def layer_shard_ways(layer_sizes, model_shards: int):
+    """Effective model-axis shard count per layer (len = n_layers).
+
+    A layer's output-neuron dimension shards ``model_shards``-way only
+    when the RAW width divides evenly — contiguous column slices of
+    identical width are what make the sharded integer contraction
+    concatenate back to the single-device result bit-for-bit.  A layer
+    that doesn't divide (e.g. the 10-class head on a 4-way axis)
+    replicates instead: every model peer holds its full weight matrix,
+    computes the identical output redundantly, and skips the spike
+    exchange entirely.  Shared by the VMEM feasibility estimate, the
+    sharded stack step (``core.snn.snn_int_stack_step_sharded``) and the
+    engine's per-layer weight placement, so all three agree on which
+    layers actually split.
+    """
+    if model_shards <= 1:
+        return tuple(1 for _ in layer_sizes[1:])
+    return tuple(int(model_shards) if int(n) % int(model_shards) == 0 else 1
+                 for n in layer_sizes[1:])
+
+
 def stack_vmem_bytes(layer_sizes, block_b: int = DEFAULT_BLOCK_B,
-                     num_steps: int = 1, streamed: bool = False) -> int:
+                     num_steps: int = 1, streamed: bool = False,
+                     model_shards: int = 1) -> int:
     """Estimate of the kernel's resident VMEM footprint for one program.
 
     Counts the padded int8-packed weight planes (2 bytes/weight resident;
@@ -140,22 +163,34 @@ def stack_vmem_bytes(layer_sizes, block_b: int = DEFAULT_BLOCK_B,
     allowance for the per-step spike/current temporaries.  Kept in
     lockstep with the launcher: same padding, same ``block_b_for`` block,
     same scratch shapes as :func:`fused_snn_stack_pallas` allocates.
+
+    With ``model_shards > 1`` the estimate is the PER-DEVICE footprint on
+    a model axis: each layer that divides (:func:`layer_shard_ways`)
+    contributes only its output-column shard — weight planes, membrane /
+    enable state and current all shrink by the shard count (padded back
+    to the 128-lane boundary), while the input-spike side stays full
+    (every device holds the gathered spike vector).  Layers that don't
+    divide stay whole.  ``model_shards=1`` reproduces the historical
+    single-device estimate exactly.
     """
-    sizes = [_pad128(int(n)) for n in layer_sizes]
+    sizes_raw = [int(n) for n in layer_sizes]
+    ways = layer_shard_ways(sizes_raw, model_shards)
+    sizes = [_pad128(n) for n in sizes_raw]
+    shard_outs = [_pad128(n // w) for n, w in zip(sizes_raw[1:], ways)]
     bB = block_b
     L = len(sizes) - 1
-    max_out = max(sizes[1:])
+    max_out = max(shard_outs)
     total = sizes[0] * bB * (1 + 4)                      # pixels + PRNG
-    for n_in, n_out in zip(sizes[:-1], sizes[1:]):
+    for n_in, n_out in zip(sizes[:-1], shard_outs):
         if not streamed:
             total += n_in * n_out * 2                    # packed int8 hi+lo
         total += bB * n_out * (4 + 4 + 1 + 4)            # v + v_peak + en + current
     if streamed:
         total += 2 * 2 * LANE * max_out                  # 2-slot DMA slabs
     total += LANE * max_out * 4                          # widened i32 tile
-    total += num_steps * bB * sizes[-1] * 4              # v_trace block
+    total += num_steps * bB * shard_outs[-1] * 4         # v_trace block
     total += num_steps * L * (2 * bB + 1) * 4            # telemetry blocks
-    total += bB * max(sizes) * 8                         # spike temporaries
+    total += bB * max(sizes[0], max_out) * 8             # spike temporaries
     return total
 
 
@@ -221,6 +256,72 @@ def _tiled_contraction(x, en, read_tile, n_out_pad: int, sparse_skip: bool,
                 accs[nt] = accs[nt] + tile()
     out = accs[0] if nnt == 1 else jnp.concatenate(accs, axis=-1)
     return out, skipped
+
+
+def _partial_kernel(x_ref, en_ref, w_ref, out_ref, skip_ref, *,
+                    sparse_skip: bool):
+    x = x_ref[...] != 0
+    en = en_ref[...] != 0
+
+    def read_tile(kt, nt):
+        return w_ref[:, kt * LANE:(kt + 1) * LANE, nt * LANE:(nt + 1) * LANE]
+
+    cur, skipped = _tiled_contraction(x, en, read_tile, w_ref.shape[2],
+                                      sparse_skip)
+    out_ref[...] = cur
+    skip_ref[0, 0] = skipped
+
+
+def partial_contraction_pallas(x_u8: jax.Array, en_u8: jax.Array,
+                               w_packed: jax.Array, *,
+                               sparse_skip: bool = True,
+                               block_b: int = DEFAULT_BLOCK_B,
+                               interpret: bool = False):
+    """One layer's per-device partial Σ W·S over an output-column shard.
+
+    The model-axis datapath building block: each device calls this with
+    the FULL input-spike vector ``x_u8`` (B, n_in_pad) and the packed
+    weight planes of ITS output-neuron shard ``w_packed``
+    (2, n_in_pad, n_out_shard_pad) — concatenating the per-device results
+    over the model axis in shard order IS the single-device contraction,
+    bit-for-bit, because the column shards are disjoint and integer
+    accumulation is exact.  Unlike :func:`fused_snn_stack_pallas` this is
+    one layer, one step: the spike exchange between layers happens
+    OUTSIDE the launch (``jax.lax.all_gather`` under ``shard_map`` in
+    ``core.snn.snn_int_stack_step_sharded``) — kernel-level inter-chip
+    RDMA collectives are TPU-only and would break the CPU-interpretable
+    bit-identity contract every backend here honors.
+
+    Same event-driven tile skipping as the megakernel
+    (:func:`_tiled_contraction`, ``en_u8`` = the shard's enable columns),
+    and the same telemetry: returns ``(current, skipped)`` with
+    ``current`` (B, n_out_shard_pad) int32 and ``skipped`` (n_blocks,)
+    int32 — this shard's skipped tile pairs per batch block, which the
+    model-sharded telemetry record concatenates on the block axis.
+    """
+    B, n_in_pad = x_u8.shape
+    n_out_pad = w_packed.shape[2]
+    bB = block_b
+    grid = (pl.cdiv(B, bB),)
+    n_blocks = grid[0]
+    kernel = functools.partial(_partial_kernel, sparse_skip=sparse_skip)
+    out, skipped = pl.pallas_call(
+        kernel, grid=grid,
+        in_specs=[
+            pl.BlockSpec((bB, n_in_pad), lambda i: (i, 0)),
+            pl.BlockSpec((bB, n_out_pad), lambda i: (i, 0)),
+            pl.BlockSpec(w_packed.shape, lambda i: (0, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bB, n_out_pad), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, n_out_pad), jnp.int32),
+            jax.ShapeDtypeStruct((n_blocks, 1), jnp.int32),
+        ],
+        interpret=interpret)(x_u8, en_u8, w_packed)
+    return out, skipped[:, 0]
 
 
 def _stack_kernel(*refs, num_layers: int, chunk_steps: int, window_steps: int,

@@ -18,7 +18,8 @@ from ..core.telemetry import (ChunkTelemetry, MatmulTelemetry,
 from . import fused_snn, lif_step, poisson_encode, spike_matmul
 
 __all__ = ["poisson_encode_op", "lif_forward_op", "spike_matmul_op",
-           "fused_snn_op", "fused_snn_stack_op", "validate_weight_codes",
+           "fused_snn_op", "fused_snn_stack_op", "partial_contraction_op",
+           "validate_weight_codes",
            "SPIKE_DENSITY_THRESHOLD", "resolve_density_threshold"]
 
 # Below this per-tile spike density the masked (event-driven) spike-matmul
@@ -113,6 +114,43 @@ def lif_forward_op(spikes_t: jax.Array, w_q: jax.Array, *, decay_shift: int,
         v_rest=v_rest, v_min=v_min, v_max=v_max,
         active_pruning=active_pruning, interpret=interpret)
     return spk[:, :B, :n_out], vtr[:, :B, :n_out], vfin[:B, :n_out]
+
+
+def partial_contraction_op(spikes: jax.Array, en: jax.Array,
+                           w_q: jax.Array, *,
+                           sparse_skip: bool | None = None,
+                           interpret: bool | None = None):
+    """One layer's Σ W·S against an output-column weight shard, via Pallas.
+
+    The model-axis datapath's per-device contraction: ``spikes`` (B, n_in)
+    bool is the FULL gathered input-spike vector, ``en`` (B, n_out_sh)
+    bool and ``w_q`` (n_in, n_out_sh) cover only this device's
+    output-neuron shard.  Pads batch to the launch block and both neuron
+    axes to 128 (padded pixels never spike, padded neurons are disabled),
+    packs the shard's weights into the two int8 planes per call, launches
+    :func:`fused_snn.partial_contraction_pallas` and unpads.  Bit-exact
+    equal to ``core.lif.synaptic_current_int(spikes, w_q)`` on the shard
+    — integer accumulation, no rounding — which is what makes the model-
+    sharded fused path == the jnp reference == the single-device kernel.
+
+    Returns ``(current, skipped)``: (B, n_out_sh) int32 and the
+    per-batch-block skipped-tile-pair counts (n_blocks,) int32 with
+    exactly the geometry ``core.telemetry.layer_tile_skips`` mirrors for
+    this shard's (B, n_in, n_out_sh) launch.  Designed to be called
+    inside a caller's jit/scan/shard_map (no jit wrapper of its own).
+    """
+    interpret = _use_interpret() if interpret is None else interpret
+    ss = _resolve_sparse_skip(sparse_skip)
+    B = spikes.shape[0]
+    n_out = w_q.shape[1]
+    bB = fused_snn.block_b_for(B)
+    x = _pad_to(_pad_to(spikes.astype(jnp.uint8), 0, bB), 1, fused_snn.LANE)
+    e = _pad_to(_pad_to(en.astype(jnp.uint8), 0, bB), 1, fused_snn.LANE)
+    wp = fused_snn.pack_weights(
+        _pad_to(_pad_to(w_q, 0, fused_snn.LANE), 1, fused_snn.LANE))
+    cur, skipped = fused_snn.partial_contraction_pallas(
+        x, e, wp, sparse_skip=ss, block_b=bB, interpret=interpret)
+    return cur[:B, :n_out], skipped
 
 
 @partial(jax.jit, static_argnames=(

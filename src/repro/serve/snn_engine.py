@@ -66,7 +66,8 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..core import lif as lif_mod
 from ..core import prng as prng_mod
-from ..core.snn import SNNConfig, readout_pred, snn_int_stack_step
+from ..core.snn import (SNNConfig, readout_pred, snn_int_stack_step,
+                        snn_int_stack_step_sharded)
 from ..core.telemetry import (ChunkTelemetry, EngineLoad,
                               telemetry_partition_specs)
 from ..distributed.sharding import make_device_mesh, shard_map_compat
@@ -80,7 +81,7 @@ from .telemetry import AdaptiveDispatchConfig, make_controller, \
 
 __all__ = ["SNNStreamEngine", "ShardedSNNStreamEngine", "LaneState",
            "RequestResult", "stream_chunk", "lane_partition_specs",
-           "make_sharded_stream_chunk"]
+           "weight_partition_specs", "make_sharded_stream_chunk"]
 
 _V_PEAK_INIT = np.iinfo(np.int32).min   # window-start peak sentinel
 
@@ -141,15 +142,34 @@ def _stream_chunk_impl(lanes: LaneState, weights: tuple, *, chunk_steps: int,
                        dot_impl: str, active_pruning: bool, patience: int,
                        readout: str = "count", backend: str = "reference",
                        sparse_skip: bool | None = None,
-                       interpret: bool | None = None):
+                       interpret: bool | None = None,
+                       model_axis: str | None = None,
+                       model_ways: tuple[int, ...] | None = None):
     """Un-jitted chunk body: every op is per-lane (no cross-batch contact),
     which is what lets the same code run whole-tile under ``jax.jit`` or
     per-device-slice under ``shard_map`` with bit-identical results.
     Returns ``(lanes', telemetry)`` — the telemetry record is produced
     bit-identically by the fused kernels and this jnp fallback (frozen
     lanes report zero activity, matching the frozen add counters; the
-    tile counter reflects the block work the launch geometry executed)."""
-    if backend in ("fused", "fused_streamed"):
+    tile counter reflects the block work the launch geometry executed).
+
+    ``model_axis``/``model_ways`` switch the datapath to the model-sharded
+    step (``core.snn.snn_int_stack_step_sharded``): ``weights`` are then
+    the device-LOCAL per-layer views (output-column shards for layers
+    whose ``model_ways`` entry > 1) and the layer loop exchanges spikes
+    over ``model_axis``, so this body must be traced inside ``shard_map``
+    on a mesh carrying that axis.  The whole-chunk single-launch
+    megakernel cannot host the exchange (collectives cannot run inside a
+    ``pallas_call``), so a fused backend decomposes into per-(step, layer)
+    Pallas partial-contraction launches — still VMEM-resident weights,
+    still bit-identical: the gate/freeze logic below runs on full
+    (gathered) arrays identically on every model peer.
+    """
+    if model_axis is not None and backend in ("fused", "fused_streamed"):
+        contraction = "pallas"
+    else:
+        contraction = "jnp"
+    if backend in ("fused", "fused_streamed") and model_axis is None:
         from ..kernels import ops
         k = ops.fused_snn_stack_op(
             lanes.px, lanes.rng, weights, num_steps=num_steps,
@@ -179,10 +199,19 @@ def _stream_chunk_impl(lanes: LaneState, weights: tuple, *, chunk_steps: int,
         act = st.active
         layer_states = tuple(lif_mod.LIFStateInt(v=v, enable=e)
                              for v, e in zip(st.v, st.en))
-        rng, new_states, fired, adds_t, tel = snn_int_stack_step(
-            st.rng, st.px, layer_states, weights, lif_cfg,
-            dot_impl=dot_impl, active_pruning=active_pruning,
-            sparse_skip=sparse_skip)
+        if model_axis is not None:
+            rng, new_states, fired, adds_t, tel = \
+                snn_int_stack_step_sharded(
+                    st.rng, st.px, layer_states, weights, lif_cfg,
+                    model_axis=model_axis, ways=model_ways,
+                    dot_impl=dot_impl, active_pruning=active_pruning,
+                    sparse_skip=sparse_skip, contraction=contraction,
+                    interpret=interpret)
+        else:
+            rng, new_states, fired, adds_t, tel = snn_int_stack_step(
+                st.rng, st.px, layer_states, weights, lif_cfg,
+                dot_impl=dot_impl, active_pruning=active_pruning,
+                sparse_skip=sparse_skip)
         counts = st.counts + fired.astype(jnp.int32)
         first = jnp.where(
             jnp.logical_and(fired, st.first == num_steps),
@@ -271,7 +300,8 @@ def stream_chunk(lanes: LaneState, weights: tuple, *, chunk_steps: int,
 
 
 def lane_partition_specs(n_layers: int,
-                         axis_name: str | None = "data") -> LaneState:
+                         axis_name: str | None = "data",
+                         model_axis: str | None = None) -> LaneState:
     """Per-leaf ``PartitionSpec``s of a data-parallel lane tile.
 
     Every :class:`LaneState` leaf leads with the batch axis and the chunk
@@ -279,7 +309,15 @@ def lane_partition_specs(n_layers: int,
     quantized weights are the replicated operand.  The gate leaves come
     from ``early_exit.stability_specs`` — the per-lane shardability of the
     in-kernel early exit is that module's contract, not this one's.
+
+    ``model_axis`` is accepted for symmetry with the weight/telemetry
+    specs and deliberately changes nothing: the lane checkpoint is
+    REPLICATED over the model axis (no leaf mentions it), which is the
+    placement-independence contract — a row snapshotted from a
+    model-sharded engine adopts into any other engine unchanged, so
+    failover/evacuation works identically on 1-D and 2-D meshes.
     """
+    del model_axis                       # lane state never shards on it
     p = P(axis_name)
     gate = stability_specs(axis_name)
     return LaneState(
@@ -289,6 +327,20 @@ def lane_partition_specs(n_layers: int,
         steps=p, adds=p, active=p, weight_version=p)
 
 
+def weight_partition_specs(model_ways: tuple[int, ...],
+                           model_axis: str | None) -> tuple:
+    """Per-layer ``PartitionSpec``s of the quantized weight planes.
+
+    Layers whose effective shard count (``kernels.fused_snn.
+    layer_shard_ways``) exceeds 1 split their output-column axis over the
+    model mesh axis; non-dividing layers (and every layer on a 1-D data
+    mesh) replicate.
+    """
+    if model_axis is None:
+        return tuple(P() for _ in model_ways)
+    return tuple(P(None, model_axis) if w > 1 else P() for w in model_ways)
+
+
 def make_sharded_stream_chunk(mesh: Mesh, axis_name: str, n_layers: int, *,
                               chunk_steps: int, num_steps: int,
                               lif_cfg: lif_mod.LIFConfig, dot_impl: str,
@@ -296,28 +348,46 @@ def make_sharded_stream_chunk(mesh: Mesh, axis_name: str, n_layers: int, *,
                               readout: str = "count",
                               backend: str = "reference",
                               sparse_skip: bool | None = None,
-                              interpret: bool | None = None):
-    """Build the data-parallel chunk executor for ``mesh``.
+                              interpret: bool | None = None,
+                              model_axis: str | None = None,
+                              model_ways: tuple[int, ...] | None = None):
+    """Build the (data × model) chunk executor for ``mesh``.
 
     Returns a jitted ``(lanes, weights) -> (lanes, telemetry)`` whose body
     runs under ``shard_map``: each device executes the fused megakernel
     (or the jnp scan fallback) on its local lane slice with the weights
     replicated — the software analogue of the paper's replicated
-    neuron-core lanes.  No collectives are emitted: the stability gate,
-    lane freezing and the telemetry record are per-lane/per-block, so the
-    mapped body is embarrassingly parallel and bit-identical to the
-    single-device :func:`stream_chunk` on the concatenation of the slices
-    (telemetry's tile leaf concatenates the device-local block lists —
-    the geometry each device's launch actually executed).
+    neuron-core lanes.  On a 1-D data mesh no collectives are emitted: the
+    stability gate, lane freezing and the telemetry record are
+    per-lane/per-block, so the mapped body is embarrassingly parallel and
+    bit-identical to the single-device :func:`stream_chunk` on the
+    concatenation of the slices (telemetry's tile leaf concatenates the
+    device-local block lists — the geometry each device's launch actually
+    executed).
+
+    With ``model_axis``/``model_ways`` the weights arrive pre-sharded per
+    layer (:func:`weight_partition_specs`: output-column shards over the
+    model axis for layers that divide) and the body runs the model-sharded
+    datapath — per-device partial contraction, ``all_gather`` spike
+    exchange at layer boundaries.  Lane state stays data-sharded /
+    model-replicated, the per-lane telemetry counts are derived from full
+    gathered arrays (still bit-identical to single-device), and the tile
+    leaf concatenates per-shard skip counts data-outer / model-inner on
+    the block axis.
     """
-    specs = lane_partition_specs(n_layers, axis_name)
-    tel_specs = telemetry_partition_specs(axis_name)
+    specs = lane_partition_specs(n_layers, axis_name, model_axis)
+    tel_specs = telemetry_partition_specs(axis_name, model_axis)
+    if model_ways is None:
+        w_specs = P()
+    else:
+        w_specs = weight_partition_specs(model_ways, model_axis)
     body = partial(
         _stream_chunk_impl, chunk_steps=chunk_steps, num_steps=num_steps,
         lif_cfg=lif_cfg, dot_impl=dot_impl, active_pruning=active_pruning,
         patience=patience, readout=readout, backend=backend,
-        sparse_skip=sparse_skip, interpret=interpret)
-    mapped = shard_map_compat(body, mesh, in_specs=(specs, P()),
+        sparse_skip=sparse_skip, interpret=interpret,
+        model_axis=model_axis, model_ways=model_ways)
+    mapped = shard_map_compat(body, mesh, in_specs=(specs, w_specs),
                               out_specs=(specs, tel_specs))
     return jax.jit(mapped)
 
@@ -356,6 +426,7 @@ class SNNStreamEngine:
                  chunk_steps: int = 4, patience: int = 2, seed: int = 0,
                  backend: str | None = None,
                  local_batch: int | None = None,
+                 model_shards: int = 1,
                  adaptive: AdaptiveDispatchConfig | None = None,
                  engine_id: int = 0,
                  injector: FaultInjector | None = None,
@@ -370,14 +441,19 @@ class SNNStreamEngine:
                                  + [w.shape[1] for w in weights])
         # Per-device lane tile (the sharded subclass passes its slice;
         # single-device serving holds the whole tile) — scopes the fused
-        # VMEM feasibility checks below to one device's launch.
+        # VMEM feasibility checks below to one device's launch.  The
+        # sharded subclass likewise passes the model-axis width so the
+        # checks run against the per-device weight SHARD: a WIDE stack
+        # over single-device VMEM resolves resident fused on a 4-way
+        # model axis instead of falling back to fused_streamed.
         self.local_batch = batch_size if local_batch is None else local_batch
+        self.model_shards = int(model_shards)
 
         def reason_for(streamed: bool) -> str | None:
             return fused_unsupported_reason(
                 cfg, len(weights), self.layer_sizes,
                 trace_steps=chunk_steps, local_batch=self.local_batch,
-                streamed=streamed)
+                streamed=streamed, model_shards=self.model_shards)
 
         if backend in (None, "auto"):
             # the resumable-backend mirror of core.snn.resolve_backend's
@@ -961,7 +1037,7 @@ class SNNStreamEngine:
 
 
 class ShardedSNNStreamEngine(SNNStreamEngine):
-    """Data-parallel lane mesh over the streaming engine.
+    """(Data × model)-parallel lane mesh over the streaming engine.
 
     The batch tile is sharded over the ``axis_name`` axis of a
     ``jax.sharding.Mesh`` — each device owns ``batch_size // n_devices``
@@ -973,6 +1049,23 @@ class ShardedSNNStreamEngine(SNNStreamEngine):
     per-lane, results are bit-identical to :class:`SNNStreamEngine` on the
     same seeds: same predictions, same retirement steps, same frozen
     executed-add counters.
+
+    If the mesh also carries a ``model_axis_name`` axis (build one with
+    ``distributed.sharding.make_2d_device_mesh``), each layer whose
+    output width divides the axis splits its weight columns across the
+    model peers — the multi-core neuron partitioning of the SNN-hardware
+    literature: per-device partial contraction of the full input-spike
+    vector against the local weight shard, per-shard LIF, then an
+    ``all_gather`` spike exchange at the layer boundary so every peer
+    enters the next layer with the full fired vector.  Layers that don't
+    divide (the 10-class head on a 4-way axis) replicate and skip the
+    exchange.  Lane state stays model-replicated, so the ``LaneState``
+    checkpoint is placement-independent — ``snapshot_lanes``/``adopt``
+    failover works unchanged between 1-D and 2-D engines — and the VMEM
+    feasibility check runs against the per-device weight shard, which is
+    what lets a WIDE stack serve VMEM-resident ``fused`` on a 4-way
+    model axis instead of streaming weights from HBM.  Results stay
+    bit-identical: disjoint integer column shards concatenate exactly.
 
     Scheduling differences from the base engine:
 
@@ -997,6 +1090,7 @@ class ShardedSNNStreamEngine(SNNStreamEngine):
 
     def __init__(self, params_q: dict, cfg: SNNConfig, *,
                  mesh: Mesh | None = None, axis_name: str = "data",
+                 model_axis_name: str = "model",
                  lanes_per_device: int | None = None,
                  batch_size: int | None = None,
                  chunk_steps: int = 4, patience: int = 2, seed: int = 0,
@@ -1005,14 +1099,31 @@ class ShardedSNNStreamEngine(SNNStreamEngine):
                  engine_id: int = 0,
                  injector: FaultInjector | None = None,
                  fault_cfg: FaultToleranceConfig | None = None):
+        from ..kernels.fused_snn import layer_shard_ways
         if mesh is None:
             mesh = make_device_mesh((len(jax.devices()),), (axis_name,))
         if axis_name not in mesh.axis_names:
             raise ValueError(f"mesh {mesh.axis_names} has no "
                              f"{axis_name!r} axis")
+        if model_axis_name == axis_name:
+            raise ValueError(
+                f"model_axis_name {model_axis_name!r} must differ from the "
+                f"lane axis {axis_name!r}")
         self.mesh = mesh
         self.axis_name = axis_name
         self.n_devices = mesh.shape[axis_name]
+        # Model axis: present in the mesh → each layer that divides holds
+        # only an output-column weight shard per device and the chunk
+        # exchanges spikes at layer boundaries; absent (or 1-wide) → the
+        # historical pure data-parallel engine, bit-for-bit.
+        self.model_axis_name = model_axis_name
+        self.model_devices = (int(mesh.shape[model_axis_name])
+                              if model_axis_name in mesh.axis_names else 1)
+        self.model_axis = (model_axis_name if self.model_devices > 1
+                           else None)
+        w_shapes = [layer["w_q"].shape for layer in params_q["layers"]]
+        sizes = tuple([w_shapes[0][0]] + [s[1] for s in w_shapes])
+        self.model_ways = layer_shard_ways(sizes, self.model_devices)
         if batch_size is None:
             batch_size = (8 if lanes_per_device is None
                           else lanes_per_device) * self.n_devices
@@ -1032,13 +1143,16 @@ class ShardedSNNStreamEngine(SNNStreamEngine):
         self.stats = {"chunks": 0, "spec_used": 0, "spec_wasted": 0}
         self._spec: tuple | None = None
         self._spec_src: LaneState | None = None
+        self._spec_steps: int | None = None
         super().__init__(params_q, cfg, batch_size=batch_size,
                          chunk_steps=chunk_steps, patience=patience,
                          seed=seed, backend=backend,
                          local_batch=batch_size // self.n_devices,
+                         model_shards=self.model_devices,
                          adaptive=adaptive, engine_id=engine_id,
                          injector=injector, fault_cfg=fault_cfg)
-        specs = lane_partition_specs(len(self.weights), axis_name)
+        specs = lane_partition_specs(len(self.weights), axis_name,
+                                     self.model_axis)
         self._shardings = jax.tree.map(
             lambda s: NamedSharding(mesh, s), specs,
             is_leaf=lambda x: isinstance(x, P))
@@ -1050,10 +1164,15 @@ class ShardedSNNStreamEngine(SNNStreamEngine):
 
     # ---- device placement ----------------------------------------------
     def _place_weights(self, weights: tuple) -> tuple:
-        # replicated over the lane mesh — rollout versions land the same
-        # way the construction-time planes do
-        return jax.device_put(tuple(jnp.asarray(w) for w in weights),
-                              NamedSharding(self.mesh, P()))
+        # per-layer placement: output-column shards over the model axis
+        # for layers that divide, replicated otherwise (and always
+        # replicated on a pure data mesh) — rollout versions land the
+        # same way the construction-time planes do
+        w_specs = weight_partition_specs(self.model_ways, self.model_axis)
+        return tuple(
+            jax.device_put(jnp.asarray(w), NamedSharding(self.mesh, s))
+            for w, s in zip(weights, w_specs))
+
     def _chunk_fn_for(self, n_steps: int):
         key = (n_steps, self.backend_effective)
         if key not in self._chunk_fns:
@@ -1064,7 +1183,9 @@ class ShardedSNNStreamEngine(SNNStreamEngine):
                 active_pruning=self.cfg.active_pruning,
                 patience=self.patience, readout=self.cfg.readout,
                 backend=self.backend_effective,
-                sparse_skip=self.cfg.sparse_skip)
+                sparse_skip=self.cfg.sparse_skip,
+                model_axis=self.model_axis,
+                model_ways=self.model_ways if self.model_axis else None)
         return self._chunk_fns[key]
 
     def _upload(self, st: LaneState) -> LaneState:
@@ -1118,11 +1239,19 @@ class ShardedSNNStreamEngine(SNNStreamEngine):
         if self._cooldown > 0:
             self._cooldown -= 1
             return done
-        if self._spec is not None and self.lanes is self._spec_src:
+        if (self._spec is not None and self.lanes is self._spec_src
+                and self._spec_steps == self.controller.chunk_steps):
             # the tile object is the very one the speculative chunk was
             # dispatched from (no compaction replaced it — here OR in any
-            # intervening run()/_admit_and_compact call): the speculation
-            # IS this step's chunk (same pure function, same input)
+            # intervening run()/_admit_and_compact call) AND the
+            # controller still wants the chunk length the speculation ran
+            # at: the speculation IS this step's chunk (same pure
+            # function, same input).  The length guard is load-bearing —
+            # an adaptive retune landing between dispatch and commit
+            # (this engine's own observe, or a tier/coordinator feeding
+            # the controller out-of-band) means the speculative state
+            # advanced the lanes by the WRONG number of window steps;
+            # committing it would silently serve a stale-length chunk.
             src = self._spec_src
             nxt, tel = self._spec
             self.stats["spec_used"] += 1
@@ -1132,6 +1261,7 @@ class ShardedSNNStreamEngine(SNNStreamEngine):
             src = self.lanes
             nxt, tel = self._dispatch_chunk(src)
         self._spec = self._spec_src = None
+        self._spec_steps = None
         self.lanes = nxt
         self.stats["chunks"] += 1
         if tel is not None:
@@ -1146,7 +1276,11 @@ class ShardedSNNStreamEngine(SNNStreamEngine):
             # enqueue chunk k+1 now — the devices stay busy while the next
             # step's host-side readback and queue bookkeeping run (the
             # lane↔version map only changes at compaction, which discards
-            # the speculation, so version-split dispatch speculates safely)
+            # the speculation, so version-split dispatch speculates safely).
+            # Record the chunk length this speculation ran at: the commit
+            # path discards it (spec_wasted) if a retune moves the
+            # controller's choice before the next step.
             self._spec_src = nxt
+            self._spec_steps = self.controller.chunk_steps
             self._spec = self._dispatch_chunk(nxt)
         return done

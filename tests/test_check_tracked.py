@@ -1,0 +1,141 @@
+"""benchmarks.check_tracked: the tracked-artifact checker must fail with
+clear, actionable messages — never a KeyError or a traceback — on every
+degenerate state `--all` can encounter.
+
+Regression contracts (each failed as a raw exception or a silent pass
+before the fix):
+  * a committed artifact whose fresh results/bench counterpart is missing
+    → a "no fresh copy" error naming the recovery action;
+  * a fresh counterpart that is corrupt (producing suite crashed
+    mid-write) → an "unreadable" error, not a JSONDecodeError traceback;
+  * a contract field the bench now emits but the committed baseline
+    predates (added but not re-committed) → an explicit re-commit error
+    instead of being skipped silently forever;
+  * matching copies → zero errors, and `--all` discovery finds exactly
+    the BENCH_*.json names committed at HEAD.
+
+All tests run against throwaway git repos so HEAD is controlled.
+"""
+
+import json
+import os
+import subprocess
+
+import pytest
+
+from benchmarks import check_tracked
+
+
+def _git(repo, *args):
+    out = subprocess.run(["git", *args], cwd=repo, capture_output=True,
+                         text=True)
+    assert out.returncode == 0, out.stderr
+    return out.stdout
+
+
+@pytest.fixture()
+def repo(tmp_path):
+    """A throwaway git repo with one committed BENCH artifact."""
+    _git(tmp_path, "init", "-q")
+    _git(tmp_path, "config", "user.email", "t@t")
+    _git(tmp_path, "config", "user.name", "t")
+    (tmp_path / "BENCH_x.json").write_text(
+        json.dumps({"bit_identical": True, "devices": 4,
+                    "timing_us": 12.5}))
+    _git(tmp_path, "add", "BENCH_x.json")
+    _git(tmp_path, "commit", "-qm", "artifact")
+    os.makedirs(tmp_path / "results" / "bench")
+    return str(tmp_path)
+
+
+def _fresh(repo_root, name, obj):
+    p = os.path.join(repo_root, "results", "bench", name)
+    with open(p, "w") as f:
+        if isinstance(obj, str):
+            f.write(obj)
+        else:
+            json.dump(obj, f)
+
+
+def test_all_match_no_errors(repo):
+    _fresh(repo, "BENCH_x.json",
+           {"bit_identical": True, "devices": 4, "timing_us": 99.0})
+    assert check_tracked.check(["BENCH_x.json"], repo) == []
+
+
+def test_missing_fresh_counterpart_is_actionable(repo):
+    errs = check_tracked.check(["BENCH_x.json"], repo)
+    assert len(errs) == 1
+    assert "no fresh results/bench copy" in errs[0]
+    assert "re-run" in errs[0]          # names the recovery action
+
+
+def test_corrupt_fresh_copy_is_actionable_not_a_traceback(repo):
+    _fresh(repo, "BENCH_x.json", '{"bit_identical": tru')   # mid-write
+    errs = check_tracked.check(["BENCH_x.json"], repo)
+    assert len(errs) == 1
+    assert "unreadable" in errs[0] and "re-run" in errs[0]
+
+
+def test_field_added_but_not_recommitted(repo):
+    """The reverse hole: the bench emits a new contract field the
+    committed baseline predates — must demand a re-commit, not skip."""
+    _fresh(repo, "BENCH_x.json",
+           {"bit_identical": True, "devices": 4,
+            "mesh_shape": [2, 2]})
+    errs = check_tracked.check(["BENCH_x.json"], repo)
+    assert len(errs) == 1
+    assert "'mesh_shape'" in errs[0]
+    assert "missing from the committed copy" in errs[0]
+    assert "commit" in errs[0]
+
+
+def test_contract_mismatch_and_vanished_field(repo):
+    _fresh(repo, "BENCH_x.json", {"bit_identical": False, "devices": 4})
+    errs = check_tracked.check(["BENCH_x.json"], repo)
+    assert any("tracked=True fresh=False" in e for e in errs)
+    # a tracked contract field the fresh run stopped emitting
+    _fresh(repo, "BENCH_x.json", {"bit_identical": True})
+    errs = check_tracked.check(["BENCH_x.json"], repo)
+    assert any("'devices' vanished" in e for e in errs)
+
+
+def test_not_committed_at_head(repo):
+    errs = check_tracked.check(["BENCH_nonexistent.json"], repo)
+    assert len(errs) == 1
+    assert "not committed at HEAD" in errs[0]
+
+
+def test_all_discovery_finds_committed_artifacts(repo, tmp_path):
+    (tmp_path / "BENCH_y.json").write_text(json.dumps({"devices": 1}))
+    (tmp_path / "NOT_BENCH.json").write_text("{}")
+    _git(repo, "add", "BENCH_y.json", "NOT_BENCH.json")
+    _git(repo, "commit", "-qm", "more")
+    assert check_tracked.committed_artifacts(repo) == \
+        ["BENCH_x.json", "BENCH_y.json"]
+
+
+def test_all_discovery_outside_git_checkout_is_actionable(tmp_path):
+    bare = tmp_path / "notarepo"
+    bare.mkdir()
+    with pytest.raises(SystemExit) as exc:
+        check_tracked.committed_artifacts(str(bare))
+    assert "git" in str(exc.value)
+
+
+def test_main_all_exits_nonzero_with_clear_message(repo, capsys):
+    """End-to-end `--all`: a committed artifact with no fresh counterpart
+    fails the run with the mismatch message on stdout — the CI surface."""
+    with pytest.raises(SystemExit) as exc:
+        check_tracked.main(["--all"], repo)
+    assert exc.value.code == 1
+    out = capsys.readouterr().out
+    assert "TRACKED-ARTIFACT MISMATCH" in out
+    assert "BENCH_x.json" in out and "no fresh" in out
+
+
+def test_main_all_passes_when_everything_matches(repo, capsys):
+    _fresh(repo, "BENCH_x.json", {"bit_identical": True, "devices": 4})
+    check_tracked.main(["--all"], repo)
+    out = capsys.readouterr().out
+    assert "match the fresh run" in out

@@ -507,6 +507,46 @@ def test_load_score_health_penalty(lanes, busy, q, mean, faults, level):
     assert load_score(dead) == float("inf")
 
 
+@settings(max_examples=40, deadline=None)
+@given(lanes=st.integers(1, 64), busy=st.integers(0, 64),
+       q=st.integers(0, 128),
+       mean=st.sampled_from([0.0, -3.5, float("nan"),
+                             float("inf"), float("-inf")]))
+def test_eta_and_score_cold_engine_edges(lanes, busy, q, mean):
+    """Regression: a cold engine (retired_total == 0, service EWMA still
+    empty — serialized as 0 / NaN / inf by external coordinators) must
+    yield a finite ETA ≥ 1 and a finite non-negative score.  Pre-fix,
+    mean_service_steps=0 collapsed the score to 0 regardless of queue
+    depth, so a cold engine with a 100-deep queue spuriously beat every
+    warmed healthy engine; NaN poisoned both estimators outright."""
+    import math
+    busy = min(busy, lanes)
+    cold = EngineLoad(lanes, busy, q, mean, 0, None)
+    eta = estimate_eta_steps(cold)
+    assert math.isfinite(eta) and eta >= 1.0
+    score = load_score(cold)
+    assert math.isfinite(score) and score >= 0.0
+    if busy or q:
+        # outstanding work still counts: the cold engine must not tie a
+        # warmed, completely idle engine (score 0) in a least-loaded pick
+        warmed_idle = EngineLoad(lanes, 0, 0, 20.0, 100, None)
+        assert load_score(warmed_idle) == 0.0
+        assert score > load_score(warmed_idle)
+
+
+def test_cold_engine_does_not_beat_warmed_busy_engine():
+    """The routing comparison the bug corrupted, pinned directly: a cold
+    engine drowning in queued work must score WORSE than a warmed healthy
+    engine with a couple of free lanes — not 0 or NaN."""
+    cold_drowning = EngineLoad(8, 8, 100, 0.0, 0, None)
+    warmed_light = EngineLoad(8, 6, 0, 20.0, 50, None)
+    assert load_score(cold_drowning) > load_score(warmed_light) > 0
+    # and the admission gate sees a usable wait bound from both
+    for load in (cold_drowning, warmed_light):
+        eta = estimate_eta_steps(load)
+        assert eta == eta and 1.0 <= eta < float("inf")
+
+
 @settings(max_examples=4, deadline=None)
 @given(seed=st.integers(0, 2**16), kill=st.integers(0, 1),
        kchunk=st.integers(1, 5), rate=st.floats(0.0, 0.15),

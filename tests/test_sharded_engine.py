@@ -266,6 +266,58 @@ def test_resolve_backend_vmem_check_is_per_device():
                                trace_steps=4, local_batch=64) == "reference"
 
 
+def test_speculation_discarded_on_chunk_length_retune():
+    """Regression: a speculative chunk dispatched at chunk length L must
+    be DISCARDED (spec_wasted) when the adaptive controller's chunk
+    length moves before the commit — e.g. a tier/coordinator feeding the
+    controller an out-of-band observation between engine steps.  With
+    the old guard (tile-object identity only) the stale-length chunk was
+    committed as if it were the requested one: the lanes silently
+    advanced by the WRONG number of window steps for that dispatch."""
+    from repro.serve.telemetry import AdaptiveDispatchConfig, ChunkSummary
+    rng = np.random.default_rng(2)
+    cfg = dataclasses.replace(SNN_CONFIG, layer_sizes=(16, 10),
+                              num_steps=24)
+    params_q = small_net(rng, cfg.layer_sizes)
+    n_lanes = max(1, 8 // len(jax.devices())) * len(jax.devices())
+    imgs = rng.integers(0, 256, (n_lanes, 16), dtype=np.uint8)
+    adaptive = AdaptiveDispatchConfig(adaptive=True, min_chunk_steps=2,
+                                      grow_patience=10_000)
+    eng = ShardedSNNStreamEngine(
+        params_q, cfg, lanes_per_device=n_lanes // len(jax.devices()),
+        chunk_steps=4, patience=10_000, seed=7, backend="reference",
+        overlap=True, adaptive=adaptive)
+    for im in imgs:
+        eng.submit(im)
+    eng.step()                       # commit chunk 1, speculate chunk 2
+    assert eng._spec is not None and eng._spec_steps == 4
+    # external retune mid-speculation: a heavy-retirement observation
+    # shrinks the controller's chunk choice from 4 to 3
+    eng.controller.observe(ChunkSummary(
+        density_in=0.2, layer_densities=(0.2,), executed_adds=0,
+        tiles_skipped=0, lanes_retired=n_lanes, lanes_active=n_lanes,
+        active_lane_steps=n_lanes * 4))
+    assert eng.controller.chunk_steps == 3
+    before = dict(eng.stats)
+    steps_before = int(np.asarray(eng.lanes.steps).max())
+    eng.step()
+    # the stale 4-step speculation was discarded, not committed
+    assert eng.stats["spec_wasted"] == before["spec_wasted"] + 1
+    assert eng.stats["spec_used"] == before["spec_used"]
+    # and the committed chunk ran at the retuned length (3 steps)
+    assert int(np.asarray(eng.lanes.steps).max()) == steps_before + 3
+    # the engine still finishes every request correctly
+    res = eng.run()
+    assert set(res) == set(range(n_lanes))
+    for rid in range(n_lanes):
+        out = snn.snn_apply_int(
+            params_q, jnp.asarray(imgs[rid][None]),
+            prng.seed_state(7 + rid, (1, cfg.n_in)), cfg,
+            backend="reference")
+        assert res[rid].pred == int(np.asarray(out["pred"])[0])
+        assert res[rid].steps == cfg.num_steps
+
+
 def test_speculation_survives_external_compaction():
     """Regression: a speculative chunk dispatched inside step() must be
     discarded when a LATER _admit_and_compact (e.g. run(max_chunks=1)'s
