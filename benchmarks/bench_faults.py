@@ -19,7 +19,12 @@ Drives ``serve.SNNServingTier`` / ``serve.SNNStreamEngine`` under seeded
   * **never-silent accounting** — under a chaos plan mixing transient
     dispatch faults, a poison request, and a state-losing device loss,
     ``results ∪ shed ∪ faulted`` partitions the submitted ids exactly,
-    and a replay of the same (plan, schedule) reproduces every record.
+    and a replay of the same (plan, schedule) reproduces every record,
+  * **process-level failover** — a real subprocess worker is killed
+    mid-window and the coordinator crashes mid-run; ledger recovery plus
+    wire-checkpoint evacuation finishes the workload bit-identical to
+    the no-fault engine, and replaying the whole kill+crash+recover
+    schedule reproduces every record exactly.
 
 Saves results/bench/BENCH_faults.json (contract fields diffed against
 the committed copy by benchmarks.check_tracked).  REPRO_BENCH_TINY=1
@@ -30,6 +35,7 @@ from __future__ import annotations
 
 import dataclasses
 import os
+import tempfile
 import time
 
 import jax.numpy as jnp
@@ -37,8 +43,9 @@ import numpy as np
 
 from repro.configs.snn_mnist import SNN_CONFIG, SNN_SERVING_TIER, \
     make_serving_tier
-from repro.serve import (FaultEvent, FaultInjector, FaultPlan,
-                         FaultToleranceConfig, SNNStreamEngine)
+from repro.serve import (ClusterCoordinator, CoordinatorCrash, FaultEvent,
+                         FaultInjector, FaultPlan, FaultToleranceConfig,
+                         SNNStreamEngine, read_ledger)
 
 from .common import emit, save_json
 
@@ -197,6 +204,67 @@ def run():
          f"replay_deterministic={replay_deterministic} "
          f"partition={no_silent_loss}")
 
+    # --- process failover: worker kill + coordinator crash + recover ----
+    # Small subprocess cluster (spawn cost, not compute, dominates) driven
+    # through the full contract schedule: worker 1 is SIGKILLed mid-window
+    # at round 2, the coordinator dies at round 4, and a fresh coordinator
+    # rebuilds accounting from the replicated JSONL ledgers and finishes
+    # the workload.  The whole sequence runs twice for replay determinism.
+    proc_plan = "seed=0,worker_kill=1@2,coordinator_kill=4"
+    proc_imgs = imgs[:2 * lanes + 2]
+    ckw = dict(num_workers=2, lanes_per_worker=lanes, chunk_steps=chunk,
+               patience=10_000, seed=0, backend="reference",
+               fault_plan=proc_plan)
+    peng = SNNStreamEngine(params_q, cfg, batch_size=lanes,
+                           chunk_steps=chunk, patience=10_000, seed=0,
+                           backend="reference")
+    for i, im in enumerate(proc_imgs):
+        peng.submit(im, request_id=i)
+    proc_base = {r: _sig(v) for r, v in peng.run().items()}
+
+    def process_failover_once():
+        with tempfile.TemporaryDirectory() as d:
+            co = ClusterCoordinator(params_q, cfg, ledger_dir=d, **ckw)
+            try:
+                for i, im in enumerate(proc_imgs):
+                    co.submit(im, request_id=i)
+                try:
+                    co.run()
+                    crashed = False
+                except CoordinatorCrash:
+                    crashed = True
+            finally:
+                co.close()
+            submits = {r["rid"] for r in read_ledger(
+                os.path.join(d, "coordinator.jsonl")) if r["kind"] == "submit"}
+            t0 = time.perf_counter()
+            with ClusterCoordinator.recover(params_q, cfg, ledger_dir=d,
+                                            **ckw) as co2:
+                res = co2.run()
+                dt = time.perf_counter() - t0
+                return ({r: _sig(v) for r, v in res.items()},
+                        dict(co2.shed), dict(co2.faulted), dict(co2.stats),
+                        crashed, submits == set(range(len(proc_imgs))),
+                        co2.round, dt)
+
+    p1 = process_failover_once()
+    p2 = process_failover_once()
+    process_partition = (set(p1[0]) | set(p1[1]) | set(p1[2])
+                         == set(range(len(proc_imgs)))
+                         and not (set(p1[0]) & set(p1[2])))
+    process_failover_bit_identical = (
+        p1[4] and process_partition and not p1[1] and not p1[2]
+        and p1[0] == proc_base)          # lossless schedule, every sig equal
+    ledger_survives_coordinator_restart = p1[4] and p1[5]
+    process_replay_deterministic = p1[:7] == p2[:7]   # all but wall time
+    emit("faults.process", p1[7] * 1e6 / len(proc_imgs),
+         f"recovery_rounds={p1[6]} "
+         f"workers_failed={p1[3]['workers_failed']} "
+         f"respawned={p1[3]['respawned']} evacuated={p1[3]['evacuated']} "
+         f"bit_identical={process_failover_bit_identical} "
+         f"ledger_recovered={ledger_survives_coordinator_restart} "
+         f"replay_deterministic={process_replay_deterministic}")
+
     save_json({
         "layer_sizes": list(sizes),
         "num_steps": T,
@@ -221,14 +289,29 @@ def run():
             "quarantined": first[3]["quarantined"],
             "engines_failed": first[3]["engines_failed"],
         },
+        "process": {
+            "recovery_rounds": p1[6],
+            "recovery_us_per_img": p1[7] * 1e6 / len(proc_imgs),
+            "workers_failed": p1[3]["workers_failed"],
+            "respawned": p1[3]["respawned"],
+            "evacuated": p1[3]["evacuated"],
+            "requeued": p1[3]["requeued"],
+        },
         "evacuation_bit_identical": evacuation_bit_identical,
         "ladder_bit_identical": ladder_bit_identical,
         "ladder_repromoted": ladder_repromoted,
         "replay_deterministic": replay_deterministic,
         "no_silent_loss": no_silent_loss,
+        "process_failover_bit_identical": process_failover_bit_identical,
+        "ledger_survives_coordinator_restart":
+            ledger_survives_coordinator_restart,
+        "process_replay_deterministic": process_replay_deterministic,
     }, "bench", "BENCH_faults.json")
     assert evacuation_bit_identical and ladder_bit_identical
     assert ladder_repromoted and replay_deterministic and no_silent_loss
+    assert process_failover_bit_identical
+    assert ledger_survives_coordinator_restart
+    assert process_replay_deterministic
     return {"failover_rounds": rounds, "overhead": overhead}
 
 

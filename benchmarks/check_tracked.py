@@ -73,6 +73,9 @@ CONTRACT_FIELDS = [
     "ladder_repromoted",
     "replay_deterministic",
     "no_silent_loss",
+    "process_failover_bit_identical",
+    "ledger_survives_coordinator_restart",
+    "process_replay_deterministic",
     # model-axis sharding contract (BENCH_model_sharded.json)
     "model_sharded_bit_identical",
     "telemetry_bit_identical_model",

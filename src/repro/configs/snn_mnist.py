@@ -116,6 +116,55 @@ class SNNServingTierConfig:
     # uses FaultToleranceConfig defaults.
     fault_plan: "FaultPlan | str | None" = None
     fault_cfg: "FaultToleranceConfig | None" = None
+    # Recovery knobs, exposed individually so deployments tune them
+    # without constructing a FaultToleranceConfig by hand.  ``None``
+    # keeps the FaultToleranceConfig default; any non-None value is
+    # folded into the config built by :meth:`resolve_fault_cfg` (which
+    # also runs the validation: every count >= 1, retries/respawns >= 0,
+    # heartbeat_deadline_s > heartbeat_interval_s > 0).  Setting any of
+    # these alongside an explicit ``fault_cfg`` is a configuration
+    # conflict and raises — one source of truth per deployment.
+    watchdog_chunks: int | None = None
+    max_retries: int | None = None
+    backoff_base: int | None = None
+    backoff_max: int | None = None
+    demote_after: int | None = None
+    promote_after: int | None = None
+    fail_after: int | None = None
+    quarantine_after: int | None = None
+    heartbeat_interval_s: float | None = None
+    heartbeat_deadline_s: float | None = None
+    max_respawns: int | None = None
+
+    _KNOB_FIELDS = ("watchdog_chunks", "max_retries", "backoff_base",
+                    "backoff_max", "demote_after", "promote_after",
+                    "fail_after", "quarantine_after",
+                    "heartbeat_interval_s", "heartbeat_deadline_s",
+                    "max_respawns")
+
+    def resolve_fault_cfg(self):
+        """The effective FaultToleranceConfig: ``fault_cfg`` verbatim, or
+        one built from the individual knob overrides (validated by the
+        FaultToleranceConfig constructor)."""
+        overrides = {k: getattr(self, k) for k in self._KNOB_FIELDS
+                     if getattr(self, k) is not None}
+        if self.fault_cfg is not None:
+            if overrides:
+                raise ValueError(
+                    f"SNNServingTierConfig sets both fault_cfg and the "
+                    f"individual recovery knobs {sorted(overrides)} — "
+                    f"pick one source of truth (put the values in the "
+                    f"fault_cfg, or drop it and use the knobs)")
+            return self.fault_cfg
+        if not overrides:
+            return None
+        from ..serve.faults import FaultToleranceConfig
+        return FaultToleranceConfig(**overrides)
+
+    def __post_init__(self):
+        # eager validation: a bad knob combination fails at config
+        # construction, not at first tier/cluster build
+        self.resolve_fault_cfg()
 
 
 SNN_SERVING_TIER = SNNServingTierConfig()
@@ -138,7 +187,56 @@ def make_serving_tier(params_q: dict, snn_cfg: SNNConfig = SNN_CONFIG,
         sharded=knobs.sharded,
         devices_per_engine=knobs.devices_per_engine,
         adaptive=knobs.adaptive, fault_plan=knobs.fault_plan,
-        fault_cfg=knobs.fault_cfg, **tier_kw)
+        fault_cfg=knobs.resolve_fault_cfg(), **tier_kw)
+
+
+# Process-level cluster knobs (serve.ClusterCoordinator): the failover
+# tier above the in-process serving tier — ``num_workers`` engine
+# subprocesses supervised over heartbeat RPC, lane checkpoints shipped
+# every round, accounting write-ahead to ``ledger_dir``.  The recovery
+# policy (heartbeat interval/deadline, respawn budget) comes from the
+# tier knobs' resolve_fault_cfg() via make_cluster.
+@dataclass(frozen=True)
+class SNNClusterConfig:
+    num_workers: int = 2
+    lanes_per_worker: int = 4
+    chunk_steps: int = 4
+    backend: str | None = None
+    fault_plan: "FaultPlan | str | None" = None
+    ledger_dir: str | None = None      # required at build time
+
+    def __post_init__(self):
+        if self.num_workers < 1:
+            raise ValueError(
+                f"num_workers must be >= 1, got {self.num_workers}")
+        if self.lanes_per_worker < 1:
+            raise ValueError(
+                f"lanes_per_worker must be >= 1, got "
+                f"{self.lanes_per_worker}")
+
+
+SNN_CLUSTER = SNNClusterConfig()
+
+
+def make_cluster(params_q: dict, snn_cfg: SNNConfig = SNN_CONFIG,
+                 knobs: SNNClusterConfig = SNN_CLUSTER,
+                 tier_knobs: SNNServingTierConfig = SNN_SERVING_TIER,
+                 **cluster_kw):
+    """Build a ``serve.ClusterCoordinator`` from the knobs.
+
+    The recovery policy threads through ``tier_knobs.resolve_fault_cfg()``
+    — the same validated source the in-process tier uses, so heartbeat /
+    respawn / watchdog settings are configured once for both paths.
+    """
+    from ..serve import ClusterCoordinator
+    cluster_kw.setdefault("ledger_dir", knobs.ledger_dir)
+    return ClusterCoordinator(
+        params_q, snn_cfg, num_workers=knobs.num_workers,
+        lanes_per_worker=knobs.lanes_per_worker,
+        chunk_steps=knobs.chunk_steps, backend=knobs.backend,
+        fault_plan=knobs.fault_plan,
+        fault_cfg=tier_knobs.resolve_fault_cfg(),
+        **cluster_kw)
 
 
 def make_stream_mesh(knobs: SNNStreamMeshConfig = SNN_STREAM_MESH):

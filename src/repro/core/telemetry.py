@@ -39,6 +39,8 @@ __all__ = [
     "EngineLoad",
     "MatmulTelemetry",
     "DEFAULT_SPIKE_DENSITY_THRESHOLD",
+    "engine_load_from_wire",
+    "engine_load_to_wire",
     "estimate_eta_steps",
     "load_score",
     "resolve_density_threshold",
@@ -168,6 +170,23 @@ class EngineLoad(NamedTuple):
     def occupancy(self) -> float:
         """Fraction of lane slots currently serving a request."""
         return self.lanes_busy / max(1, self.lanes_total)
+
+
+def engine_load_to_wire(load: EngineLoad) -> dict:
+    """JSON-safe dict of one load record (the cluster RPC surface).
+
+    Every field is already a JSON scalar (ints, floats, bools, None), so
+    ``_asdict`` is the whole codec — kept as a named function so the RPC
+    layer depends on the *contract* (roundtrips through
+    :func:`engine_load_from_wire` reproduce the record exactly and the
+    routing scores computed from it) rather than a NamedTuple detail.
+    """
+    return dict(load._asdict())
+
+
+def engine_load_from_wire(d: dict) -> EngineLoad:
+    """Inverse of :func:`engine_load_to_wire` (exact roundtrip)."""
+    return EngineLoad(**d)
 
 
 def _effective_service_steps(load: EngineLoad) -> float:

@@ -10,13 +10,18 @@ Two request shapes share one early-exit mechanism:
     queued images into the freed batch-tile slots.
 """
 
+from .cluster import ClusterCoordinator, CoordinatorCrash
 from .early_exit import (StabilityGateState, eos_gate, stability_gate,
                          stability_init, stability_specs, stability_step)
 from .engine import (ServeState, generate, make_decode_step, make_prefill,
                      pad_cache_to)
 from .faults import (DeviceLostFault, DispatchFault, EngineFailure,
                      EngineHealthState, FaultEvent, FaultInjector, FaultPlan,
-                     FaultRecord, FaultToleranceConfig, PoisonDispatchError)
+                     FaultPlanSpecError, FaultRecord, FaultToleranceConfig,
+                     PoisonDispatchError)
+from .ledger import Ledger, LedgerCorruptError, read_ledger, recover_accounting
+from .wire import (WIRE_CODEC_VERSION, WireError, lane_from_wire,
+                   lane_to_wire)
 from .rollout import RolloutEvent, RolloutInProgressError, WeightBank
 from .router import ShedRecord, SNNServingTier
 from .snn_engine import (RequestResult, ShardedSNNStreamEngine,
@@ -34,4 +39,8 @@ __all__ = ["ServeState", "generate", "make_decode_step", "make_prefill",
            "TelemetryController", "summarize_chunk",
            "FaultPlan", "FaultEvent", "FaultInjector", "FaultRecord",
            "FaultToleranceConfig", "EngineHealthState", "EngineFailure",
-           "DispatchFault", "DeviceLostFault", "PoisonDispatchError"]
+           "DispatchFault", "DeviceLostFault", "PoisonDispatchError",
+           "FaultPlanSpecError", "ClusterCoordinator", "CoordinatorCrash",
+           "Ledger", "LedgerCorruptError", "read_ledger",
+           "recover_accounting", "WIRE_CODEC_VERSION", "WireError",
+           "lane_to_wire", "lane_from_wire"]

@@ -46,12 +46,21 @@ import numpy as np
 
 __all__ = [
     "DispatchFault", "DeviceLostFault", "PoisonDispatchError",
-    "EngineFailure", "FaultEvent", "FaultPlan", "FaultInjector",
-    "FaultToleranceConfig", "EngineHealthState", "FaultRecord",
-    "telemetry_ok", "injector_from_env", "REPRO_FAULT_PLAN_ENV",
+    "EngineFailure", "FaultEvent", "FaultPlan", "FaultPlanSpecError",
+    "FaultInjector", "FaultToleranceConfig", "EngineHealthState",
+    "FaultRecord", "telemetry_ok", "injector_from_env",
+    "REPRO_FAULT_PLAN_ENV", "FAULT_PLAN_GRAMMAR",
 ]
 
 REPRO_FAULT_PLAN_ENV = "REPRO_FAULT_PLAN"
+
+# The accepted REPRO_FAULT_PLAN grammar — quoted verbatim by every spec
+# rejection so a typo'd key fails with the fix in the message.
+FAULT_PLAN_GRAMMAR = (
+    "seed=<int> | dispatch=<rate in [0,1]> | telemetry=<rate in [0,1]> | "
+    "worker_kill=<worker>@<round> | worker_hang=<worker>@<round> | "
+    "coordinator_kill=<round>   (comma-separated; worker_kill/worker_hang/"
+    "coordinator_kill may repeat)")
 
 
 # ---- typed faults ---------------------------------------------------------
@@ -106,6 +115,21 @@ class EngineFailure(FaultError):
 
 # ---- the plan -------------------------------------------------------------
 
+class FaultPlanSpecError(ValueError):
+    """A malformed ``REPRO_FAULT_PLAN``-style spec, rejected loudly.
+
+    Names the offending key/value and quotes the accepted grammar — a
+    typo (``dipsatch=0.03``) must fail the run, never silently arm
+    nothing while CI believes chaos is on.
+    """
+
+    def __init__(self, key: str, detail: str):
+        self.key = key
+        super().__init__(
+            f"bad {REPRO_FAULT_PLAN_ENV} entry {key!r}: {detail} — "
+            f"accepted grammar: {FAULT_PLAN_GRAMMAR}")
+
+
 @dataclass(frozen=True)
 class FaultEvent:
     """One scheduled fault.  ``chunk`` coordinates are engine-local
@@ -124,6 +148,18 @@ class FaultEvent:
     ``backends`` restricts a ``dispatch`` fault to specific chunk
     backends — the degradation-ladder tests use it to fail the fused
     launch persistently while the demoted rungs stay clean.
+
+    Process-level kinds (serve.cluster — coordinates are the
+    coordinator's **global scheduling round**, which never resets across
+    worker respawns, so a windowed kill fires in exactly one
+    incarnation): ``worker_kill`` (the worker process exits hard before
+    running the round's chunk; ``engine`` is the worker slot and
+    ``state_lost`` additionally discards the coordinator's shipped
+    checkpoint — simulating correlated loss of host and replica),
+    ``worker_hang`` (the worker stops responding — the heartbeat-drop
+    fault; the coordinator's deadline detects it), ``coordinator_kill``
+    (the coordinator itself dies at the top of the round — recovery must
+    come from the write-ahead ledger).
     """
 
     kind: str                        # dispatch|hang|device_loss|telemetry|poison
@@ -170,21 +206,73 @@ class FaultPlan:
     # -- construction ------------------------------------------------------
     @classmethod
     def from_spec(cls, spec: str) -> "FaultPlan":
-        """Parse the compact ``k=v[,k=v...]`` env spec (rates + seed)."""
-        kw: dict = {"seed": 0, "dispatch_rate": 0.0, "telemetry_rate": 0.0}
-        names = {"seed": "seed", "dispatch": "dispatch_rate",
+        """Parse the compact ``k=v[,k=v...]`` env spec.
+
+        Strict: unknown keys, malformed values and out-of-range rates
+        all raise :class:`FaultPlanSpecError` quoting the accepted
+        grammar (:data:`FAULT_PLAN_GRAMMAR`).  Beyond the seeded rates,
+        the spec can schedule the process-level faults the cluster
+        chaos lane drives: ``worker_kill=1@3`` kills worker 1 at global
+        round 3, ``worker_hang=0@2`` drops worker 0's heartbeat from
+        round 2, ``coordinator_kill=5`` crashes the coordinator at the
+        top of round 5.
+        """
+        rates = {"seed": "seed", "dispatch": "dispatch_rate",
                  "telemetry": "telemetry_rate"}
+        kw: dict = {"seed": 0, "dispatch_rate": 0.0, "telemetry_rate": 0.0}
+        events: list[FaultEvent] = []
         for part in spec.split(","):
             part = part.strip()
             if not part:
                 continue
-            k, _, v = part.partition("=")
-            if k not in names:
-                raise ValueError(
-                    f"unknown {REPRO_FAULT_PLAN_ENV} key {k!r}: "
-                    f"expected {sorted(names)}")
-            kw[names[k]] = int(v) if k == "seed" else float(v)
-        return cls(seed=kw.pop("seed"), **kw)
+            k, eq, v = part.partition("=")
+            if not eq:
+                raise FaultPlanSpecError(part, "missing '=<value>'")
+            if k in rates:
+                try:
+                    val = int(v) if k == "seed" else float(v)
+                except ValueError:
+                    raise FaultPlanSpecError(
+                        part, f"value {v!r} is not "
+                        f"{'an integer' if k == 'seed' else 'a number'}"
+                    ) from None
+                if k != "seed" and not 0.0 <= val <= 1.0:
+                    raise FaultPlanSpecError(
+                        part, f"rate {val} outside [0, 1]")
+                kw[rates[k]] = val
+            elif k in ("worker_kill", "worker_hang"):
+                w, at, r = v.partition("@")
+                try:
+                    if not at:
+                        raise ValueError
+                    worker, rnd = int(w), int(r)
+                except ValueError:
+                    raise FaultPlanSpecError(
+                        part, f"value {v!r} is not '<worker>@<round>' "
+                        f"(two integers)") from None
+                if worker < 0 or rnd < 0:
+                    raise FaultPlanSpecError(
+                        part, "worker and round must be >= 0")
+                events.append(FaultEvent(
+                    kind=k, engine=worker, first_chunk=rnd,
+                    last_chunk=rnd))
+            elif k == "coordinator_kill":
+                try:
+                    rnd = int(v)
+                except ValueError:
+                    raise FaultPlanSpecError(
+                        part, f"value {v!r} is not an integer round"
+                    ) from None
+                if rnd < 0:
+                    raise FaultPlanSpecError(part, "round must be >= 0")
+                events.append(FaultEvent(
+                    kind=k, first_chunk=rnd, last_chunk=rnd))
+            else:
+                known = sorted(rates) + ["worker_kill", "worker_hang",
+                                         "coordinator_kill"]
+                raise FaultPlanSpecError(
+                    part, f"unknown key {k!r} (known keys: {known})")
+        return cls(tuple(events), seed=kw.pop("seed"), **kw)
 
     @classmethod
     def from_env(cls) -> "FaultPlan | None":
@@ -230,6 +318,36 @@ class FaultPlan:
         if self.telemetry_rate > 0.0:
             return self._roll(engine, seq, 1) < self.telemetry_rate
         return False
+
+    # -- process-level queries (serve.cluster; coords = global round) ------
+    def worker_kill(self, worker: int, rnd: int) -> "FaultEvent | None":
+        for ev in self.events:
+            if ev.kind == "worker_kill" and ev._active(worker, rnd):
+                return ev
+        return None
+
+    def worker_hang(self, worker: int, rnd: int) -> bool:
+        return any(ev.kind == "worker_hang" and ev._active(worker, rnd)
+                   for ev in self.events)
+
+    def coordinator_kill(self, rnd: int) -> bool:
+        # engine is irrelevant for the coordinator's own death; _active's
+        # engine filter is bypassed by matching the event's own slot
+        return any(ev.kind == "coordinator_kill"
+                   and ev._active(ev.engine if ev.engine is not None
+                                  else 0, rnd)
+                   for ev in self.events)
+
+    def engine_relevant(self, engine: int) -> bool:
+        """Whether a *worker-local* engine injector would ever fire —
+        rates, or any non-process event that can reach ``engine``."""
+        if self.dispatch_rate > 0.0 or self.telemetry_rate > 0.0:
+            return True
+        return any(
+            ev.kind in ("dispatch", "hang", "device_loss", "telemetry",
+                        "poison")
+            and (ev.engine is None or ev.engine == engine)
+            for ev in self.events)
 
 
 class FaultInjector:
@@ -314,6 +432,21 @@ class FaultToleranceConfig:
     immediate retries all faulted, the engine sits out
     ``min(backoff_base << burst, backoff_max)`` rounds before retrying —
     replayable, and bounded so a recovering engine rejoins quickly.
+
+    The heartbeat knobs drive the *process-level* watchdog
+    (serve.cluster): the coordinator pings idle workers every
+    ``heartbeat_interval_s`` and declares a worker hung when any RPC
+    frame takes longer than ``heartbeat_deadline_s`` — wall-clock, not
+    rounds, because a hung process produces no rounds to count.  These
+    are deliberately generous defaults (detection latency only — which
+    round a hang is *declared* in stays deterministic, because a hung
+    worker stops responding at a plan-scheduled round and never
+    responds again).  ``max_respawns`` bounds restart-and-readopt per
+    worker slot.
+
+    Every knob is validated at construction (the config travels over
+    RPC and through ``SNNServingTierConfig`` — a bad value must fail
+    where it was written, not rounds later inside a recovery path).
     """
 
     max_retries: int = 2        # immediate same-round retries per dispatch
@@ -324,6 +457,34 @@ class FaultToleranceConfig:
     promote_after: int = 4      # clean chunks ⇒ probe one rung back up
     watchdog_chunks: int = 4    # stalled chunks ⇒ declare the engine hung
     quarantine_after: int = 3   # per-request faults ⇒ quarantine (tier)
+    heartbeat_interval_s: float = 0.05  # coordinator→worker idle ping period
+    heartbeat_deadline_s: float = 10.0  # RPC deadline ⇒ worker declared hung
+    max_respawns: int = 1       # restart-and-readopt budget per worker slot
+
+    def __post_init__(self):
+        for name in ("fail_after", "backoff_base", "backoff_max",
+                     "demote_after", "promote_after", "watchdog_chunks",
+                     "quarantine_after"):
+            if getattr(self, name) < 1:
+                raise ValueError(
+                    f"FaultToleranceConfig.{name} must be >= 1, got "
+                    f"{getattr(self, name)}")
+        for name in ("max_retries", "max_respawns"):
+            if getattr(self, name) < 0:
+                raise ValueError(
+                    f"FaultToleranceConfig.{name} must be >= 0, got "
+                    f"{getattr(self, name)}")
+        if not self.heartbeat_interval_s > 0:
+            raise ValueError(
+                f"FaultToleranceConfig.heartbeat_interval_s must be > 0, "
+                f"got {self.heartbeat_interval_s}")
+        if not self.heartbeat_deadline_s > self.heartbeat_interval_s:
+            raise ValueError(
+                f"FaultToleranceConfig.heartbeat_deadline_s "
+                f"({self.heartbeat_deadline_s}) must exceed "
+                f"heartbeat_interval_s ({self.heartbeat_interval_s}) — a "
+                f"deadline shorter than the ping period declares every "
+                f"healthy worker hung")
 
 
 @dataclass

@@ -1,0 +1,141 @@
+"""Write-ahead replicated accounting ledger for the cluster coordinator.
+
+PR 7's never-silent contract — ``results ∪ shed ∪ faulted`` exactly
+partitions the submitted request ids — lived in one Python process; the
+coordinator dying took the whole ledger (and the partition proof) with
+it.  This module makes the accounting crash-proof:
+
+* every host appends one JSON line per accounting event to its own
+  **append-only JSONL file** (the coordinator logs ``submit``/``shed``/
+  ``fault``/``result`` events, every worker *replicates* its own
+  ``result`` lines locally before shipping them over RPC — so a result
+  computed but never acknowledged still survives a coordinator crash);
+* writes are **write-ahead**: the ``submit`` line (with the request's
+  pixels) lands on disk before the request is routed, so a restarted
+  coordinator can re-run any window that was in flight — a window is a
+  pure function of ``(seed, request_id, pixels)``, so the re-run is
+  bit-identical to the never-crashed run;
+* :func:`read_ledger` tolerates a **torn final line** (the crash arrived
+  mid-``write``): the trailing partial record is dropped, while a
+  corrupt line anywhere *else* is a real integrity failure and raises;
+* :func:`recover_accounting` folds any set of ledger files back into
+  the three maps plus the ordered outstanding-submission list, with
+  **exactly-once** semantics: the first terminal record per request id
+  wins, and a ``result`` always beats a ``fault``/``shed`` for the same
+  id (a worker may have replicated a result the coordinator never saw
+  before declaring the request lost — the computed answer is the truth).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+__all__ = ["Ledger", "read_ledger", "recover_accounting",
+           "LedgerCorruptError"]
+
+
+class LedgerCorruptError(ValueError):
+    """A ledger line that is not a torn tail failed to parse."""
+
+
+class Ledger:
+    """Append-only JSONL writer with per-record durability.
+
+    Each :meth:`append` writes one compact JSON line, flushes, and
+    fsyncs — a record either fully precedes a crash or is the single
+    torn tail the reader drops.  Append mode keeps restarts cheap: a
+    recovered coordinator reopens the same file and keeps appending.
+    """
+
+    def __init__(self, path: str):
+        self.path = path
+        d = os.path.dirname(path)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        self._f = open(path, "a", encoding="utf-8")
+
+    def append(self, record: dict) -> None:
+        self._f.write(json.dumps(record, separators=(",", ":")) + "\n")
+        self._f.flush()
+        os.fsync(self._f.fileno())
+
+    def close(self) -> None:
+        if not self._f.closed:
+            self._f.close()
+
+
+def read_ledger(path: str) -> list[dict]:
+    """Parse one JSONL ledger file, dropping a torn final line.
+
+    A crash mid-append leaves at most one partial record, and only at
+    the tail (appends are sequential and fsynced); a malformed line
+    *followed by valid lines* cannot come from a torn write and raises
+    :class:`LedgerCorruptError` instead of being skipped silently.
+    """
+    if not os.path.exists(path):
+        return []
+    with open(path, encoding="utf-8") as f:
+        lines = f.read().split("\n")
+    records: list[dict] = []
+    for i, line in enumerate(lines):
+        if not line.strip():
+            continue
+        try:
+            records.append(json.loads(line))
+        except json.JSONDecodeError as e:
+            if all(not later.strip() for later in lines[i + 1:]):
+                break  # torn tail: the crash interrupted this append
+            raise LedgerCorruptError(
+                f"{path}:{i + 1}: corrupt ledger line is not the torn "
+                f"tail ({e}) — the file was modified outside the "
+                f"append-only protocol") from e
+    return records
+
+
+def recover_accounting(paths: list[str]) -> dict:
+    """Reconstruct the accounting state from a set of ledger files.
+
+    Returns ``{"submitted": [(rid, record), ...] in submit order,
+    "results": {rid: record}, "shed": {rid: record},
+    "faulted": {rid: record}, "outstanding": [rid, ...]}``.
+
+    Exactly-once: per request id the first terminal record wins within
+    its class, and ``result`` records (from any replica) take precedence
+    over ``shed``/``fault`` — a coordinator that faulted a request whose
+    worker had already durably computed (and replicated) the answer must
+    land it in ``results``, never in both maps.  Ids submitted with no
+    terminal record anywhere are ``outstanding`` — the restarted
+    coordinator re-runs them from their write-ahead pixels.
+    """
+    submits: dict[int, dict] = {}
+    order: list[int] = []
+    results: dict[int, dict] = {}
+    shed: dict[int, dict] = {}
+    faulted: dict[int, dict] = {}
+    for path in paths:
+        for rec in read_ledger(path):
+            kind = rec.get("kind")
+            rid = rec.get("rid")
+            if kind == "submit" and rid not in submits:
+                submits[rid] = rec
+                order.append(rid)
+            elif kind == "result" and rid not in results:
+                results[rid] = rec
+            elif kind == "shed" and rid not in shed:
+                shed[rid] = rec
+            elif kind == "fault" and rid not in faulted:
+                faulted[rid] = rec
+    # results win over the other terminal classes (see docstring)
+    for rid in results:
+        shed.pop(rid, None)
+        faulted.pop(rid, None)
+    # between shed and fault, first writer wins is unknowable across
+    # files — prefer shed (an admission decision made before any fault)
+    for rid in shed:
+        faulted.pop(rid, None)
+    terminal = set(results) | set(shed) | set(faulted)
+    outstanding = [rid for rid in order if rid not in terminal]
+    return {"submitted": [(rid, submits[rid]) for rid in order],
+            "results": results, "shed": shed, "faulted": faulted,
+            "outstanding": outstanding}

@@ -67,7 +67,7 @@ property test replays random schedules against single-engine serving.
 
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import asdict, dataclass
 
 from ..core.snn import SNNConfig
 from ..core.telemetry import estimate_eta_steps, load_score
@@ -127,7 +127,8 @@ class SNNServingTier:
                  devices_per_engine: int | None = None,
                  adaptive=None,
                  fault_plan: FaultPlan | str | None = None,
-                 fault_cfg: FaultToleranceConfig | None = None):
+                 fault_cfg: FaultToleranceConfig | None = None,
+                 ledger=None):
         if num_engines < 1:
             raise ValueError(f"num_engines must be >= 1, got {num_engines}")
         if default_priority not in priority_classes:
@@ -178,6 +179,13 @@ class SNNServingTier:
                     chunk_steps=chunk_steps, patience=patience, seed=seed,
                     backend=backend, adaptive=adaptive, engine_id=i,
                     injector=_inj(i), fault_cfg=self.fault_cfg))
+        # Optional write-ahead accounting ledger (serve.ledger.Ledger):
+        # every terminal record — shed, fault, result — is appended as a
+        # JSON line the moment the tier commits to it, so a crash of the
+        # hosting process never loses the partition proof.  The cluster
+        # coordinator passes one per host; standalone tiers run without.
+        self.ledger = ledger
+        self._ledgered: set[int] = set()   # rids with a result line on disk
         self.shed: dict[int, ShedRecord] = {}
         self.faulted: dict[int, FaultRecord] = {}
         self._dead: set[int] = set()             # failed engine indices
@@ -229,6 +237,9 @@ class SNNServingTier:
             priority_level=level, deadline_steps=deadline, eta_steps=eta,
             displaced_by=displaced_by)
         self.stats[f"shed_{reason}"] += 1
+        if self.ledger is not None:
+            self.ledger.append({"kind": "shed", "rid": rid,
+                                **asdict(self.shed[rid])})
 
     def _overload_victim(self) -> int | None:
         """The queued request overload shedding would displace: lowest
@@ -326,6 +337,9 @@ class SNNServingTier:
             replay_seed=self.seed + rid, detail=detail)
         if reason == "quarantined":
             self.stats["quarantined"] += 1
+        if self.ledger is not None:
+            self.ledger.append({"kind": "fault", "rid": rid,
+                                **asdict(self.faulted[rid])})
 
     def _adopt_row(self, tgt: int, rid: int, row) -> None:
         """Re-admit one evacuated lane row onto engine ``tgt``, restoring
@@ -403,6 +417,27 @@ class SNNServingTier:
             self._assignment[rid] = tgt
             self.stats["requeued"] += 1
 
+    def _ledger_results(self, rids) -> None:
+        """Replicate finished results to the host ledger (exactly once).
+
+        A result computed but not yet acknowledged upstream must survive
+        the hosting process dying: the line lands on disk the round the
+        lane retires, before anything else consumes it.  No-op without a
+        ledger; ``_ledgered`` makes re-harvests idempotent.
+        """
+        if self.ledger is None:
+            return
+        from .wire import result_to_wire
+        for rid in rids:
+            if rid in self._ledgered:
+                continue
+            for e in self.engines:
+                if rid in e.results:
+                    self.ledger.append({"kind": "result", "rid": rid,
+                                        **result_to_wire(e.results[rid])})
+                    self._ledgered.add(rid)
+                    break
+
     # ---- drive ----------------------------------------------------------
     @property
     def pending(self) -> int:
@@ -423,6 +458,7 @@ class SNNServingTier:
                 self._handle_poison(idx, f)
             except EngineFailure as f:
                 self._handle_engine_failure(idx, f)
+        self._ledger_results(done)
         return done
 
     def run(self, max_chunks: int | None = None) -> dict[int, RequestResult]:
@@ -446,6 +482,7 @@ class SNNServingTier:
             self.step()
         for i in self._alive():
             self.engines[i].run(max_chunks=0)  # final harvest
+        self._ledger_results(list(self.results))
         return self.results
 
     @property

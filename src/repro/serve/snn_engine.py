@@ -430,7 +430,8 @@ class SNNStreamEngine:
                  adaptive: AdaptiveDispatchConfig | None = None,
                  engine_id: int = 0,
                  injector: FaultInjector | None = None,
-                 fault_cfg: FaultToleranceConfig | None = None):
+                 fault_cfg: FaultToleranceConfig | None = None,
+                 initial_weight_version: int = 0):
         if cfg.readout not in ("count", "first_spike", "membrane"):
             raise ValueError(
                 f"unknown readout {cfg.readout!r}: the streaming engine "
@@ -500,7 +501,8 @@ class SNNStreamEngine:
         self._adoptions: list[tuple[int, LaneState]] = []  # evacuated rows
         # Version-tagged weight store (serve.rollout): new admissions bind
         # bank.current; in-flight lanes keep their admission-time version.
-        self.bank = WeightBank(self._place_weights(weights))
+        self.bank = WeightBank(self._place_weights(weights),
+                               version=int(initial_weight_version))
         self.cfg = cfg
         self.batch_size = batch_size
         self.patience = patience
@@ -767,6 +769,26 @@ class SNNStreamEngine:
                          jax.tree.map(lambda a, idx=idx: a[idx].copy(), st)))
         self.lane_req = [None] * self.batch_size
         self._lane_versions = np.zeros(self.batch_size, np.int64)
+        return rows
+
+    def checkpoint_lanes(self) -> list[tuple[int, LaneState]]:
+        """Non-destructive host copy of every in-flight lane.
+
+        Same ``(request_id, row)`` contract as :meth:`snapshot_lanes`,
+        but the engine keeps running: slots stay bound and the version
+        mirror is untouched.  The cluster coordinator ships these rows
+        with every step reply so its shadow copy is always the current
+        chunk-boundary checkpoint — a worker killed before its next
+        reply resumes from here bit-exactly (the chunked==one-shot
+        invariant makes the row placement-independent).
+        """
+        occupied = np.array([r is not None for r in self.lane_req])
+        st = jax.tree.map(lambda a: np.array(a), self.lanes)
+        rows = []
+        for i in np.nonzero(occupied & st.active)[0]:
+            idx = int(i)
+            rows.append((self.lane_req[idx],
+                         jax.tree.map(lambda a, idx=idx: a[idx].copy(), st)))
         return rows
 
     def evict_lane(self, request_id: int) -> LaneState:
@@ -1098,7 +1120,8 @@ class ShardedSNNStreamEngine(SNNStreamEngine):
                  adaptive: AdaptiveDispatchConfig | None = None,
                  engine_id: int = 0,
                  injector: FaultInjector | None = None,
-                 fault_cfg: FaultToleranceConfig | None = None):
+                 fault_cfg: FaultToleranceConfig | None = None,
+                 initial_weight_version: int = 0):
         from ..kernels.fused_snn import layer_shard_ways
         if mesh is None:
             mesh = make_device_mesh((len(jax.devices()),), (axis_name,))
@@ -1150,7 +1173,8 @@ class ShardedSNNStreamEngine(SNNStreamEngine):
                          local_batch=batch_size // self.n_devices,
                          model_shards=self.model_devices,
                          adaptive=adaptive, engine_id=engine_id,
-                         injector=injector, fault_cfg=fault_cfg)
+                         injector=injector, fault_cfg=fault_cfg,
+                         initial_weight_version=initial_weight_version)
         specs = lane_partition_specs(len(self.weights), axis_name,
                                      self.model_axis)
         self._shardings = jax.tree.map(

@@ -36,11 +36,12 @@ import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.configs.snn_mnist import SNN_CONFIG
+from repro.configs.snn_mnist import SNN_CONFIG, SNNServingTierConfig
 from repro.core.telemetry import EngineLoad, estimate_eta_steps, load_score
 from repro.serve import (EngineFailure, FaultEvent, FaultInjector, FaultPlan,
-                         FaultToleranceConfig, RolloutInProgressError,
-                         SNNServingTier, SNNStreamEngine, WeightBank)
+                         FaultPlanSpecError, FaultToleranceConfig,
+                         RolloutInProgressError, SNNServingTier,
+                         SNNStreamEngine, WeightBank)
 
 
 def small_net(rng, sizes):
@@ -609,3 +610,86 @@ def test_env_plan_arms_engine_and_stays_value_neutral(monkeypatch):
         assert as_tuple(res[rid]) == as_tuple(refres[rid]), rid
     with pytest.raises(ValueError, match="unknown"):
         FaultPlan.from_spec("seed=3,bogus=1")
+
+
+# ---- spec grammar (strict parsing is the chaos lane's safety net) ---------
+
+def test_from_spec_parses_process_faults():
+    plan = FaultPlan.from_spec(
+        "seed=7,dispatch=0.1,worker_kill=1@3,worker_hang=0@2,"
+        "coordinator_kill=5,worker_kill=0@9")
+    assert plan.seed == 7 and plan.dispatch_rate == 0.1
+    assert plan.worker_kill(1, 3) is not None
+    assert plan.worker_kill(1, 2) is None      # windowed [r, r], not >= r
+    assert plan.worker_kill(0, 9) is not None  # repeated keys accumulate
+    assert plan.worker_hang(0, 2) and not plan.worker_hang(1, 2)
+    assert plan.coordinator_kill(5) and not plan.coordinator_kill(4)
+    assert plan.engine_relevant(0) and plan.engine_relevant(1)
+
+
+def test_from_spec_typo_fails_loudly_not_silently():
+    """Regression: a typo'd key must never parse to an inert no-op plan —
+    a chaos lane that silently tests nothing is worse than none."""
+    with pytest.raises(FaultPlanSpecError) as ei:
+        FaultPlan.from_spec("seed=11,dipsatch=0.03")
+    assert ei.value.key == "dipsatch=0.03"
+    msg = str(ei.value)
+    assert "dipsatch" in msg and "accepted grammar" in msg
+    assert "dispatch" in msg          # known keys listed for the human
+
+
+@pytest.mark.parametrize("spec, detail", [
+    ("worker_kill=1", "'<worker>@<round>'"),
+    ("worker_kill=a@3", "'<worker>@<round>'"),
+    ("worker_hang=0@", "'<worker>@<round>'"),
+    ("worker_kill=-1@3", ">= 0"),
+    ("coordinator_kill=x", "integer round"),
+    ("coordinator_kill=-2", ">= 0"),
+    ("dispatch=1.5", "outside"),
+    ("seed=abc", "integer"),
+    ("seed", "missing '=<value>'"),
+])
+def test_from_spec_malformed_values_raise(spec, detail):
+    with pytest.raises(FaultPlanSpecError) as ei:
+        FaultPlan.from_spec(spec)
+    assert detail in str(ei.value)
+    assert "accepted grammar" in str(ei.value)
+
+
+def test_from_env_rejects_bad_spec(monkeypatch):
+    monkeypatch.setenv("REPRO_FAULT_PLAN", "seed=11,dipsatch=0.03")
+    with pytest.raises(FaultPlanSpecError):
+        FaultPlan.from_env()
+    monkeypatch.delenv("REPRO_FAULT_PLAN")
+    assert FaultPlan.from_env() is None
+
+
+# ---- recovery knob validation ---------------------------------------------
+
+@pytest.mark.parametrize("bad", [
+    dict(heartbeat_interval_s=0.0),
+    dict(heartbeat_deadline_s=0.05, heartbeat_interval_s=0.1),
+    dict(max_respawns=-1),
+    dict(watchdog_chunks=0),
+    dict(max_retries=-1),
+])
+def test_fault_tolerance_config_validates(bad):
+    with pytest.raises(ValueError):
+        FaultToleranceConfig(**bad)
+
+
+def test_tier_knobs_resolve_into_fault_cfg():
+    knobs = SNNServingTierConfig(max_respawns=3, heartbeat_interval_s=0.01,
+                                 heartbeat_deadline_s=2.0)
+    eff = knobs.resolve_fault_cfg()
+    assert eff.max_respawns == 3 and eff.heartbeat_deadline_s == 2.0
+    assert eff.watchdog_chunks == FaultToleranceConfig().watchdog_chunks
+    assert SNNServingTierConfig().resolve_fault_cfg() is None
+    with pytest.raises(ValueError, match="one source of truth"):
+        SNNServingTierConfig(fault_cfg=FaultToleranceConfig(),
+                             max_respawns=2)
+    # invalid knob combinations fail at config construction, not at the
+    # first worker death hours into a run
+    with pytest.raises(ValueError, match="heartbeat"):
+        SNNServingTierConfig(heartbeat_interval_s=1.0,
+                             heartbeat_deadline_s=0.5)
