@@ -46,9 +46,11 @@ line per accounting event (``serve.ledger``), with the ``submit`` line
 ``result`` lines to its own per-host file before shipping them.  A
 killed coordinator is therefore recoverable: :meth:`recover` folds all
 ledger files back into ``results ∪ shed ∪ faulted`` (results win — a
-worker may have durably computed an answer the coordinator never saw)
-and re-runs the outstanding ids from their write-ahead pixels, so the
-partition invariant survives the coordinator's own death.
+worker may have durably computed an answer the coordinator never saw),
+replays ledgered weight rollouts to the pre-crash version, and re-runs
+the outstanding ids from their write-ahead pixels (with their original
+SLO deadlines), so the partition invariant survives the coordinator's
+own death.
 
 Faults are injected deterministically (``serve.faults.FaultPlan``):
 ``worker_kill``/``worker_hang``/``coordinator_kill`` events fire on
@@ -82,9 +84,10 @@ from .faults import (REPRO_FAULT_PLAN_ENV, FaultPlan, FaultRecord,
                      FaultToleranceConfig)
 from .ledger import Ledger, recover_accounting
 from .router import ShedRecord
-from .wire import (array_from_wire, array_to_wire, params_to_wire,
-                   planes_to_wire, plan_to_wire, read_msg, result_from_wire,
-                   result_to_wire, snn_cfg_to_wire, write_msg)
+from .wire import (array_from_wire, array_to_wire, params_from_wire,
+                   params_to_wire, planes_to_wire, plan_to_wire, read_msg,
+                   result_from_wire, result_to_wire, snn_cfg_to_wire,
+                   write_msg)
 
 __all__ = ["ClusterCoordinator", "CoordinatorCrash", "WorkerDied"]
 
@@ -279,9 +282,12 @@ class ClusterCoordinator:
 
     def _rpc(self, h: WorkerHandle, msg: dict,
              timeout_s: float | None) -> dict:
-        """One request/reply exchange under the heartbeat deadline."""
+        """One request/reply exchange under the heartbeat deadline —
+        applied to both directions: a stalled worker whose pipe buffer
+        filled up blocks the request frame itself, and must trip the
+        same hang detection as an overdue reply."""
         try:
-            write_msg(h.wfd, msg)
+            write_msg(h.wfd, msg, timeout_s)
             rep = read_msg(h.rfd, timeout_s)
         except TimeoutError as e:
             raise WorkerDied("hang", str(e)) from None
@@ -319,8 +325,12 @@ class ClusterCoordinator:
             if rid in self._submitted:
                 raise ValueError(f"request id {rid} already in use")
         self._next_id = max(self._next_id, rid + 1)
+        # deadline_steps rides the write-ahead record: a coordinator
+        # crash must not quietly upgrade an SLO-bounded request into an
+        # unbounded one on recovery re-dispatch
         self._ledger.append({"kind": "submit", "rid": rid,
-                             "px": array_to_wire(px)})
+                             "px": array_to_wire(px),
+                             "deadline_steps": deadline_steps})
         self._submitted.add(rid)
         self._order.append(rid)
         self._pixels[rid] = px
@@ -590,11 +600,20 @@ class ClusterCoordinator:
             return
 
     # ---- weight rollout --------------------------------------------------
-    def begin_rollout(self, params_q: dict) -> int:
+    def begin_rollout(self, params_q: dict, *, _replay: bool = False) -> int:
         """Broadcast new packed planes to every live worker, zero-drain
         (the tier's ``begin_rollout`` over RPC; respawned workers seed at
         the fleet's current version, older in-flight versions replay on
-        demand during evacuation)."""
+        demand during evacuation).
+
+        The rollout is **ledgered** (``kind="rollout"``, params included
+        — they are wire-serializable by construction) so a recovered
+        coordinator replays the fleet up to the pre-crash weight version
+        before re-running outstanding ids, instead of silently
+        recomputing them against version-0 weights.  ``_replay`` marks
+        that recovery path: it must not re-append the record, or every
+        recovery would double the rollout history.
+        """
         wire_params = params_to_wire(params_q)
         versions = set()
         for idx in range(self.num_workers):
@@ -610,12 +629,24 @@ class ClusterCoordinator:
                 continue
             versions.add(int(rep["version"]))
             h.versions.add(int(rep["version"]))
-        assert len(versions) == 1, f"workers out of lockstep: {versions}"
+        if not versions:
+            raise RuntimeError(
+                "begin_rollout: no live worker accepted the rollout — "
+                "the fleet is dead; recover() or respawn before rolling "
+                "weights")
+        if len(versions) != 1:
+            raise RuntimeError(
+                f"begin_rollout: workers out of lockstep — the fleet "
+                f"reported versions {sorted(versions)}; refusing to pick "
+                f"one (a respawn raced the broadcast)")
         v = versions.pop()
         self._version_planes[v] = tuple(
             layer["w_q"] for layer in params_q["layers"])
         self._version_params[v] = params_q
         self._current_version = v
+        if not _replay:
+            self._ledger.append({"kind": "rollout", "version": v,
+                                 "params": wire_params})
         return v
 
     # ---- recovery --------------------------------------------------------
@@ -626,11 +657,14 @@ class ClusterCoordinator:
 
         Folds every host's JSONL file back into the three accounting
         maps (``result`` beats ``shed``/``fault`` per id — a worker's
-        replicated line proves the answer was computed), then re-runs
-        the outstanding ids from their write-ahead pixels in submit
-        order.  No new ``submit`` lines are written (they are already
-        durable) and ``coordinator_kill`` is suppressed — the recovered
-        instance must not replay its own death.
+        replicated line proves the answer was computed), replays the
+        ledgered weight rollouts so the fresh fleet sits at the
+        pre-crash version, then re-runs the outstanding ids from their
+        write-ahead pixels in submit order — each with its original
+        ``deadline_steps``, so an SLO-bounded request stays bounded
+        across the crash.  No new ``submit`` lines are written (they are
+        already durable) and ``coordinator_kill`` is suppressed — the
+        recovered instance must not replay its own death.
         """
         co = cls(params_q, cfg, ledger_dir=ledger_dir, _recovered=True,
                  **kw)
@@ -647,14 +681,19 @@ class ClusterCoordinator:
         for rid, rec in acc["faulted"].items():
             co.faulted[int(rid)] = FaultRecord(
                 **{k: v for k, v in rec.items() if k in fault_f})
+        for rec in acc["rollouts"]:
+            co.begin_rollout(params_from_wire(rec["params"]), _replay=True)
         submit_recs = dict(acc["submitted"])
         co._order = [int(rid) for rid, _ in acc["submitted"]]
         co._submitted = set(co._order)
         co._next_id = max(co._order, default=-1) + 1
         for rid in acc["outstanding"]:
-            px = array_from_wire(submit_recs[rid]["px"])
+            rec = submit_recs[rid]
+            px = array_from_wire(rec["px"])
             co._pixels[int(rid)] = px
-            co._dispatch(int(rid), px)
+            ds = rec.get("deadline_steps")
+            co._dispatch(int(rid), px,
+                         deadline_steps=None if ds is None else int(ds))
         return co
 
     # ---- lifecycle -------------------------------------------------------
@@ -662,7 +701,7 @@ class ClusterCoordinator:
         for h in self.workers:
             if h.alive:
                 try:
-                    write_msg(h.wfd, {"op": "shutdown"})
+                    write_msg(h.wfd, {"op": "shutdown"}, 10.0)
                     read_msg(h.rfd, 10.0)
                 except Exception:
                     pass

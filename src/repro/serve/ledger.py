@@ -18,6 +18,9 @@ it.  This module makes the accounting crash-proof:
 * :func:`read_ledger` tolerates a **torn final line** (the crash arrived
   mid-``write``): the trailing partial record is dropped, while a
   corrupt line anywhere *else* is a real integrity failure and raises;
+  reopening a ledger for appending (:class:`Ledger`) truncates such a
+  torn tail first, so a recovered process never welds its first record
+  onto the previous incarnation's partial line;
 * :func:`recover_accounting` folds any set of ledger files back into
   the three maps plus the ordered outstanding-submission list, with
   **exactly-once** semantics: the first terminal record per request id
@@ -45,7 +48,14 @@ class Ledger:
     Each :meth:`append` writes one compact JSON line, flushes, and
     fsyncs — a record either fully precedes a crash or is the single
     torn tail the reader drops.  Append mode keeps restarts cheap: a
-    recovered coordinator reopens the same file and keeps appending.
+    recovered coordinator reopens the same file and keeps appending —
+    but **reopen repairs first**: if the previous incarnation crashed
+    mid-append, the file ends in a partial line, and appending straight
+    onto it would merge two records into one corrupt line (turning the
+    recoverable torn tail into a mid-file integrity failure).  So
+    :meth:`__init__` truncates an unterminated final line before the
+    first append — exactly the record :func:`read_ledger` would have
+    dropped anyway.
     """
 
     def __init__(self, path: str):
@@ -53,7 +63,29 @@ class Ledger:
         d = os.path.dirname(path)
         if d:
             os.makedirs(d, exist_ok=True)
+        self._repair_torn_tail(path)
         self._f = open(path, "a", encoding="utf-8")
+
+    @staticmethod
+    def _repair_torn_tail(path: str) -> None:
+        """Truncate a partial (newline-less) final line left by a crash.
+
+        Every append is ``<json>\\n`` with no interior newlines, so a
+        file not ending in ``\\n`` ends in a torn record; cutting back to
+        the last newline restores the append-only invariant for the new
+        incarnation without touching any complete record.
+        """
+        try:
+            f = open(path, "r+b")
+        except FileNotFoundError:
+            return
+        with f:
+            data = f.read()
+            if not data or data.endswith(b"\n"):
+                return
+            f.truncate(data.rfind(b"\n") + 1)
+            f.flush()
+            os.fsync(f.fileno())
 
     def append(self, record: dict) -> None:
         self._f.write(json.dumps(record, separators=(",", ":")) + "\n")
@@ -98,7 +130,11 @@ def recover_accounting(paths: list[str]) -> dict:
 
     Returns ``{"submitted": [(rid, record), ...] in submit order,
     "results": {rid: record}, "shed": {rid: record},
-    "faulted": {rid: record}, "outstanding": [rid, ...]}``.
+    "faulted": {rid: record}, "outstanding": [rid, ...],
+    "rollouts": [record, ...] in append order}`` — ``rollout`` records
+    carry the wire-encoded params of every completed weight rollout, so
+    a recovered coordinator can replay the fleet up to its pre-crash
+    weight version before re-running the outstanding ids.
 
     Exactly-once: per request id the first terminal record wins within
     its class, and ``result`` records (from any replica) take precedence
@@ -113,6 +149,7 @@ def recover_accounting(paths: list[str]) -> dict:
     results: dict[int, dict] = {}
     shed: dict[int, dict] = {}
     faulted: dict[int, dict] = {}
+    rollouts: list[dict] = []
     for path in paths:
         for rec in read_ledger(path):
             kind = rec.get("kind")
@@ -126,6 +163,8 @@ def recover_accounting(paths: list[str]) -> dict:
                 shed[rid] = rec
             elif kind == "fault" and rid not in faulted:
                 faulted[rid] = rec
+            elif kind == "rollout":
+                rollouts.append(rec)
     # results win over the other terminal classes (see docstring)
     for rid in results:
         shed.pop(rid, None)
@@ -138,4 +177,4 @@ def recover_accounting(paths: list[str]) -> dict:
     outstanding = [rid for rid in order if rid not in terminal]
     return {"submitted": [(rid, submits[rid]) for rid in order],
             "results": results, "shed": shed, "faulted": faulted,
-            "outstanding": outstanding}
+            "outstanding": outstanding, "rollouts": rollouts}

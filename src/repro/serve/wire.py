@@ -23,7 +23,10 @@ two flavours: the worker blocks forever (its liveness is the
 coordinator's problem), the coordinator reads under a wall-clock
 deadline (the heartbeat: a worker that cannot produce its frame within
 ``heartbeat_deadline_s`` is declared hung — the PR 7 watchdog semantics
-across a process boundary).
+across a process boundary).  The writer mirrors that split: the
+coordinator passes the same deadline to :func:`write_msg` so a hung
+worker whose pipe buffer has filled cannot block the coordinator inside
+``os.write`` — overdue writes and overdue reads both mean "hung".
 
 No jax at module scope: the coordinator never touches a device, and the
 ledger-recovery path must be importable before any worker exists.
@@ -225,13 +228,38 @@ def result_from_wire(d: dict):
 _HEADER = struct.Struct(">I")
 
 
-def write_msg(fd: int, obj) -> None:
-    """Write one length-prefixed JSON frame to a raw fd (pipe)."""
+def write_msg(fd: int, obj, timeout_s: float | None = None) -> None:
+    """Write one length-prefixed JSON frame to a raw fd (pipe).
+
+    ``timeout_s=None`` blocks forever (worker side).  A finite timeout
+    is the coordinator's heartbeat deadline applied to the *write* side:
+    a stalled peer that stops draining its pipe fills the kernel buffer
+    (~64KB), and a large frame (weight planes, rollout params) would
+    otherwise block the coordinator in ``os.write`` forever — past the
+    deadline this raises :class:`TimeoutError` exactly like the read
+    side, so "any RPC overdue is declared hung" covers both directions.
+    """
+    import time
     body = json.dumps(obj, separators=(",", ":")).encode("utf-8")
     data = _HEADER.pack(len(body)) + body
     view = memoryview(data)
+    deadline = None if timeout_s is None else time.monotonic() + timeout_s
     while view:
-        n = os.write(fd, view)
+        if deadline is None:
+            n = os.write(fd, view)
+        else:
+            left = deadline - time.monotonic()
+            if left <= 0:
+                raise TimeoutError("frame write exceeded the heartbeat "
+                                   "deadline")
+            _, w, _ = select.select([], [fd], [], left)
+            if not w:
+                raise TimeoutError("frame write exceeded the heartbeat "
+                                   "deadline")
+            # select-writable guarantees PIPE_BUF bytes of space, so a
+            # chunk bounded by it cannot block a blocking-mode pipe even
+            # when the peer never drains another byte
+            n = os.write(fd, view[:select.PIPE_BUF])
         view = view[n:]
 
 

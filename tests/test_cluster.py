@@ -157,6 +157,49 @@ def test_lane_wire_rejects_malformed_rows():
         lane_from_wire({"codec": WIRE_CODEC_VERSION, "leaves": {}})
 
 
+def test_write_msg_times_out_on_full_pipe():
+    """The heartbeat deadline covers the write side too: a hung worker
+    that stops draining its pipe fills the kernel buffer, and a large
+    frame must raise TimeoutError instead of blocking the coordinator
+    inside os.write forever (which would defeat the watchdog)."""
+    import os
+    import time
+
+    from repro.serve.wire import write_msg
+    r, w = os.pipe()
+    try:
+        os.set_blocking(w, False)
+        try:
+            while True:
+                os.write(w, b"\0" * 65536)
+        except BlockingIOError:
+            pass   # pipe buffer is now full
+        os.set_blocking(w, True)
+        t0 = time.monotonic()
+        with pytest.raises(TimeoutError, match="frame write"):
+            write_msg(w, {"px": "y" * 4096}, timeout_s=0.1)
+        assert time.monotonic() - t0 < 5.0
+    finally:
+        os.close(r)
+        os.close(w)
+
+
+def test_write_msg_with_deadline_roundtrips():
+    """A live peer: the deadline path must still deliver the frame
+    byte-exactly (chunked writes included)."""
+    import os
+
+    from repro.serve.wire import read_msg, write_msg
+    r, w = os.pipe()
+    try:
+        obj = {"op": "submit", "px": list(range(100))}
+        write_msg(w, obj, timeout_s=5.0)
+        assert read_msg(r, 5.0) == obj
+    finally:
+        os.close(r)
+        os.close(w)
+
+
 def test_engine_load_wire_roundtrip():
     load = EngineLoad(lanes_total=8, lanes_busy=3, queue_depth=2,
                       mean_service_steps=5.5, retired_total=7,
@@ -179,6 +222,40 @@ def test_ledger_drops_torn_final_line(tmp_path):
         f.write('{"kind": "fault", "rid": 1, "rea')   # crash mid-append
     recs = read_ledger(p)
     assert [r["kind"] for r in recs] == ["submit", "result"]
+
+
+def test_ledger_reopen_repairs_torn_tail(tmp_path):
+    """A recovered process reopening a ledger whose last append was torn
+    must truncate the partial line first — appending straight onto it
+    would weld two records into one corrupt mid-file line, silently
+    dropping the new record (if last) or poisoning the whole ledger with
+    LedgerCorruptError (if not)."""
+    p = str(tmp_path / "l.jsonl")
+    led = Ledger(p)
+    led.append({"kind": "submit", "rid": 0})
+    led.close()
+    with open(p, "a", encoding="utf-8") as f:
+        f.write('{"kind": "result", "rid": 0, "pre')   # crash mid-append
+    led2 = Ledger(p)   # the respawned incarnation reopens the same file
+    led2.append({"kind": "result", "rid": 0})
+    led2.append({"kind": "fault", "rid": 1, "reason": "state_lost"})
+    led2.close()
+    recs = read_ledger(p)
+    assert [(r["kind"], r["rid"]) for r in recs] == [
+        ("submit", 0), ("result", 0), ("fault", 1)]
+    acc = recover_accounting([p])
+    assert set(acc["results"]) == {0} and set(acc["faulted"]) == {1}
+
+
+def test_ledger_reopen_keeps_clean_file_intact(tmp_path):
+    p = str(tmp_path / "l.jsonl")
+    led = Ledger(p)
+    led.append({"kind": "submit", "rid": 0})
+    led.close()
+    led2 = Ledger(p)
+    led2.append({"kind": "result", "rid": 0})
+    led2.close()
+    assert [r["kind"] for r in read_ledger(p)] == ["submit", "result"]
 
 
 def test_ledger_raises_on_mid_file_corruption(tmp_path):
@@ -228,6 +305,7 @@ def test_cluster_matches_single_engine(tmp_path):
     recs = read_ledger(str(tmp_path / "coordinator.jsonl"))
     assert {r["rid"] for r in recs if r["kind"] == "submit"} == set(
         range(len(IMGS)))
+    assert all("deadline_steps" in r for r in recs if r["kind"] == "submit")
     wrecs = [r for i in range(KW["num_workers"])
              for r in read_ledger(str(tmp_path / f"worker-{i}.jsonl"))]
     assert {r["rid"] for r in wrecs if r["kind"] == "result"} == set(
@@ -319,6 +397,76 @@ def test_coordinator_crash_mid_evacuation_exactly_once(tmp_path):
             _assert_matches_baseline(co2, "reference")
     finally:
         co.close()
+
+
+def test_rollout_survives_coordinator_crash(tmp_path):
+    """Weight rollouts are ledgered and replayed on recovery: with four
+    requests outstanding at the crash and a rollout that preceded it,
+    the recovered coordinator must re-run them against the pre-crash
+    fleet version, not version 0 of the caller-supplied params."""
+    params2 = small_net(np.random.default_rng(99), CFG.layer_sizes)
+    co = make_co(tmp_path)
+    try:
+        for i, im in enumerate(IMGS[:4]):
+            co.submit(im, request_id=i)
+        assert co.begin_rollout(params2) == 1
+        with pytest.raises(CoordinatorCrash):
+            co._crash(co.round)
+    finally:
+        co.close()
+    recs = read_ledger(str(tmp_path / "coordinator.jsonl"))
+    assert [r["version"] for r in recs if r["kind"] == "rollout"] == [1]
+    with ClusterCoordinator.recover(
+            PARAMS, CFG, ledger_dir=str(tmp_path), backend="reference",
+            **KW) as co2:
+        assert co2._current_version == 1
+        res = co2.run()
+        assert set(res) == set(range(4))
+        assert all(r.weight_version == 1 for r in res.values())
+    # the replay itself must not re-append the rollout record — a second
+    # recovery would otherwise replay it twice and land at version 2
+    recs = read_ledger(str(tmp_path / "coordinator.jsonl"))
+    assert [r["version"] for r in recs if r["kind"] == "rollout"] == [1]
+
+
+def _dead_slot(self, idx, incarnation=0):
+    from repro.serve.cluster import WorkerHandle
+    return WorkerHandle(proc=None, rfd=-1, wfd=-1, alive=False)
+
+
+def test_begin_rollout_requires_live_workers(tmp_path, monkeypatch):
+    """With zero live workers the rollout must fail loudly (a typed
+    RuntimeError) — not KeyError off an empty version set, and not an
+    assert that python -O strips."""
+    monkeypatch.setattr(ClusterCoordinator, "_spawn", _dead_slot)
+    co = ClusterCoordinator(PARAMS, CFG, ledger_dir=str(tmp_path), **KW)
+    with pytest.raises(RuntimeError, match="no live worker"):
+        co.begin_rollout(PARAMS)
+    co.close()
+
+
+def test_recover_redispatch_preserves_deadline(tmp_path, monkeypatch):
+    """deadline_steps rides the write-ahead submit record: recovery must
+    re-dispatch an outstanding SLO-bounded request with its original
+    deadline, not silently upgrade it to unbounded."""
+    from repro.serve.wire import array_to_wire
+    led = Ledger(str(tmp_path / "coordinator.jsonl"))
+    led.append({"kind": "submit", "rid": 0, "px": array_to_wire(IMGS[0]),
+                "deadline_steps": 7})
+    led.append({"kind": "submit", "rid": 1, "px": array_to_wire(IMGS[1]),
+                "deadline_steps": None})
+    led.close()
+    captured = {}
+
+    def fake_dispatch(self, rid, px, *, deadline_steps=None, **kw):
+        captured[rid] = deadline_steps
+
+    monkeypatch.setattr(ClusterCoordinator, "_spawn", _dead_slot)
+    monkeypatch.setattr(ClusterCoordinator, "_dispatch", fake_dispatch)
+    co = ClusterCoordinator.recover(PARAMS, CFG, ledger_dir=str(tmp_path),
+                                    **KW)
+    co.close()
+    assert captured == {0: 7, 1: None}
 
 
 STATE_LOST_PLAN = FaultPlan(events=(
