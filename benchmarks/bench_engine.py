@@ -18,7 +18,7 @@ from repro.configs.snn_mnist import SNN_CONFIG
 from repro.core import prng, snn
 from repro.kernels import ops
 
-from .common import emit, save_json, time_call, trained_snn
+from .common import emit, save_json, time_record, trained_snn
 
 
 def run(batch: int = 256, T: int = 10):
@@ -32,7 +32,9 @@ def run(batch: int = 256, T: int = 10):
     # to the fused Pallas kernel, timing it against itself.
     engine = jax.jit(lambda p, a, b: snn.snn_apply_int(
         p, a, b, cfg, backend="reference")["pred"])
-    us = time_call(engine, params_q, px, st)
+    recs = {}
+    recs["jax_scan"] = time_record(engine, params_q, px, st)
+    us = recs["jax_scan"].us
     ips = batch / (us * 1e-6)
     emit("engine.jax_scan", us / batch,
          f"batch={batch} T={T} imgs_per_s={ips:.0f}")
@@ -42,7 +44,8 @@ def run(batch: int = 256, T: int = 10):
     fast_cfg = dataclasses.replace(cfg, dot_impl="f32", fuse_encoder=True)
     fast = jax.jit(lambda p, a, b: snn.snn_apply_int(
         p, a, b, fast_cfg, backend="reference")["pred"])
-    us_fast = time_call(fast, params_q, px, st)
+    recs["fused_f32"] = time_record(fast, params_q, px, st)
+    us_fast = recs["fused_f32"].us
     emit("engine.fused_f32", us_fast / batch,
          f"imgs_per_s={batch/(us_fast*1e-6):.0f} "
          f"speedup={us/us_fast:.2f}x (bit-identical)")
@@ -62,7 +65,10 @@ def run(batch: int = 256, T: int = 10):
             v_threshold=cfg.lif.v_threshold)
         return jnp.argmax(jnp.sum(spk.astype(jnp.int32), 0), -1)
 
-    us_k = time_call(pallas_engine, px, st)
+    interp = jax.default_backend() != "tpu"
+    recs["pallas_staged"] = time_record(pallas_engine, px, st,
+                                        interpret=interp)
+    us_k = recs["pallas_staged"].us
     emit("engine.pallas_staged", us_k / batch,
          f"batch={batch} T={T} imgs_per_s={batch/(us_k*1e-6):.0f} "
          f"(interpret mode — CPU correctness path)")
@@ -70,7 +76,9 @@ def run(batch: int = 256, T: int = 10):
     # fused Pallas megakernel: whole window in one launch, spikes on-chip
     fused = jax.jit(lambda p, a, b: snn.snn_apply_int(
         p, a, b, cfg, backend="fused")["pred"])
-    us_f = time_call(fused, params_q, px, st)
+    recs["pallas_fused"] = time_record(fused, params_q, px, st,
+                                       interpret=interp)
+    us_f = recs["pallas_fused"].us
     emit("engine.pallas_fused", us_f / batch,
          f"batch={batch} T={T} imgs_per_s={batch/(us_f*1e-6):.0f} "
          f"(interpret mode — CPU correctness path)")
@@ -84,7 +92,9 @@ def run(batch: int = 256, T: int = 10):
     save_json({"jax_us_per_img": us / batch,
                "pallas_staged_us_per_img": us_k / batch,
                "pallas_fused_us_per_img": us_f / batch,
-               "agreement": agree}, "bench", "engine_throughput.json")
+               "agreement": agree,
+               "timing": {k: r.to_json() for k, r in recs.items()},
+               }, "bench", "engine_throughput.json")
     assert agree == 1.0
     return {"jax": us, "pallas": us_k, "fused": us_f}
 

@@ -30,7 +30,13 @@ from repro.configs.snn_mnist import (SNN_CONFIG, SNN_CONFIG_DEEP,
 from repro.core import prng, snn
 from repro.kernels import fused_snn, ops
 
-from .common import emit, save_json, time_call
+from .common import emit, save_json, time_record
+
+
+def _interp(backend: str) -> bool:
+    """True when this backend's timing ran Pallas interpret mode (CPU)."""
+    return backend.startswith("fused") or backend == "staged" \
+        if jax.default_backend() != "tpu" else False
 
 
 def _resident_weight_bytes(weights):
@@ -83,12 +89,15 @@ def run():
     # --- bit-exactness across backends (same PRNG seeds) -----------------
     outs = {}
     times = {}
+    recs = {}
     for backend in ("reference", "staged", "fused"):
         fn = jax.jit(lambda p, a, b, bk=backend:
                      snn.snn_apply_int(p, a, b, cfg, backend=bk)
                      ["spike_counts"])
-        times[backend] = time_call(fn, params_q, px, st,
-                                   repeats=s["repeats"])
+        recs[backend] = time_record(fn, params_q, px, st,
+                                    repeats=s["repeats"],
+                                    interpret=_interp(backend))
+        times[backend] = recs[backend].us
         outs[backend] = np.asarray(fn(params_q, px, st))
         emit(f"fused.{backend}", times[backend] / batch,
              f"batch={batch} T={T} "
@@ -138,6 +147,7 @@ def run():
         "hop_reduction_vs_pixels": ratio_vs_pixels,
         "resident_weight_bytes": resident,
         "sparse": sparse,
+        "timing": {k: r.to_json() for k, r in recs.items()},
         "backend_platform": jax.default_backend(),
     }, "bench", "BENCH_fused.json")
 
@@ -215,13 +225,14 @@ def run_multilayer():
     cfg = dataclasses.replace(SNN_CONFIG_DEEP, layer_sizes=sizes,
                               num_steps=T)
 
-    outs, adds, times = {}, {}, {}
+    outs, adds, times, recs = {}, {}, {}, {}
     for backend in ("reference", "staged", "fused"):
         fn = jax.jit(lambda p, a, b, bk=backend:
                      snn.snn_apply_int(p, a, b, cfg, backend=bk))
-        times[backend] = time_call(
+        recs[backend] = time_record(
             lambda p, a, b: fn(p, a, b)["spike_counts"], params_q, px, st,
-            repeats=s["repeats"])
+            repeats=s["repeats"], interpret=_interp(backend))
+        times[backend] = recs[backend].us
         out = fn(params_q, px, st)
         outs[backend] = np.asarray(out["spike_counts"])
         adds[backend] = np.asarray(out["active_adds"])
@@ -282,6 +293,7 @@ def run_multilayer():
                       "fused_total": sum(fused_hops)},
         "fused_single_launch": bool(fused_is_one_launch),
         "resident_weight_bytes": resident,
+        "timing": {k: r.to_json() for k, r in recs.items()},
         "backend_platform": jax.default_backend(),
     }, "bench", "BENCH_fused_multilayer.json")
     return times
@@ -337,13 +349,14 @@ def run_streamed():
          f"explicit_fused_raises={fused_raises}")
     assert fused_raises, "oversized stack must reject backend='fused'"
 
-    outs, times = {}, {}
+    outs, times, recs = {}, {}, {}
     for backend in ("reference", "fused_streamed"):
         fn = jax.jit(lambda p, a, b, bk=backend:
                      snn.snn_apply_int(p, a, b, cfg, backend=bk))
-        times[backend] = time_call(
+        recs[backend] = time_record(
             lambda p, a, b: fn(p, a, b)["spike_counts"], params_q, px, st,
-            repeats=s["repeats"])
+            repeats=s["repeats"], interpret=_interp(backend))
+        times[backend] = recs[backend].us
         out = fn(params_q, px, st)
         outs[backend] = (np.asarray(out["spike_counts"]),
                          np.asarray(out["active_adds"]))
@@ -374,6 +387,7 @@ def run_streamed():
         "explicit_fused_raises": bool(fused_raises),
         "vmem_mib": {"resident": resident_mib, "streamed": streamed_mib,
                      "budget": budget_mib},
+        "timing": {k: r.to_json() for k, r in recs.items()},
         "backend_platform": jax.default_backend(),
     }, "bench", "BENCH_fused_streamed.json")
     return times

@@ -83,6 +83,11 @@ CONTRACT_FIELDS = [
     "wide_shard_fits_vmem",
     "failover_bit_identical",
     "mesh_shape",
+    # autotuner / dispatch-cache contract (BENCH_autotune.json) — the
+    # tuned wall-clock itself is provenance, never compared
+    "tuned_bit_identical",
+    "tuned_not_slower",
+    "cache_roundtrip_ok",
 ]
 
 

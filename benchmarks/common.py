@@ -1,12 +1,18 @@
-"""Shared benchmark plumbing: trained-weight cache, timing, CSV emission."""
+"""Shared benchmark plumbing: trained-weight cache, timing, CSV emission.
+
+Timing is delegated to ``repro.tune.timing`` — the same deterministic
+harness (warmup, median-of-k, monotonic clock) the autotuner measures
+candidates with, so benchmark numbers and tuner decisions come from one
+code path.  :func:`time_call` keeps the historical µs-median signature;
+:func:`time_record` returns the full :class:`~repro.tune.timing.TimingRecord`
+(median, stddev, samples, ``device_kind``, ``interpret``) for benches
+that tag their saved JSON with measurement provenance.
+"""
 
 from __future__ import annotations
 
 import json
 import os
-import time
-
-import numpy as np
 
 RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
 
@@ -23,17 +29,17 @@ def emit(name: str, us_per_call: float | None, derived: str) -> None:
     print(f"{name},{us},{derived}")
 
 
+def time_record(fn, *args, repeats: int = 3, warmup: int = 1,
+                interpret: bool = False):
+    """Measure fn(*args) via the shared harness → TimingRecord."""
+    from repro.tune.timing import measure
+    return measure(fn, *args, repeats=repeats, warmup=warmup,
+                   interpret=interpret)
+
+
 def time_call(fn, *args, repeats: int = 3, warmup: int = 1) -> float:
     """Median wall-time of fn(*args) in microseconds."""
-    import jax
-    for _ in range(warmup):
-        jax.block_until_ready(fn(*args))
-    ts = []
-    for _ in range(repeats):
-        t0 = time.perf_counter()
-        jax.block_until_ready(fn(*args))
-        ts.append(time.perf_counter() - t0)
-    return float(np.median(ts) * 1e6)
+    return time_record(fn, *args, repeats=repeats, warmup=warmup).us
 
 
 def save_json(obj, *parts) -> str:

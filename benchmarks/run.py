@@ -36,6 +36,8 @@ SUITES = {
     "model_sharded": ("bench_model_sharded",
                       "Model-axis sharding (2-D data×model mesh)"),
     "fused": ("bench_fused", "Fused vs staged encode→LIF (time + bytes)"),
+    "autotune": ("bench_autotune",
+                 "Wall-clock autotuner + persisted dispatch cache"),
     "roofline": ("roofline", "Roofline terms from the dry-run"),
 }
 

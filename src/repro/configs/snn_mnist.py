@@ -63,14 +63,21 @@ class SNNStreamMeshConfig:
     num_devices: int | None = None     # data-axis width (None = the rest)
     model_axis_name: str = "model"
     model_devices: int = 1             # model-axis width (1 = pure data)
-    lanes_per_device: int = 8          # slots per DATA-axis device block
-    chunk_steps: int = 4               # window steps per device dispatch
+    # None defers to the engine: a dispatch-cache hit supplies the tuned
+    # value, otherwise the historical defaults (8 lanes, 4-step chunks).
+    lanes_per_device: int | None = None  # slots per DATA-axis device block
+    chunk_steps: int | None = None     # window steps per device dispatch
     overlap: bool = True               # speculative chunk k+1 dispatch
     # Telemetry-driven dispatch tuning (serve.telemetry): None reads the
     # REPRO_ADAPTIVE_DISPATCH env default — frozen (static threshold +
     # chunk length, zero readbacks) unless the env flips it on.  Adaptive
     # mode is value-neutral: it only moves performance-facing knobs.
     adaptive: "AdaptiveDispatchConfig | None" = None
+    # Persisted autotuner output (repro.tune): a DispatchCache instance, a
+    # path to the versioned JSON file, or None to read REPRO_DISPATCH_CACHE
+    # (False disables even the env).  Tuned shapes fill the None knobs
+    # above; explicit knob values always win.
+    dispatch_cache: "object | None" = None
 
 
 SNN_STREAM_MESH = SNNStreamMeshConfig()
@@ -94,8 +101,10 @@ TIER_PRIORITY_CLASSES = ("batch", "standard", "interactive")
 @dataclass(frozen=True)
 class SNNServingTierConfig:
     num_engines: int = 2
-    lanes_per_engine: int = 8
-    chunk_steps: int = 4
+    # None defers to the per-engine dispatch-cache decision (tuned shapes
+    # on a hit, the historical 8-lane / 4-step defaults otherwise).
+    lanes_per_engine: int | None = None
+    chunk_steps: int | None = None
     priority_classes: tuple = TIER_PRIORITY_CLASSES
     default_priority: str = "standard"
     default_deadline_steps: int | None = None
@@ -116,6 +125,11 @@ class SNNServingTierConfig:
     # uses FaultToleranceConfig defaults.
     fault_plan: "FaultPlan | str | None" = None
     fault_cfg: "FaultToleranceConfig | None" = None
+    # Persisted autotuner output (repro.tune), threaded to every engine in
+    # the fleet: DispatchCache | path | None (env REPRO_DISPATCH_CACHE) |
+    # False (disabled).  Per-engine hit/miss decisions are recorded on
+    # ``SNNServingTier.cache_decisions``.
+    dispatch_cache: "object | None" = None
     # Recovery knobs, exposed individually so deployments tune them
     # without constructing a FaultToleranceConfig by hand.  ``None``
     # keeps the FaultToleranceConfig default; any non-None value is
@@ -187,7 +201,8 @@ def make_serving_tier(params_q: dict, snn_cfg: SNNConfig = SNN_CONFIG,
         sharded=knobs.sharded,
         devices_per_engine=knobs.devices_per_engine,
         adaptive=knobs.adaptive, fault_plan=knobs.fault_plan,
-        fault_cfg=knobs.resolve_fault_cfg(), **tier_kw)
+        fault_cfg=knobs.resolve_fault_cfg(),
+        dispatch_cache=knobs.dispatch_cache, **tier_kw)
 
 
 # Process-level cluster knobs (serve.ClusterCoordinator): the failover
@@ -273,7 +288,8 @@ def make_stream_engine(params_q: dict, snn_cfg: SNNConfig = SNN_CONFIG,
         model_axis_name=knobs.model_axis_name,
         lanes_per_device=knobs.lanes_per_device,
         chunk_steps=knobs.chunk_steps, overlap=knobs.overlap,
-        adaptive=knobs.adaptive, **engine_kw)
+        adaptive=knobs.adaptive,
+        dispatch_cache=knobs.dispatch_cache, **engine_kw)
 
 
 # Hidden-layer stack (beyond the paper's topology): exercises the

@@ -173,7 +173,8 @@ def fused_unsupported_reason(cfg: SNNConfig, n_layers: int,
                              trace_steps: int | None = None,
                              local_batch: int | None = None,
                              streamed: bool = False,
-                             model_shards: int = 1) -> str | None:
+                             model_shards: int = 1,
+                             block_b: int | None = None) -> str | None:
     """Why the fused megakernel cannot run this configuration (None = ok).
 
     The kernel handles arbitrary layer stacks, but it keeps every weight
@@ -196,7 +197,10 @@ def fused_unsupported_reason(cfg: SNNConfig, n_layers: int,
     every layer that divides (``kernels.fused_snn.layer_shard_ways``), so
     feasibility is judged against the per-device shard footprint — how a
     WIDE stack that overflows single-device VMEM becomes resident-fused
-    on a 4-way model axis.
+    on a 4-way model axis.  ``block_b`` pins the batch block the launch
+    will actually use (a tuned dispatch-cache shape) instead of the
+    ``block_b_for(local_batch)`` heuristic — feasibility must be judged
+    against the geometry the kernel really allocates.
     """
     from ..kernels import fused_snn
     if n_layers < 1:
@@ -209,7 +213,9 @@ def fused_unsupported_reason(cfg: SNNConfig, n_layers: int,
     if sizes is None:
         return None                      # shapes unknown — assume it fits
     need = fused_snn.stack_vmem_bytes(
-        sizes, fused_snn.block_b_for(local_batch),
+        sizes,
+        (fused_snn.block_b_for(local_batch) if block_b is None
+         else int(block_b)),
         cfg.num_steps if trace_steps is None else trace_steps,
         streamed=streamed, model_shards=model_shards)
     if need > fused_snn.VMEM_BUDGET_BYTES:
@@ -229,7 +235,10 @@ def resolve_backend(cfg: SNNConfig, backend: str | None = None,
                     layer_sizes: tuple[int, ...] | None = None,
                     trace_steps: int | None = None,
                     local_batch: int | None = None,
-                    model_shards: int = 1) -> str:
+                    model_shards: int = 1,
+                    block_b: int | None = None,
+                    dispatch_cache=None,
+                    mesh_shape=(1,)) -> str:
     """Pick the integer-engine backend actually run on this host.
 
     ``auto`` resolves on TPU through the chain fused → fused_streamed →
@@ -249,18 +258,48 @@ def resolve_backend(cfg: SNNConfig, backend: str | None = None,
     resolves ``fused_streamed`` single-device resolves resident ``fused``
     on a 4-way model axis, because each device only keeps a quarter of
     every shardable layer on-chip.
+
+    ``dispatch_cache`` (a ``repro.tune.DispatchCache``, a cache-file
+    path, or ``None``) short-circuits an ``auto`` resolution: a cache
+    hit for this config's fingerprint on this device kind carries the
+    backend that feasibility-resolved during the tuned run, so the VMEM
+    chain is consulted once at tuning time instead of recomputed at
+    every startup.  A fused-family cached backend is still gated by one
+    cheap feasibility check against the *cached* shapes (a mismatched
+    or hand-edited cache must fall back to the normal chain, never
+    crash); explicit backend requests ignore the cache entirely.
+    ``block_b`` pins the tuned batch block for the feasibility math.
     """
     b = backend if backend is not None else cfg.backend
     on_tpu = jax.default_backend() == "tpu"
+
+    if b == "auto" and dispatch_cache is not None:
+        from ..tune.cache import decide_dispatch
+        decision = decide_dispatch(dispatch_cache, cfg=cfg, backend="auto",
+                                   mesh_shape=mesh_shape)
+        if decision.hit:
+            t = decision.tuned
+            cached_ok = t.backend in ("staged", "reference") or (
+                on_tpu and fused_unsupported_reason(
+                    cfg, n_layers, layer_sizes, trace_steps,
+                    t.lanes_per_device if local_batch is None
+                    else local_batch,
+                    streamed=(t.backend == "fused_streamed"),
+                    model_shards=model_shards, block_b=t.block_b) is None)
+            if cached_ok:
+                return t.backend
+
     reason = fused_unsupported_reason(cfg, n_layers, layer_sizes,
                                       trace_steps, local_batch,
-                                      model_shards=model_shards)
+                                      model_shards=model_shards,
+                                      block_b=block_b)
 
     def streamed_reason():
         return fused_unsupported_reason(cfg, n_layers, layer_sizes,
                                         trace_steps, local_batch,
                                         streamed=True,
-                                        model_shards=model_shards)
+                                        model_shards=model_shards,
+                                        block_b=block_b)
 
     if b == "auto":
         if not on_tpu:

@@ -156,7 +156,7 @@ def partial_contraction_op(spikes: jax.Array, en: jax.Array,
 @partial(jax.jit, static_argnames=(
     "num_steps", "chunk_steps", "decay_shift", "v_threshold", "v_rest",
     "v_min", "v_max", "active_pruning", "patience", "readout",
-    "sparse_skip", "streamed", "interpret"))
+    "sparse_skip", "streamed", "interpret", "block_b"))
 def fused_snn_stack_op(pixels_u8: jax.Array, state_u32: jax.Array,
                        weights, *, num_steps: int, chunk_steps: int | None = None,
                        decay_shift: int, v_threshold: int, v_rest: int = 0,
@@ -166,7 +166,8 @@ def fused_snn_stack_op(pixels_u8: jax.Array, state_u32: jax.Array,
                        readout: str = "count",
                        sparse_skip: bool | None = None,
                        streamed: bool = False,
-                       interpret: bool | None = None):
+                       interpret: bool | None = None,
+                       block_b: int | None = None):
     """Multi-layer encode→LIF stack in one resumable Pallas launch.
 
     Args:
@@ -193,6 +194,12 @@ def fused_snn_stack_op(pixels_u8: jax.Array, state_u32: jax.Array,
       streamed: keep the packed weight planes in HBM and double-buffer
         128-row slabs through VMEM scratch (the ``fused_streamed``
         backend for stacks over the residency budget).
+      block_b: batch-block (MXU tile height) override for the launch
+        grid — a tunable dispatch shape (the autotuner searches it).
+        None derives the historical ``fused_snn.block_b_for(B)``
+        heuristic.  Bit-identical for any valid value: blocking only
+        changes launch geometry (and the telemetry tile-leaf shape that
+        mirrors it), never the integer datapath.
 
     Returns a dict with ``spike_counts``/``first_spike_t``/``v_final``
     ((B, n_out) i32), ``v_trace`` ((chunk, B, n_out) i32), ``active_adds``
@@ -210,7 +217,15 @@ def fused_snn_stack_op(pixels_u8: jax.Array, state_u32: jax.Array,
     L = len(weights)
     sizes = [n_in] + [w.shape[1] for w in weights]
     n_out = sizes[-1]
-    bB = fused_snn.block_b_for(B)
+    if block_b is None:
+        bB = fused_snn.block_b_for(B)
+    else:
+        bB = int(block_b)
+        if bB < 8 or bB % 8:
+            raise ValueError(
+                f"block_b={block_b} is not a positive multiple of 8 (the "
+                f"kernel's sublane granularity) — pass None for the "
+                f"derived default")
     lane = fused_snn.LANE
     Bp = B + (-B) % bB
 

@@ -116,8 +116,9 @@ class SNNServingTier:
     """
 
     def __init__(self, params_q: dict, cfg: SNNConfig, *,
-                 num_engines: int = 2, lanes_per_engine: int = 8,
-                 chunk_steps: int = 4, patience: int = 2, seed: int = 0,
+                 num_engines: int = 2, lanes_per_engine: int | None = None,
+                 chunk_steps: int | None = None, patience: int = 2,
+                 seed: int = 0,
                  backend: str | None = None,
                  priority_classes: tuple = DEFAULT_PRIORITY_CLASSES,
                  default_priority: str = "standard",
@@ -128,7 +129,8 @@ class SNNServingTier:
                  adaptive=None,
                  fault_plan: FaultPlan | str | None = None,
                  fault_cfg: FaultToleranceConfig | None = None,
-                 ledger=None):
+                 ledger=None,
+                 dispatch_cache=None):
         if num_engines < 1:
             raise ValueError(f"num_engines must be >= 1, got {num_engines}")
         if default_priority not in priority_classes:
@@ -171,14 +173,15 @@ class SNNServingTier:
                     batch_size=lanes_per_engine, chunk_steps=chunk_steps,
                     patience=patience, seed=seed, backend=backend,
                     adaptive=adaptive, engine_id=i, injector=_inj(i),
-                    fault_cfg=self.fault_cfg))
+                    fault_cfg=self.fault_cfg, dispatch_cache=dispatch_cache))
         else:
             for i in range(num_engines):
                 self.engines.append(SNNStreamEngine(
                     params_q, cfg, batch_size=lanes_per_engine,
                     chunk_steps=chunk_steps, patience=patience, seed=seed,
                     backend=backend, adaptive=adaptive, engine_id=i,
-                    injector=_inj(i), fault_cfg=self.fault_cfg))
+                    injector=_inj(i), fault_cfg=self.fault_cfg,
+                    dispatch_cache=dispatch_cache))
         # Optional write-ahead accounting ledger (serve.ledger.Ledger):
         # every terminal record — shed, fault, result — is appended as a
         # JSON line the moment the tier commits to it, so a crash of the
@@ -203,6 +206,13 @@ class SNNServingTier:
                       "shed_deadline": 0, "shed_overload": 0,
                       "displaced": 0, "engines_failed": 0, "evacuated": 0,
                       "requeued": 0, "poison_retries": 0, "quarantined": 0}
+
+    @property
+    def cache_decisions(self) -> list:
+        """Per-engine dispatch-cache startup decisions (hit/miss, key,
+        reason) — the recorded answer to "is this fleet actually serving
+        tuned shapes?"."""
+        return [e.cache_decision for e in self.engines]
 
     # ---- routing --------------------------------------------------------
     def _alive(self) -> list[int]:

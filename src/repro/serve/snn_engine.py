@@ -56,6 +56,7 @@ from __future__ import annotations
 
 from dataclasses import dataclass
 from functools import partial
+from types import SimpleNamespace
 from typing import NamedTuple
 
 import jax
@@ -76,7 +77,8 @@ from .faults import (DeviceLostFault, DispatchFault, EngineFailure,
                      EngineHealthState, FaultInjector, FaultToleranceConfig,
                      PoisonDispatchError, injector_from_env, telemetry_ok)
 from .rollout import WeightBank, merge_version_chunks
-from .telemetry import AdaptiveDispatchConfig, make_controller, \
+from .telemetry import AdaptiveDispatchConfig, TelemetryController, \
+    make_controller, \
     summarize_chunk
 
 __all__ = ["SNNStreamEngine", "ShardedSNNStreamEngine", "LaneState",
@@ -144,7 +146,8 @@ def _stream_chunk_impl(lanes: LaneState, weights: tuple, *, chunk_steps: int,
                        sparse_skip: bool | None = None,
                        interpret: bool | None = None,
                        model_axis: str | None = None,
-                       model_ways: tuple[int, ...] | None = None):
+                       model_ways: tuple[int, ...] | None = None,
+                       block_b: int | None = None):
     """Un-jitted chunk body: every op is per-lane (no cross-batch contact),
     which is what lets the same code run whole-tile under ``jax.jit`` or
     per-device-slice under ``shard_map`` with bit-identical results.
@@ -183,7 +186,8 @@ def _stream_chunk_impl(lanes: LaneState, weights: tuple, *, chunk_steps: int,
             gate={"active": lanes.active, "prev": lanes.gate_prev,
                   "streak": lanes.gate_streak},
             patience=patience, readout=readout, sparse_skip=sparse_skip,
-            streamed=(backend == "fused_streamed"), interpret=interpret)
+            streamed=(backend == "fused_streamed"), interpret=interpret,
+            block_b=block_b)
         return LaneState(
             px=lanes.px, rng=k["prng_state"], v=k["v"], en=k["en"],
             v_peak=k["v_peak"],
@@ -269,13 +273,15 @@ def _stream_chunk_impl(lanes: LaneState, weights: tuple, *, chunk_steps: int,
 
 @partial(jax.jit, static_argnames=(
     "chunk_steps", "num_steps", "lif_cfg", "dot_impl", "active_pruning",
-    "patience", "readout", "backend", "sparse_skip", "interpret"))
+    "patience", "readout", "backend", "sparse_skip", "interpret",
+    "block_b"))
 def stream_chunk(lanes: LaneState, weights: tuple, *, chunk_steps: int,
                  num_steps: int, lif_cfg: lif_mod.LIFConfig,
                  dot_impl: str, active_pruning: bool, patience: int,
                  readout: str = "count", backend: str = "reference",
                  sparse_skip: bool | None = None,
-                 interpret: bool | None = None):
+                 interpret: bool | None = None,
+                 block_b: int | None = None):
     """Advance every active lane by up to ``chunk_steps`` window steps.
 
     ``backend="fused"`` runs the whole chunk — every layer, every step,
@@ -290,13 +296,15 @@ def stream_chunk(lanes: LaneState, weights: tuple, *, chunk_steps: int,
     measures.  ``sparse_skip`` forwards the event-driven tile skipping
     flag (value-neutral).  Returns ``(lanes', ChunkTelemetry)`` — the
     structured activity record the adaptive controller consumes, itself
-    bit-identical across the chunk backends.
+    bit-identical across the chunk backends.  ``block_b`` forwards the
+    tuned batch-block override to the fused launch (value-neutral — it
+    only reshapes the launch grid and its telemetry tile mirror).
     """
     return _stream_chunk_impl(
         lanes, weights, chunk_steps=chunk_steps, num_steps=num_steps,
         lif_cfg=lif_cfg, dot_impl=dot_impl, active_pruning=active_pruning,
         patience=patience, readout=readout, backend=backend,
-        sparse_skip=sparse_skip, interpret=interpret)
+        sparse_skip=sparse_skip, interpret=interpret, block_b=block_b)
 
 
 def lane_partition_specs(n_layers: int,
@@ -350,7 +358,8 @@ def make_sharded_stream_chunk(mesh: Mesh, axis_name: str, n_layers: int, *,
                               sparse_skip: bool | None = None,
                               interpret: bool | None = None,
                               model_axis: str | None = None,
-                              model_ways: tuple[int, ...] | None = None):
+                              model_ways: tuple[int, ...] | None = None,
+                              block_b: int | None = None):
     """Build the (data × model) chunk executor for ``mesh``.
 
     Returns a jitted ``(lanes, weights) -> (lanes, telemetry)`` whose body
@@ -386,7 +395,7 @@ def make_sharded_stream_chunk(mesh: Mesh, axis_name: str, n_layers: int, *,
         lif_cfg=lif_cfg, dot_impl=dot_impl, active_pruning=active_pruning,
         patience=patience, readout=readout, backend=backend,
         sparse_skip=sparse_skip, interpret=interpret,
-        model_axis=model_axis, model_ways=model_ways)
+        model_axis=model_axis, model_ways=model_ways, block_b=block_b)
     mapped = shard_map_compat(body, mesh, in_specs=(specs, w_specs),
                               out_specs=(specs, tel_specs))
     return jax.jit(mapped)
@@ -422,8 +431,10 @@ class SNNStreamEngine:
     bit-identical — the controller only ever moves value-neutral knobs.
     """
 
-    def __init__(self, params_q: dict, cfg: SNNConfig, *, batch_size: int = 8,
-                 chunk_steps: int = 4, patience: int = 2, seed: int = 0,
+    def __init__(self, params_q: dict, cfg: SNNConfig, *,
+                 batch_size: int | None = None,
+                 chunk_steps: int | None = None, patience: int = 2,
+                 seed: int = 0,
                  backend: str | None = None,
                  local_batch: int | None = None,
                  model_shards: int = 1,
@@ -431,15 +442,46 @@ class SNNStreamEngine:
                  engine_id: int = 0,
                  injector: FaultInjector | None = None,
                  fault_cfg: FaultToleranceConfig | None = None,
-                 initial_weight_version: int = 0):
+                 initial_weight_version: int = 0,
+                 block_b: int | None = None,
+                 dispatch_cache=None):
         if cfg.readout not in ("count", "first_spike", "membrane"):
             raise ValueError(
                 f"unknown readout {cfg.readout!r}: the streaming engine "
                 f"implements 'count', 'first_spike' and 'membrane'")
         from ..core.snn import fused_unsupported_reason
+        from ..tune.cache import CacheDecision, decide_dispatch
         weights = tuple(layer["w_q"] for layer in params_q["layers"])
         self.layer_sizes = tuple([weights[0].shape[0]]
                                  + [w.shape[1] for w in weights])
+        # ---- dispatch cache (repro.tune): tuned startup shapes ----------
+        # Resolved exactly once per engine (explicit argument → the
+        # REPRO_DISPATCH_CACHE env → none; the sharded subclass passes a
+        # pre-made decision keyed by its 2-D mesh shape) and always
+        # recorded as ``self.cache_decision`` — a miss or a rejected file
+        # serves today's static defaults, never an error.  Explicit
+        # constructor arguments beat tuned values knob by knob.
+        if isinstance(dispatch_cache, CacheDecision):
+            self.cache_decision = dispatch_cache
+        else:
+            self.cache_decision = decide_dispatch(
+                dispatch_cache, cfg=cfg, backend=backend, mesh_shape=(1,))
+        tuned = (self.cache_decision.tuned if self.cache_decision.hit
+                 else None)
+        if tuned is not None:
+            if batch_size is None:
+                # single-device serving: the whole tile IS one device's
+                # lanes, so the tuned per-device lane count applies as-is
+                batch_size = tuned.lanes_per_device
+            if chunk_steps is None:
+                chunk_steps = tuned.chunk_steps
+            if block_b is None:
+                block_b = tuned.block_b
+        if batch_size is None:
+            batch_size = 8
+        if chunk_steps is None:
+            chunk_steps = 4
+        self._block_b = block_b
         # Per-device lane tile (the sharded subclass passes its slice;
         # single-device serving holds the whole tile) — scopes the fused
         # VMEM feasibility checks below to one device's launch.  The
@@ -454,13 +496,35 @@ class SNNStreamEngine:
             return fused_unsupported_reason(
                 cfg, len(weights), self.layer_sizes,
                 trace_steps=chunk_steps, local_batch=self.local_batch,
-                streamed=streamed, model_shards=self.model_shards)
+                streamed=streamed, model_shards=self.model_shards,
+                block_b=self._block_b)
 
         if backend in (None, "auto"):
+            # A cache hit whose shapes this engine is actually running
+            # (no knob overridden) carries the backend that resolved
+            # during the tuned run — adopt it after ONE feasibility
+            # check against the cached shapes instead of walking the
+            # whole chain; a mismatched entry falls through to the
+            # normal resolution below (a bad cache degrades to static
+            # behavior, it never crashes serving).
+            cached_backend = None
+            if (tuned is not None
+                    and chunk_steps == tuned.chunk_steps
+                    and self._block_b == tuned.block_b
+                    and self.local_batch == tuned.lanes_per_device):
+                t = tuned.backend
+                if t == "reference":
+                    cached_backend = t
+                elif (t in ("fused", "fused_streamed")
+                        and jax.default_backend() == "tpu"
+                        and reason_for(t == "fused_streamed") is None):
+                    cached_backend = t
             # the resumable-backend mirror of core.snn.resolve_backend's
             # fused → fused_streamed chain (staged cannot resume, so the
             # last resort here is the jnp reference scan)
-            if jax.default_backend() != "tpu":
+            if cached_backend is not None:
+                backend = cached_backend
+            elif jax.default_backend() != "tpu":
                 backend = "reference"
             elif reason_for(False) is None:
                 backend = "fused"
@@ -507,9 +571,21 @@ class SNNStreamEngine:
         self.batch_size = batch_size
         self.patience = patience
         self.seed = seed
-        self.controller = make_controller(
-            adaptive, spike_density_threshold=cfg.spike_density_threshold,
-            chunk_steps=chunk_steps, num_steps=cfg.num_steps)
+        if tuned is not None:
+            # tuned statics (threshold always; chunk length unless the
+            # caller overrode it — `chunk_steps` is the effective value
+            # here either way).  Frozen mode serves these with zero
+            # readbacks; adaptive walks its law from this start.
+            self.controller = TelemetryController.from_cache(
+                SimpleNamespace(
+                    chunk_steps=chunk_steps,
+                    spike_density_threshold=tuned.spike_density_threshold),
+                cfg_adaptive=adaptive, num_steps=cfg.num_steps)
+        else:
+            self.controller = make_controller(
+                adaptive,
+                spike_density_threshold=cfg.spike_density_threshold,
+                chunk_steps=chunk_steps, num_steps=cfg.num_steps)
         self.n_in, self.n_out = self.layer_sizes[0], self.layer_sizes[-1]
         self.lanes = _init_lanes(batch_size, self.layer_sizes,
                                  cfg.num_steps, cfg.lif.v_rest)
@@ -866,7 +942,7 @@ class SNNStreamEngine:
             dot_impl=self.cfg.dot_impl,
             active_pruning=self.cfg.active_pruning, patience=self.patience,
             readout=self.cfg.readout, backend=self.backend_effective,
-            sparse_skip=self.cfg.sparse_skip)
+            sparse_skip=self.cfg.sparse_skip, block_b=self._block_b)
 
     def _dispatch_versions(self, lanes: LaneState):
         """Version-aware chunk dispatch.
@@ -1115,14 +1191,18 @@ class ShardedSNNStreamEngine(SNNStreamEngine):
                  model_axis_name: str = "model",
                  lanes_per_device: int | None = None,
                  batch_size: int | None = None,
-                 chunk_steps: int = 4, patience: int = 2, seed: int = 0,
+                 chunk_steps: int | None = None, patience: int = 2,
+                 seed: int = 0,
                  backend: str | None = None, overlap: bool = True,
                  adaptive: AdaptiveDispatchConfig | None = None,
                  engine_id: int = 0,
                  injector: FaultInjector | None = None,
                  fault_cfg: FaultToleranceConfig | None = None,
-                 initial_weight_version: int = 0):
+                 initial_weight_version: int = 0,
+                 block_b: int | None = None,
+                 dispatch_cache=None):
         from ..kernels.fused_snn import layer_shard_ways
+        from ..tune.cache import CacheDecision, decide_dispatch
         if mesh is None:
             mesh = make_device_mesh((len(jax.devices()),), (axis_name,))
         if axis_name not in mesh.axis_names:
@@ -1147,6 +1227,22 @@ class ShardedSNNStreamEngine(SNNStreamEngine):
         w_shapes = [layer["w_q"].shape for layer in params_q["layers"]]
         sizes = tuple([w_shapes[0][0]] + [s[1] for s in w_shapes])
         self.model_ways = layer_shard_ways(sizes, self.model_devices)
+        # The cache consultation happens HERE (not in the base __init__)
+        # because the tuned per-device lane count must be known before
+        # the global tile shape is fixed, and the lookup key carries this
+        # engine's 2-D mesh shape — a cache tuned for one topology must
+        # miss on another, not silently re-tile it.  The resolved
+        # decision is handed to the base constructor so it is only made
+        # once.
+        if isinstance(dispatch_cache, CacheDecision):
+            decision = dispatch_cache
+        else:
+            decision = decide_dispatch(
+                dispatch_cache, cfg=cfg, backend=backend,
+                mesh_shape=(self.n_devices, self.model_devices))
+        if (decision.hit and batch_size is None
+                and lanes_per_device is None):
+            lanes_per_device = decision.tuned.lanes_per_device
         if batch_size is None:
             batch_size = (8 if lanes_per_device is None
                           else lanes_per_device) * self.n_devices
@@ -1174,7 +1270,8 @@ class ShardedSNNStreamEngine(SNNStreamEngine):
                          model_shards=self.model_devices,
                          adaptive=adaptive, engine_id=engine_id,
                          injector=injector, fault_cfg=fault_cfg,
-                         initial_weight_version=initial_weight_version)
+                         initial_weight_version=initial_weight_version,
+                         block_b=block_b, dispatch_cache=decision)
         specs = lane_partition_specs(len(self.weights), axis_name,
                                      self.model_axis)
         self._shardings = jax.tree.map(
@@ -1183,7 +1280,7 @@ class ShardedSNNStreamEngine(SNNStreamEngine):
         # one sharded executor per (chunk length, ladder rung) the
         # runtime dispatches (exactly one entry when frozen and healthy)
         self._chunk_fns: dict[tuple[int, str], object] = {}
-        self._chunk_fn_for(chunk_steps)
+        self._chunk_fn_for(self.controller.chunk_steps)
         self.lanes = jax.device_put(self.lanes, self._shardings)
 
     # ---- device placement ----------------------------------------------
@@ -1209,7 +1306,8 @@ class ShardedSNNStreamEngine(SNNStreamEngine):
                 backend=self.backend_effective,
                 sparse_skip=self.cfg.sparse_skip,
                 model_axis=self.model_axis,
-                model_ways=self.model_ways if self.model_axis else None)
+                model_ways=self.model_ways if self.model_axis else None,
+                block_b=self._block_b)
         return self._chunk_fns[key]
 
     def _upload(self, st: LaneState) -> LaneState:

@@ -177,6 +177,29 @@ class TelemetryController:
             return self.static_chunk_steps
         return max(1, min(self.cfg.min_chunk_steps, self.num_steps))
 
+    @classmethod
+    def from_cache(cls, tuned, *,
+                   cfg_adaptive: AdaptiveDispatchConfig | None = None,
+                   num_steps: int) -> "TelemetryController":
+        """Start at cache-tuned values instead of the static defaults.
+
+        ``tuned`` is a :class:`repro.tune.cache.TunedShapes` (anything
+        with ``chunk_steps`` / ``spike_density_threshold`` attributes):
+        the measured winner becomes the controller's *static* choice, so
+        frozen mode — still the default, still what CI pins — serves the
+        tuned shapes with zero readbacks, and adaptive mode walks its
+        shrink/grow law from the tuned starting point rather than from
+        the heuristics.  Duck-typed on purpose: ``serve`` must not
+        import ``repro.tune`` at module scope (tune's search side
+        imports serve).
+        """
+        return cls(
+            cfg=(adaptive_config_from_env() if cfg_adaptive is None
+                 else cfg_adaptive),
+            static_threshold=float(tuned.spike_density_threshold),
+            static_chunk_steps=int(tuned.chunk_steps),
+            num_steps=num_steps)
+
     def observe(self, summary: ChunkSummary) -> None:
         """Fold one chunk's summary into the estimator and retune.
 
@@ -195,7 +218,18 @@ class TelemetryController:
         if summary.lanes_active > 0:
             frac = summary.lanes_retired / summary.lanes_active
             if frac >= c.shrink_retire_frac:
-                self._chunk = max(c.min_chunk_steps, self._chunk - 1)
+                # proportional shrink: one step at the trigger fraction,
+                # one more per additional trigger-width of overshoot — a
+                # chunk that retired every lane converges in one
+                # observation instead of limping down a step at a time.
+                # The clamp bounds are unchanged, and so is the behavior
+                # exactly AT the trigger (step 1), which is what keeps
+                # the PR 8 speculation-discard guard semantics intact:
+                # any retune still lands between chunk dispatches and
+                # trips `_spec_steps != controller.chunk_steps`.
+                step = 1 + int((frac - c.shrink_retire_frac)
+                               / c.shrink_retire_frac)
+                self._chunk = max(c.min_chunk_steps, self._chunk - step)
                 self._quiet = 0
             elif summary.lanes_retired == 0:
                 self._quiet += 1

@@ -1,0 +1,108 @@
+"""Deterministic wall-clock timing harness (the measured half of tune/).
+
+Every measurement in this repo — the autotuner's candidate runs and the
+``benchmarks/`` suites (``benchmarks/common.py`` re-exports this module
+as the shared harness) — goes through :func:`measure`: ``warmup``
+un-timed calls first (jit compilation and cache warm never pollute a
+sample), then ``repeats`` timed calls on the monotonic clock, reported
+as the **median** with the per-measurement stddev alongside.  The median
+is the robust central estimate for a small k under scheduler noise; the
+stddev is what lets a consumer judge whether two medians are actually
+distinguishable.
+
+Every :class:`TimingRecord` is tagged with ``device_kind`` (the jax
+backend the call ran on) and ``interpret`` (whether the timed path ran
+Pallas kernels in interpret mode).  An interpret-mode CPU number is a
+correctness artifact, not a device timing — the tag is what lets
+``benchmarks/check_tracked.py`` pin contract booleans while exempting
+wall-clock fields from cross-machine drift, and what stops a CPU CI run
+from being mistaken for a TPU measurement.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+
+import numpy as np
+
+__all__ = ["TimingRecord", "measure", "device_kind_now"]
+
+
+def device_kind_now() -> str:
+    """The jax backend this process dispatches to ("cpu"/"tpu"/"gpu")."""
+    import jax
+    return str(jax.default_backend())
+
+
+@dataclass(frozen=True)
+class TimingRecord:
+    """One timed measurement: median-of-k wall-clock plus its provenance."""
+
+    median_s: float          # median of the timed samples
+    stddev_s: float          # population stddev of the timed samples
+    samples_s: tuple         # every timed sample, in call order
+    repeats: int
+    warmup: int
+    device_kind: str         # jax backend the calls dispatched to
+    interpret: bool          # True = Pallas interpret mode was in the path
+
+    @property
+    def us(self) -> float:
+        """Median in microseconds (the bench suites' historical unit)."""
+        return self.median_s * 1e6
+
+    def to_json(self) -> dict:
+        return {
+            "median_s": self.median_s,
+            "stddev_s": self.stddev_s,
+            "samples_s": list(self.samples_s),
+            "repeats": self.repeats,
+            "warmup": self.warmup,
+            "device_kind": self.device_kind,
+            "interpret": self.interpret,
+        }
+
+
+def _block(result) -> None:
+    """Wait for device work hiding behind async jax dispatch."""
+    import jax
+    try:
+        jax.block_until_ready(result)
+    except (TypeError, ValueError):
+        # host-side results (dicts of dataclasses, plain python) are
+        # already synchronous — nothing to wait for
+        pass
+
+
+def measure(fn, *args, repeats: int = 3, warmup: int = 1,
+            interpret: bool = False,
+            device_kind: str | None = None) -> TimingRecord:
+    """Median-of-``repeats`` wall-clock of ``fn(*args)`` after ``warmup``.
+
+    ``interpret`` must be set by the caller when the timed path runs
+    Pallas kernels off-TPU (interpret mode): the record carries the tag
+    so downstream consumers never mistake a correctness-path timing for
+    a device timing.  ``device_kind`` defaults to the live jax backend.
+    """
+    if repeats < 1:
+        raise ValueError(f"repeats must be >= 1, got {repeats}")
+    if warmup < 0:
+        raise ValueError(f"warmup must be >= 0, got {warmup}")
+    for _ in range(warmup):
+        _block(fn(*args))
+    samples = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        _block(fn(*args))
+        samples.append(time.perf_counter() - t0)
+    return TimingRecord(
+        median_s=float(np.median(samples)),
+        stddev_s=float(np.std(samples)),
+        samples_s=tuple(float(s) for s in samples),
+        repeats=repeats,
+        warmup=warmup,
+        device_kind=(device_kind_now() if device_kind is None
+                     else device_kind),
+        interpret=bool(interpret),
+    )

@@ -291,21 +291,23 @@ def test_speculation_discarded_on_chunk_length_retune():
         eng.submit(im)
     eng.step()                       # commit chunk 1, speculate chunk 2
     assert eng._spec is not None and eng._spec_steps == 4
-    # external retune mid-speculation: a heavy-retirement observation
-    # shrinks the controller's chunk choice from 4 to 3
+    # external retune mid-speculation: an every-lane-retired observation
+    # (frac = 1.0, 3 trigger-widths over the 0.25 trigger) takes the
+    # proportional shrink law from 4 straight to the min_chunk_steps
+    # clamp at 2 — one observation, not two limping single steps
     eng.controller.observe(ChunkSummary(
         density_in=0.2, layer_densities=(0.2,), executed_adds=0,
         tiles_skipped=0, lanes_retired=n_lanes, lanes_active=n_lanes,
         active_lane_steps=n_lanes * 4))
-    assert eng.controller.chunk_steps == 3
+    assert eng.controller.chunk_steps == 2
     before = dict(eng.stats)
     steps_before = int(np.asarray(eng.lanes.steps).max())
     eng.step()
     # the stale 4-step speculation was discarded, not committed
     assert eng.stats["spec_wasted"] == before["spec_wasted"] + 1
     assert eng.stats["spec_used"] == before["spec_used"]
-    # and the committed chunk ran at the retuned length (3 steps)
-    assert int(np.asarray(eng.lanes.steps).max()) == steps_before + 3
+    # and the committed chunk ran at the retuned length (2 steps)
+    assert int(np.asarray(eng.lanes.steps).max()) == steps_before + 2
     # the engine still finishes every request correctly
     res = eng.run()
     assert set(res) == set(range(n_lanes))
